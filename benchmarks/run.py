@@ -1,0 +1,252 @@
+"""Benchmark harness — one function per paper figure/claim.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per benchmark).
+
+| benchmark                | paper artifact                               |
+|--------------------------|----------------------------------------------|
+| llload_query_*           | Fig 2/3 per-user view (scaling vs rload)     |
+| llload_all_2048          | Fig 4 privileged --all -g view               |
+| llload_topn_4096         | Fig 5/10 top-N overloaded nodes              |
+| snapshot_tsv_2048        | 15-min archive write format (§V-A)           |
+| weekly_analysis_1wk      | Fig 6 weekly node-hours aggregation          |
+| monitor_overhead         | "light-weight" claim: train loop +hooks      |
+| overloading_nppn_*       | §V-B GPU overloading throughput (measured)   |
+| overloading_model_*      | §V-B analytic packing model                  |
+| train_step / serve_step  | substrate step costs (CPU, reduced config)   |
+"""
+from __future__ import annotations
+
+import random
+import time
+
+import numpy as np
+
+
+def _timeit(fn, *, repeat=5, warmup=1):
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return min(times) * 1e6  # us
+
+
+def _row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# ---------------------------------------------------------------- LLload ---
+
+def _sim(n_nodes):
+    from repro.cluster.workloads import make_llsc_sim, paper_scenario
+
+    n_gpu = max(4, n_nodes // 8)
+    sim = make_llsc_sim(n_cpu=n_nodes - n_gpu, n_gpu=n_gpu)
+    paper_scenario(sim, random.Random(0))
+    sim.run_until(1800.0)
+    return sim
+
+
+def bench_llload_query():
+    from repro.core.formatting import format_user_view
+    from repro.core.llload import LLload
+
+    for n in (64, 512, 2048):
+        sim = _sim(n)
+        snap = sim.snapshot()
+        ll = LLload(snap)
+
+        def q():
+            blk = ll.user_view("cd67890")
+            return format_user_view(snap.cluster, blk, gpu=True)
+
+        us = _timeit(q)
+        _row(f"llload_query_{n}n", us, f"nodes_per_s={n / (us / 1e6):.0f}")
+
+
+def bench_llload_all():
+    from repro.core.formatting import format_all_view
+    from repro.core.llload import LLload
+
+    sim = _sim(2048)
+    snap = sim.snapshot()
+    ll = LLload(snap, privileged_users={"admin"})
+    us = _timeit(lambda: format_all_view(ll.all_view("admin"), gpu=True))
+    _row("llload_all_2048n", us)
+
+
+def bench_topn():
+    from repro.core.llload import LLload
+
+    sim = _sim(4096)
+    snap = sim.snapshot()
+    ll = LLload(snap)
+    us = _timeit(lambda: ll.top_loaded(10))
+    _row("llload_topn_4096n", us, f"nodes_per_s={4096 / (us / 1e6):.0f}")
+
+
+def bench_snapshot_tsv():
+    sim = _sim(2048)
+    snap = sim.snapshot()
+    us = _timeit(snap.to_tsv)
+    _row("snapshot_tsv_2048n", us)
+
+
+def bench_weekly_analysis():
+    from repro.core.analysis import weekly_analysis
+
+    rng = np.random.default_rng(0)
+    rows = []
+    users = [f"u{i:03d}" for i in range(200)]
+    for snap_i in range(7 * 24 * 4):          # one week of 15-min snapshots
+        ts = snap_i * 900.0
+        for node in range(100):               # 100 owned nodes per snapshot
+            rows.append({
+                "timestamp": ts, "cluster": "tx", "hostname": f"n{node}",
+                "username": users[rng.integers(len(users))],
+                "jobtype": "batch", "cores_total": 48,
+                "cores_used": 48, "load": float(rng.uniform(0, 96)),
+                "mem_total_gb": 192.0, "mem_used_gb": 50.0,
+                "gpus_total": 2, "gpus_used": 2,
+                "gpu_load": float(rng.uniform(0, 1)),
+                "gpu_mem_total_gb": 64.0, "gpu_mem_used_gb": 2.0})
+    us = _timeit(lambda: weekly_analysis(rows), repeat=3)
+    _row("weekly_analysis_1wk", us,
+         f"rows={len(rows)};rows_per_s={len(rows) / (us / 1e6):.0f}")
+
+
+# ----------------------------------------------------- monitoring overhead --
+
+def bench_monitor_overhead():
+    """Hook cost measured directly (a loop A/B on 12 steps is noise-bound)."""
+    import time as _t
+
+    from repro.configs import reduced_config
+    from repro.core.collector import publish_step_utilization
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    # cost of one publish (what the trainer adds per monitored step)
+    n = 2000
+    t0 = _t.perf_counter()
+    for _ in range(n):
+        publish_step_utilization("bench", model_flops_per_step=1e9,
+                                 step_time_s=0.01, peak_flops=1e12)
+    hook_us = (_t.perf_counter() - t0) / n * 1e6
+
+    cfg = reduced_config("llsc-100m")
+    t = Trainer(cfg, TrainerConfig(steps=10, batch_size=4, seq_len=64,
+                                   log_every=0, monitor_every=1))
+    t.run(resume=False)
+    step_us = np.median([h["time_s"] for h in t.history[2:]]) * 1e6
+    _row("monitor_overhead", hook_us,
+         f"hook_us={hook_us:.1f};step_us={step_us:.0f};"
+         f"overhead_pct={hook_us / step_us * 100:.3f}")
+
+
+# ------------------------------------------------------------ overloading --
+
+def bench_overloading():
+    """§V-B measured: decode throughput vs concurrent streams (NPPN)."""
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.models import init_params
+    from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+    cfg = reduced_config("llsc-100m")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    base = None
+    for slots in (1, 2, 4, 8):
+        eng = ServeEngine(cfg, params, EngineConfig(
+            slots=slots, max_seq_len=64, monitor=False))
+        for i in range(16):
+            eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 8)
+                               .astype(np.int32), max_new_tokens=8))
+        stats = eng.run()
+        tps = stats["tokens_per_s"]
+        if base is None:
+            base = tps
+        # decode_steps is the structural win: the same tokens in ~1/slots
+        # the steps.  tokens/s gains saturate when the host device is
+        # already compute-bound (unlike the paper's 0.35-duty GPUs, where
+        # the sim + analytic model below show the full effect).
+        _row(f"overloading_nppn_{slots}", 1e6 / max(tps, 1e-9),
+             f"tokens_per_s={tps:.1f};speedup={tps / base:.2f};"
+             f"decode_steps={stats['steps']}")
+
+
+def bench_overloading_model():
+    """§V-B analytic packing model for the paper's Fig-7 job (duty 0.35)."""
+    from repro.core.overload import packed_throughput_model
+
+    base = packed_throughput_model(0.35, 1)
+    for nppn in (1, 2, 4, 8):
+        t = packed_throughput_model(0.35, nppn)
+        _row(f"overloading_model_nppn_{nppn}", 0.0,
+             f"throughput_x={t / base:.2f}")
+
+
+# -------------------------------------------------------------- substrate --
+
+def bench_steps():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import reduced_config
+    from repro.models import decode_step, init_cache, init_params
+    from repro.train.train_step import (default_opt_cfg, init_train_state,
+                                        make_train_step)
+
+    cfg = reduced_config("llsc-100m")
+    opt_cfg = default_opt_cfg(cfg)
+    state = init_train_state(cfg, jax.random.PRNGKey(0), opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    batch = {"tokens": jnp.zeros((4, 64), jnp.int32),
+             "labels": jnp.zeros((4, 64), jnp.int32)}
+
+    def train_once():
+        nonlocal state
+        state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+
+    us = _timeit(train_once, repeat=5, warmup=2)
+    toks = 4 * 64
+    _row("train_step_reduced", us, f"tokens_per_s={toks / (us / 1e6):.0f}")
+
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    caches = init_cache(cfg, 4, 64)
+    token = jnp.zeros((4, 1), jnp.int32)
+    dstep = jax.jit(lambda p, t, c, l: decode_step(p, cfg, t, c, l))
+
+    def decode_once():
+        out, _ = dstep(params, token, caches, jnp.int32(10))
+        jax.block_until_ready(out)
+
+    us = _timeit(decode_once, repeat=5, warmup=2)
+    _row("serve_step_reduced", us, f"tokens_per_s={4 / (us / 1e6):.0f}")
+
+
+BENCHES = [
+    bench_llload_query,
+    bench_llload_all,
+    bench_topn,
+    bench_snapshot_tsv,
+    bench_weekly_analysis,
+    bench_monitor_overhead,
+    bench_overloading,
+    bench_overloading_model,
+    bench_steps,
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for bench in BENCHES:
+        bench()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Full paper pipeline (Fig 1): simulate a week, archive 15-min snapshots,
+run the weekly analysis, and draft the notification emails.
+
+    PYTHONPATH=src python examples/monitor_cluster.py [--days 2]
+"""
+import argparse
+import random
+import tempfile
+
+from repro.cluster.workloads import make_llsc_sim, paper_scenario
+from repro.core.advisor import characterize_user
+from repro.core.analysis import weekly_analysis
+from repro.core.archive import PeriodicArchiver, SnapshotArchive
+from repro.core.collector import SimCollector
+from repro.core.report import format_weekly_report, notification_email
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--days", type=int, default=2)
+    ap.add_argument("--archive-dir", default=None)
+    args = ap.parse_args()
+
+    sim = make_llsc_sim()
+    paper_scenario(sim, random.Random(0))
+    root = args.archive_dir or tempfile.mkdtemp(prefix="llload-archive-")
+    archive = SnapshotArchive(root, cluster="txgreen")
+    archiver = PeriodicArchiver(archive, SimCollector(sim))
+
+    print(f"simulating {args.days} day(s), archiving to {root} ...")
+    captured = 0
+    for _ in range(args.days * 24 * 4):
+        sim.step(900.0)                       # 15 minutes
+        captured += archiver.maybe_capture(sim.t)
+    print(f"captured {captured} snapshots "
+          f"({len(archive.files())} daily TSV files)")
+
+    rows = archive.rows()
+    rep = weekly_analysis(rows, emails=sim.user_emails)
+    print()
+    print(format_weekly_report(rep))
+
+    print()
+    print("=" * 70)
+    print("Notification emails (paper §V-B, drafted, not sent)")
+    print("=" * 70)
+    snap = sim.snapshot()
+    for cat in ("low_gpu", "high_cpu"):
+        rows_cat = getattr(rep, cat)
+        if not rows_cat:
+            continue
+        top = rows_cat[0]
+        advice = characterize_user(snap, top.username)
+        advice_text = "\n".join(f"  - {a.message}" for a in advice) or None
+        mail = notification_email(top, cat, advice_text)
+        print(f"\n--- To: {mail.to}\n--- Subject: {mail.subject}")
+        print(mail.body[:600])
+
+
+if __name__ == "__main__":
+    main()

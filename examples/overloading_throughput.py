@@ -1,0 +1,86 @@
+"""The paper's §V-B claim, reproduced end to end: device overloading (the
+NPPN mechanism) improves aggregate throughput for low-utilization jobs.
+
+    PYTHONPATH=src python examples/overloading_throughput.py
+
+Three views:
+  1. scheduler-level: tasks_per_gpu sweep on the simulated cluster shows
+     node-count shrinking while aggregate GPU duty rises (Figs 8->9),
+  2. measured: a real JAX decode workload at 1/2/4/8 concurrent streams,
+  3. closed loop: the OverloadController stepping NPPN from live duty.
+"""
+import jax
+import numpy as np
+
+from repro.cluster.workloads import make_llsc_sim, overloaded_gpu_job
+from repro.configs import reduced_config
+from repro.core.overload import (DeviceObservation, OverloadController,
+                                 packed_throughput_model)
+from repro.models import init_params
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+
+def scheduler_view():
+    print("=" * 70)
+    print("1) Scheduler view: same 8 low-duty tasks, rising NPPN")
+    print("=" * 70)
+    print(f"{'NPPN':>5} {'nodes used':>11} {'mean GPU duty':>14}")
+    for nppn in (1, 2, 4, 8):
+        sim = make_llsc_sim()
+        sim.submit(overloaded_gpu_job("u", tasks=8, tasks_per_gpu=nppn))
+        sim.run_until(600.0)
+        snap = sim.snapshot()
+        hosts = snap.nodes_by_user().get("u", [])
+        duties = [snap.nodes[h].gpu_load for h in hosts
+                  if snap.nodes[h].gpus_total]
+        print(f"{nppn:>5} {len(hosts):>11} {np.mean(duties):>14.2f}")
+    print("-> fewer nodes, higher duty: freed nodes serve other users "
+          "(paper Fig 9)")
+
+
+def measured_view():
+    print()
+    print("=" * 70)
+    print("2) Measured: decode throughput vs concurrent streams")
+    print("=" * 70)
+    cfg = reduced_config("llsc-100m")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    base = None
+    print(f"{'streams':>8} {'tok/s':>9} {'speedup':>8}   model-predicted")
+    for slots in (1, 2, 4, 8):
+        eng = ServeEngine(cfg, params, EngineConfig(
+            slots=slots, max_seq_len=64, monitor=False))
+        for i in range(16):
+            eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 8)
+                               .astype(np.int32), max_new_tokens=8))
+        stats = eng.run()
+        tps = stats["tokens_per_s"]
+        base = base or tps
+        pred = (packed_throughput_model(0.35, slots)
+                / packed_throughput_model(0.35, 1))
+        print(f"{slots:>8} {tps:>9.1f} {tps / base:>8.2f}   {pred:.2f}x")
+
+
+def closed_loop_view():
+    print()
+    print("=" * 70)
+    print("3) Closed loop: OverloadController steps NPPN 1 -> 2 -> 4")
+    print("=" * 70)
+    ctl = OverloadController()
+    nppn, per_task = 1, 0.22
+    for it in range(5):
+        duty = min(1.0, per_task * nppn)
+        for _ in range(4):
+            ctl.observe(DeviceObservation(duty_cycle=duty, mem_used_gb=2.0,
+                                          mem_total_gb=32.0))
+        d = ctl.decide(nppn)
+        print(f"  iter {it}: duty={duty:.2f} NPPN {nppn} -> {d.nppn} "
+              f"({d.reason})")
+        nppn = d.nppn
+
+
+if __name__ == "__main__":
+    scheduler_view()
+    measured_view()
+    closed_loop_view()

@@ -1,0 +1,66 @@
+"""Quickstart: LLload against a simulated LLSC cluster (no JAX needed).
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Reproduces the paper's CLI views (Figs 2-5), runs the advisor on the
+pathological users, and prints a weekly-style report.
+"""
+import random
+
+from repro.cluster.workloads import make_llsc_sim, paper_scenario
+from repro.core.advisor import characterize_all
+from repro.core.analysis import weekly_analysis
+from repro.core.formatting import (format_all_view, format_top,
+                                   format_user_view)
+from repro.core.llload import LLload
+from repro.core.metrics import rows_from_tsv
+from repro.core.report import format_weekly_report
+
+
+def main():
+    sim = make_llsc_sim()
+    paper_scenario(sim, random.Random(0))
+    sim.run_until(3600.0)
+    snap = sim.snapshot()
+    ll = LLload(snap, privileged_users={"admin"})
+
+    print("=" * 70)
+    print("$ LLload            (as user va67890)          [paper Fig 2]")
+    print("=" * 70)
+    print(format_user_view(snap.cluster, ll.user_view("va67890")))
+
+    print()
+    print("=" * 70)
+    print("$ LLload -g                                     [paper Fig 3]")
+    print("=" * 70)
+    print(format_user_view(snap.cluster, ll.user_view("va67890"), gpu=True))
+
+    print()
+    print("=" * 70)
+    print("$ LLload --all -g   (privileged)                [paper Fig 4]")
+    print("=" * 70)
+    print(format_all_view(ll.all_view("admin"), gpu=True)[:2000])
+
+    print()
+    print("=" * 70)
+    print("$ LLload -t 5                                   [paper Fig 5]")
+    print("=" * 70)
+    print(format_top(ll.top_loaded(5), 5))
+
+    print()
+    print("=" * 70)
+    print("Advisor (usage characterization, paper §V-B)")
+    print("=" * 70)
+    for a in characterize_all(snap):
+        print(f"[{a.kind:>14}] {a.username}: {a.message}")
+
+    print()
+    print("=" * 70)
+    print("Weekly-style report from this snapshot          [paper Fig 6]")
+    print("=" * 70)
+    rows = rows_from_tsv(snap.to_tsv())
+    print(format_weekly_report(weekly_analysis(rows, sim.user_emails)))
+
+
+if __name__ == "__main__":
+    main()

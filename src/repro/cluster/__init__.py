@@ -1,0 +1,8 @@
+from repro.cluster.job import Job, JobSpec, TaskProfile
+from repro.cluster.node import NodeSpec, make_nodes
+from repro.cluster.scheduler import Scheduler
+from repro.cluster.simulator import ClusterSim
+from repro.cluster.workloads import make_llsc_sim, paper_scenario
+
+__all__ = ["Job", "JobSpec", "TaskProfile", "NodeSpec", "make_nodes",
+           "Scheduler", "ClusterSim", "make_llsc_sim", "paper_scenario"]

@@ -1,0 +1,69 @@
+"""Job model: resource request + behavioural profile.
+
+A job is ``n_tasks`` identical tasks.  The *profile* drives what the
+monitoring sees: how many threads each task spins, its CPU duty cycle, its
+GPU duty cycle and GPU memory.  The pathological profiles reproduce the
+paper's case studies (Figs 7, 8, 10, 11).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskProfile:
+    threads: int = 1              # threads each task spawns
+    cpu_activity: float = 1.0     # duty cycle of each thread (0..1)
+    mem_gb: float = 4.0
+    gpu_frac: float = 0.0         # GPU duty cycle contributed by one task
+    gpu_mem_gb: float = 0.0
+    jitter: float = 0.02          # deterministic sinusoidal load jitter
+
+    def cpu_load(self, t: float, seed: int) -> float:
+        base = self.threads * self.cpu_activity
+        return max(0.0, base * (1.0 + self.jitter
+                                * math.sin(0.001 * t + seed * 2.39996)))
+
+    def gpu_load(self, t: float, seed: int) -> float:
+        return max(0.0, self.gpu_frac * (1.0 + self.jitter
+                                         * math.sin(0.0013 * t + seed * 1.7)))
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    username: str
+    name: str
+    n_tasks: int
+    cores_per_task: int
+    gpus_per_task: int = 0
+    duration_s: float = 3600.0
+    profile: TaskProfile = TaskProfile()
+    partition: str = "normal"
+    job_type: str = "batch"       # batch | jupyter | debug
+    exclusive: bool = False
+    # NPPN-style GPU overloading: tasks per GPU (1 = no oversubscription).
+    tasks_per_gpu: int = 1
+    gpu_request: str = ""
+
+
+@dataclasses.dataclass
+class RunningTask:
+    job_id: int
+    username: str
+    hostname: str
+    profile: TaskProfile
+    cores: int
+    gpu_slots: tuple = ()         # indices of GPUs this task occupies
+
+
+@dataclasses.dataclass
+class Job:
+    job_id: int
+    spec: JobSpec
+    submit_time: float
+    start_time: Optional[float] = None
+    end_time: Optional[float] = None
+    state: str = "PD"             # PD | R | CG | F
+    hostnames: list = dataclasses.field(default_factory=list)

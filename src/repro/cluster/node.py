@@ -1,0 +1,27 @@
+"""Compute-node model for the cluster simulator."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeSpec:
+    hostname: str
+    cores: int = 48
+    mem_gb: float = 192.0
+    gpus: int = 0
+    gpu_mem_gb: float = 0.0     # per GPU
+
+
+def make_nodes(prefix: str, count: int, *, cores=48, mem_gb=192.0, gpus=0,
+               gpu_mem_gb=0.0, racks=20) -> List[NodeSpec]:
+    """LLSC-style hostnames: <prefix>-<rack>-<chassis>-<slot>."""
+    nodes = []
+    for i in range(count):
+        rack = i // (racks) + 1
+        chassis = (i % racks) // 4 + 1
+        slot = i % 4 + 1
+        nodes.append(NodeSpec(f"{prefix}-{rack}-{chassis}-{slot}", cores,
+                              mem_gb, gpus, gpu_mem_gb))
+    return nodes

@@ -1,0 +1,180 @@
+"""Slurm-like scheduler with the LLSC whole-node (per-user) policy (paper §III).
+
+Policies:
+  * ``whole-node`` partitions — once any task of user U runs on a node, only
+    U's tasks may be co-scheduled there until the node drains [paper refs
+    16, 17].  This is what makes per-user attribution cheap for LLload.
+  * ``shared`` partitions — multi-user nodes for debug / Jupyter jobs (the
+    special partitions the paper deployed to fix whole-node fragmentation).
+  * ``exclusive`` jobs — node must be empty and stays single-job.
+
+GPU overloading (paper §V-B): ``JobSpec.tasks_per_gpu > 1`` lets the
+scheduler round-robin multiple tasks of the *same user* onto one GPU — the
+NPPN mechanism LLsub/LLMapReduce expose.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.cluster.job import Job, JobSpec, RunningTask
+from repro.cluster.node import NodeSpec
+
+
+@dataclasses.dataclass
+class NodeState:
+    spec: NodeSpec
+    tasks: List[RunningTask] = dataclasses.field(default_factory=list)
+    exclusive_job: Optional[int] = None
+
+    @property
+    def user(self) -> Optional[str]:
+        return self.tasks[0].username if self.tasks else None
+
+    @property
+    def users(self) -> set:
+        return {t.username for t in self.tasks}
+
+    @property
+    def cores_used(self) -> int:
+        return sum(t.cores for t in self.tasks)
+
+    def gpu_occupancy(self) -> Dict[int, int]:
+        occ = {i: 0 for i in range(self.spec.gpus)}
+        for t in self.tasks:
+            for g in t.gpu_slots:
+                occ[g] += 1
+        return occ
+
+    def mem_used(self) -> float:
+        return sum(t.profile.mem_gb for t in self.tasks)
+
+
+class Scheduler:
+    def __init__(self, nodes: List[NodeSpec],
+                 partitions: Optional[Dict[str, dict]] = None):
+        """partitions: name -> {"hosts": [..], "policy": "whole-node"|"shared"}.
+        Default: every node in a single whole-node "normal" partition."""
+        self.nodes: Dict[str, NodeState] = {
+            n.hostname: NodeState(n) for n in nodes}
+        if partitions is None:
+            partitions = {"normal": {"hosts": [n.hostname for n in nodes],
+                                     "policy": "whole-node"}}
+        self.partitions = partitions
+        self.pending: List[Job] = []
+        self.running: List[Job] = []
+        self.completed: List[Job] = []
+        self._next_id = 26140000
+
+    # ------------------------------------------------------------- submit
+    def submit(self, spec: JobSpec, now: float) -> Job:
+        job = Job(self._next_id, spec, submit_time=now)
+        self._next_id += 1
+        self.pending.append(job)
+        return job
+
+    # ----------------------------------------------------------- dispatch
+    def _node_fits(self, ns: NodeState, job: Job, tasks: int) -> int:
+        """How many tasks of `job` fit on node `ns` right now."""
+        spec, jspec = ns.spec, job.spec
+        part = self.partitions.get(jspec.partition)
+        if part is None or ns.spec.hostname not in part["hosts"]:
+            return 0
+        if ns.exclusive_job is not None:
+            return 0
+        if jspec.exclusive and ns.tasks:
+            return 0
+        policy = part.get("policy", "whole-node")
+        if policy == "whole-node" and ns.tasks and ns.user != jspec.username:
+            return 0  # per-user whole-node isolation
+        free_cores = spec.cores - ns.cores_used
+        fit = free_cores // max(jspec.cores_per_task, 1)
+        free_mem = spec.mem_gb - ns.mem_used()
+        if jspec.profile.mem_gb > 0:
+            fit = min(fit, int(free_mem // jspec.profile.mem_gb))
+        if jspec.gpus_per_task > 0:
+            occ = ns.gpu_occupancy()
+            slots = sum(max(0, jspec.tasks_per_gpu - c) for c in occ.values())
+            fit = min(fit, slots // jspec.gpus_per_task)
+        return max(0, min(fit, tasks))
+
+    def _place(self, ns: NodeState, job: Job, count: int):
+        jspec = job.spec
+        for _ in range(count):
+            gpu_slots = ()
+            if jspec.gpus_per_task > 0:
+                occ = ns.gpu_occupancy()
+                # round-robin: least-occupied GPUs first (paper's overloading)
+                order = sorted(occ, key=lambda g: occ[g])
+                chosen = [g for g in order
+                          if occ[g] < jspec.tasks_per_gpu][: jspec.gpus_per_task]
+                gpu_slots = tuple(chosen)
+            ns.tasks.append(RunningTask(
+                job.job_id, jspec.username, ns.spec.hostname, jspec.profile,
+                jspec.cores_per_task, gpu_slots))
+        if jspec.exclusive:
+            ns.exclusive_job = job.job_id
+        if ns.spec.hostname not in job.hostnames:
+            job.hostnames.append(ns.spec.hostname)
+
+    def _try_dispatch(self, job: Job, now: float) -> bool:
+        remaining = job.spec.n_tasks
+        plan = []
+        # Prefer nodes this user already holds (packs whole nodes densely).
+        def keyfn(ns):
+            return (0 if ns.user == job.spec.username and ns.tasks else
+                    (1 if not ns.tasks else 2), ns.spec.hostname)
+        for ns in sorted(self.nodes.values(), key=keyfn):
+            if remaining <= 0:
+                break
+            fit = self._node_fits(ns, job, remaining)
+            if fit > 0:
+                plan.append((ns, fit))
+                remaining -= fit
+        if remaining > 0:
+            return False
+        for ns, count in plan:
+            self._place(ns, job, count)
+        job.state = "R"
+        job.start_time = now
+        self.running.append(job)
+        return True
+
+    # ---------------------------------------------------------------- tick
+    def tick(self, now: float):
+        # completions
+        still = []
+        for job in self.running:
+            if job.start_time is not None and \
+                    now - job.start_time >= job.spec.duration_s:
+                job.state = "CG"
+                job.end_time = now
+                for ns in self.nodes.values():
+                    ns.tasks = [t for t in ns.tasks if t.job_id != job.job_id]
+                    if ns.exclusive_job == job.job_id:
+                        ns.exclusive_job = None
+                self.completed.append(job)
+            else:
+                still.append(job)
+        self.running = still
+        # dispatch FIFO
+        still_pending = []
+        for job in self.pending:
+            if not self._try_dispatch(job, now):
+                still_pending.append(job)
+        self.pending = still_pending
+
+    # ---------------------------------------------------------- invariants
+    def check_whole_node_invariant(self) -> List[str]:
+        """Returns violations: whole-node partition nodes with >1 user."""
+        bad = []
+        shared_hosts = set()
+        for part in self.partitions.values():
+            if part.get("policy") == "shared":
+                shared_hosts.update(part["hosts"])
+        for host, ns in self.nodes.items():
+            if host in shared_hosts:
+                continue
+            if len(ns.users) > 1:
+                bad.append(host)
+        return bad

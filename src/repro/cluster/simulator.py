@@ -1,0 +1,81 @@
+"""Discrete-time cluster simulator: drives the scheduler and materializes
+LLload :class:`ClusterSnapshot`s from running task profiles."""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+from repro.cluster.job import JobSpec
+from repro.cluster.node import NodeSpec
+from repro.cluster.scheduler import Scheduler
+from repro.core.metrics import ClusterSnapshot, JobRecord, NodeSnapshot
+
+
+class ClusterSim:
+    def __init__(self, nodes: List[NodeSpec], *, cluster: str = "txgreen",
+                 partitions: Optional[dict] = None, seed: int = 0):
+        self.cluster = cluster
+        self.sched = Scheduler(nodes, partitions)
+        self.t = 0.0
+        self.seed = seed
+        self.user_emails: Dict[str, str] = {}
+
+    # ------------------------------------------------------------ control
+    def submit(self, spec: JobSpec) -> int:
+        self.user_emails.setdefault(spec.username,
+                                    f"{spec.username}@ll.mit.edu")
+        return self.sched.submit(spec, self.t).job_id
+
+    def step(self, dt: float = 60.0):
+        self.t += dt
+        self.sched.tick(self.t)
+
+    def run_until(self, t: float, dt: float = 60.0):
+        while self.t < t:
+            self.step(min(dt, t - self.t))
+
+    # ----------------------------------------------------------- snapshot
+    def snapshot(self) -> ClusterSnapshot:
+        nodes: Dict[str, NodeSnapshot] = {}
+        for host, ns in self.sched.nodes.items():
+            spec = ns.spec
+            load = 0.0
+            gpu_duty = 0.0
+            gpu_mem = 0.0
+            gpus_used = set()
+            for task in ns.tasks:
+                load += task.profile.cpu_load(self.t, hash(host) % 97)
+                for g in task.gpu_slots:
+                    gpus_used.add(g)
+                gpu_duty += task.profile.gpu_load(self.t, hash(host) % 89)
+                gpu_mem += task.profile.gpu_mem_gb
+            # duty cycle saturates at 1.0 per device (the overloading payoff:
+            # several low-duty tasks sum toward full utilization)
+            gpu_load = 0.0
+            if spec.gpus > 0 and gpus_used:
+                gpu_load = min(1.0, gpu_duty / max(len(gpus_used), 1))
+            nodes[host] = NodeSnapshot(
+                hostname=host,
+                cores_total=spec.cores,
+                cores_used=min(ns.cores_used, spec.cores),
+                load=load,
+                mem_total_gb=spec.mem_gb,
+                mem_used_gb=min(ns.mem_used(), spec.mem_gb),
+                gpus_total=spec.gpus,
+                gpus_used=len(gpus_used),
+                gpu_load=gpu_load,
+                gpu_mem_total_gb=spec.gpus * spec.gpu_mem_gb,
+                gpu_mem_used_gb=min(gpu_mem, spec.gpus * spec.gpu_mem_gb),
+            )
+        jobs = []
+        for job in self.sched.running:
+            s = job.spec
+            jobs.append(JobRecord(
+                job_id=job.job_id, username=s.username, name=s.name,
+                nodes=list(job.hostnames), cores_per_node=s.cores_per_task,
+                state="R", job_type=s.job_type,
+                gpus_per_node=s.gpus_per_task, gpu_request=s.gpu_request,
+                start_time=job.start_time or 0.0, partition=s.partition,
+                mem_per_node_gb=s.profile.mem_gb))
+        return ClusterSnapshot(self.cluster, self.t, nodes, jobs,
+                               dict(self.user_emails))

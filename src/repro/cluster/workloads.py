@@ -1,0 +1,146 @@
+"""Synthetic workload generators reproducing the paper's case studies.
+
+Each factory returns JobSpecs whose monitored signature matches a figure:
+  * Fig 7  — low GPU duty (0.2..0.45), small GPU memory: overloading target
+  * Fig 8  — mis-submission: too many cores/task => 1 task per 2-GPU node
+  * Fig 10/11 — thread oversubscription and the file-I/O-storm 720-load case
+  * Jupyter/debug jobs for the shared partitions (Fig 4 summary block)
+"""
+from __future__ import annotations
+
+import random
+from typing import List
+
+from repro.cluster.job import JobSpec, TaskProfile
+from repro.cluster.node import NodeSpec, make_nodes
+
+
+def llsc_nodes(n_cpu: int = 64, n_gpu: int = 16) -> List[NodeSpec]:
+    cpu = make_nodes("d", n_cpu, cores=48, mem_gb=192.0)
+    gpu = make_nodes("c", n_gpu, cores=40, mem_gb=384.0, gpus=2,
+                     gpu_mem_gb=32.0)
+    return cpu + gpu
+
+
+def ml_training_job(user, tasks=4, gpu_frac=0.85, name="train.sh"):
+    return JobSpec(user, name, n_tasks=tasks, cores_per_task=20,
+                   gpus_per_task=1, duration_s=86400.0,
+                   profile=TaskProfile(threads=8, cpu_activity=0.5,
+                                       mem_gb=60.0, gpu_frac=gpu_frac,
+                                       gpu_mem_gb=24.0))
+
+
+def low_gpu_job(user, tasks=4, gpu_frac=0.35, name="supercloud_run.sh"):
+    """Fig 7: modest CPU, tiny GPU memory, GPU duty 0.23–0.45."""
+    return JobSpec(user, name, n_tasks=tasks, cores_per_task=20,
+                   gpus_per_task=1, duration_s=86400.0,
+                   profile=TaskProfile(threads=2, cpu_activity=1.0,
+                                       mem_gb=63.0, gpu_frac=gpu_frac,
+                                       gpu_mem_gb=2.0))
+
+
+def missubmitted_gpu_job(user, tasks=5, name="run_model.sh"):
+    """Fig 8: 40 cores/task on 40-core 2-GPU nodes => one task per node."""
+    return JobSpec(user, name, n_tasks=tasks, cores_per_task=40,
+                   gpus_per_task=1, duration_s=86400.0,
+                   profile=TaskProfile(threads=2, cpu_activity=0.9,
+                                       mem_gb=26.0, gpu_frac=0.35,
+                                       gpu_mem_gb=3.0))
+
+
+def fixed_gpu_job(user, tasks=5, name="run_model.sh"):
+    """Fig 9: the Fig-8 job after the advisor's fix (20 cores/task)."""
+    return JobSpec(user, name, n_tasks=tasks, cores_per_task=20,
+                   gpus_per_task=1, duration_s=86400.0,
+                   profile=TaskProfile(threads=2, cpu_activity=0.9,
+                                       mem_gb=26.0, gpu_frac=0.35,
+                                       gpu_mem_gb=3.0))
+
+
+def overloaded_gpu_job(user, tasks=8, tasks_per_gpu=4,
+                       name="overloaded_run.sh"):
+    """The paper's remediation: NPPN>1 tasks share each GPU."""
+    return JobSpec(user, name, n_tasks=tasks, cores_per_task=5,
+                   gpus_per_task=1, tasks_per_gpu=tasks_per_gpu,
+                   duration_s=86400.0,
+                   profile=TaskProfile(threads=2, cpu_activity=1.0,
+                                       mem_gb=20.0, gpu_frac=0.35,
+                                       gpu_mem_gb=2.0))
+
+
+def thread_oversubscribed_job(user, tasks=2, name="multiproc.py"):
+    """Fig 10: each task spawns as many threads as the node has cores; with
+    2 tasks per node the runnable-thread count is ~2x cores (norm ~2.2)."""
+    return JobSpec(user, name, n_tasks=tasks, cores_per_task=20,
+                   duration_s=86400.0,
+                   profile=TaskProfile(threads=52, cpu_activity=1.0,
+                                       mem_gb=60.0))
+
+
+def io_storm_job(user, tasks=2, name="supercloud_run.sh"):
+    """Fig 11 root cause: concurrent file-I/O storm => load ~720 on 48 cores."""
+    return JobSpec(user, name, n_tasks=tasks, cores_per_task=48,
+                   duration_s=86400.0,
+                   profile=TaskProfile(threads=720, cpu_activity=1.0,
+                                       mem_gb=190.0, jitter=0.05))
+
+
+def cpu_sim_job(user, tasks=8, name="cfd_solver"):
+    return JobSpec(user, name, n_tasks=tasks, cores_per_task=48,
+                   duration_s=86400.0,
+                   profile=TaskProfile(threads=48, cpu_activity=0.95,
+                                       mem_gb=150.0))
+
+
+def underutilized_cpu_job(user, tasks=6, name="sweep.sh"):
+    return JobSpec(user, name, n_tasks=tasks, cores_per_task=48,
+                   duration_s=86400.0,
+                   profile=TaskProfile(threads=4, cpu_activity=0.8,
+                                       mem_gb=24.0))
+
+
+def jupyter_job(user, gpu=False):
+    prof = TaskProfile(threads=1, cpu_activity=0.05, mem_gb=8.0,
+                       gpu_frac=0.05 if gpu else 0.0,
+                       gpu_mem_gb=2.0 if gpu else 0.0)
+    return JobSpec(user, "jupyter", n_tasks=1, cores_per_task=2,
+                   gpus_per_task=1 if gpu else 0, duration_s=86400.0,
+                   profile=prof, partition="jupyter", job_type="jupyter",
+                   gpu_request="gres:gpu:volta:1" if gpu else "")
+
+
+def make_llsc_sim(n_cpu: int = 64, n_gpu: int = 16, *, seed: int = 0,
+                  cluster: str = "txgreen"):
+    """Cluster with whole-node normal partition + shared jupyter/debug
+    partitions (the paper's fix for short/interactive jobs)."""
+    from repro.cluster.simulator import ClusterSim
+
+    nodes = llsc_nodes(n_cpu, n_gpu)
+    hosts = [n.hostname for n in nodes]
+    cpu_hosts = hosts[:n_cpu]
+    gpu_hosts = hosts[n_cpu:]
+    jupyter_hosts = cpu_hosts[:2] + gpu_hosts[:1]
+    normal_hosts = [h for h in hosts if h not in jupyter_hosts]
+    partitions = {
+        "normal": {"hosts": normal_hosts, "policy": "whole-node"},
+        "jupyter": {"hosts": jupyter_hosts, "policy": "shared"},
+        "debug": {"hosts": jupyter_hosts, "policy": "shared"},
+    }
+    return ClusterSim(nodes, cluster=cluster, partitions=partitions,
+                      seed=seed)
+
+
+def paper_scenario(sim, rng: random.Random):
+    """Populate a sim with the paper's mixture (used by tests/benchmarks)."""
+    sim.submit(ml_training_job("ab12345", tasks=6))
+    sim.submit(low_gpu_job("va67890", tasks=5))
+    sim.submit(missubmitted_gpu_job("rs12345", tasks=3))
+    sim.submit(thread_oversubscribed_job("user01", tasks=2))
+    sim.submit(io_storm_job("user02", tasks=2))
+    sim.submit(cpu_sim_job("cd67890", tasks=8))
+    sim.submit(underutilized_cpu_job("jk12345", tasks=6))
+    for i, (u, g) in enumerate([("ch12345", False), ("cd67890", False),
+                                ("no12345", True), ("pq67890", True),
+                                ("lm67890", False)]):
+        sim.submit(jupyter_job(u, gpu=g))
+    return sim

@@ -1,0 +1,26 @@
+"""Import side-effects: registers every architecture config."""
+import repro.configs.gemma3_1b       # noqa: F401
+import repro.configs.granite_moe_1b  # noqa: F401
+import repro.configs.internvl2_2b    # noqa: F401
+import repro.configs.jamba15_large   # noqa: F401
+import repro.configs.llsc_100m       # noqa: F401
+import repro.configs.mamba2_370m     # noqa: F401
+import repro.configs.minicpm3_4b     # noqa: F401
+import repro.configs.phi3_medium_14b # noqa: F401
+import repro.configs.qwen15_4b       # noqa: F401
+import repro.configs.qwen3_moe_30b   # noqa: F401
+import repro.configs.whisper_base    # noqa: F401
+
+# The 10 assigned architectures (llsc-100m is the paper's own demo extra).
+ASSIGNED = (
+    "mamba2-370m",
+    "internvl2-2b",
+    "minicpm3-4b",
+    "qwen1.5-4b",
+    "phi3-medium-14b",
+    "gemma3-1b",
+    "jamba-1.5-large-398b",
+    "whisper-base",
+    "qwen3-moe-30b-a3b",
+    "granite-moe-1b-a400m",
+)

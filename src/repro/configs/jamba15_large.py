@@ -1,0 +1,32 @@
+"""jamba-1.5-large-398b — hybrid Mamba+attention 1:7, MoE [arXiv:2403.19887; hf].
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536; MoE (16 experts,
+top-2) every other layer; attention every 8th layer (1:7 attn:mamba).
+Deviation noted in DESIGN.md: Jamba's SSM layers are Mamba-1; we implement
+them in SSD (Mamba-2) form with d_state=16, head_dim=64 — same FLOP/byte
+shape, one SSM code path.
+
+Scale notes: 398B params.  Optimizer moments are kept in bf16
+(``opt_dtype``) so train state fits 512 chips; the dry-run records the
+memory analysis for both meshes.
+"""
+from repro.configs.base import ModelConfig, MoESpec, SSMSpec, register
+
+CONFIG = register(ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=24576,
+    vocab_size=65536,
+    # period of 8: attention at position 4, mamba elsewhere; MoE on odd slots
+    layer_pattern=("ssm", "ssm", "ssm", "ssm", "attn", "ssm", "ssm", "ssm"),
+    mlp_pattern=("mlp", "moe", "mlp", "moe", "mlp", "moe", "mlp", "moe"),
+    moe=MoESpec(n_experts=16, top_k=2, d_ff_expert=24576),
+    ssm=SSMSpec(d_state=16, d_conv=4, expand=2, head_dim=64, n_groups=1,
+                chunk=256),
+    opt_dtype="bfloat16",
+))

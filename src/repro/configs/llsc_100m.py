@@ -1,0 +1,21 @@
+"""llsc-100m — the paper's own demo workload.
+
+LLload (the paper) is architecture-agnostic infrastructure; this ~110M dense
+LM is the in-repo stand-in for "a user's training job" in the end-to-end
+monitoring examples (examples/train_with_monitoring.py) and the overloading
+throughput study.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llsc-100m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_head=64,
+    d_ff=3072,
+    vocab_size=32768,
+    tie_embeddings=True,
+))

@@ -1,0 +1,87 @@
+"""Assigned input shapes and per-(arch, shape) input specs.
+
+``train_*`` shapes lower ``train_step``; ``prefill_*`` lower the serving
+prefill; ``decode_*`` / ``long_*`` lower ``serve_step`` (one new token
+against a KV cache of ``seq_len``).
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins (weak-type
+correct, shardable, zero allocation) — the same pattern the dry-run uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple:
+    """(ok, reason). long_500k only for sub-quadratic families."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 524k-token decode cache "
+                       "requires sub-quadratic attention (DESIGN.md §4)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def frontend_spec(cfg: ModelConfig, batch: int):
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "patch_stub":
+        return _sds((batch, cfg.frontend_len, cfg.d_model), dt)
+    if cfg.frontend == "audio_stub":
+        return _sds((batch, cfg.encoder.source_len, cfg.d_model), dt)
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct inputs for the step function of ``shape.kind``."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    fe = frontend_spec(cfg, B)
+
+    if shape.kind == "train":
+        S_text = S - (cfg.frontend_len if cfg.frontend == "patch_stub" else 0)
+        specs = {"tokens": _sds((B, S_text), i32),
+                 "labels": _sds((B, S_text), i32)}
+        if fe is not None:
+            specs["frontend"] = fe
+        return specs
+
+    if shape.kind == "prefill":
+        S_text = S - (cfg.frontend_len if cfg.frontend == "patch_stub" else 0)
+        specs = {"tokens": _sds((B, S_text), i32)}
+        if fe is not None:
+            specs["frontend"] = fe
+        return specs
+
+    if shape.kind == "decode":
+        from repro.models.model import cache_struct
+
+        return {
+            "token": _sds((B, 1), i32),
+            "caches": cache_struct(cfg, B, S),
+            "cache_len": _sds((), i32),
+        }
+    raise ValueError(shape.kind)

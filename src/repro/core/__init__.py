@@ -1,0 +1,28 @@
+"""repro.core — the paper's contribution: the LLload utilization system.
+
+Snapshot model, query engine/CLI, 15-minute archive, weekly node-hours
+analysis, usage characterization (advisor) and the overloading (NPPN)
+controller.  See DESIGN.md §1 for the paper-to-module map.
+"""
+from repro.core.analysis import (HIGH_THRESHOLD, LOW_THRESHOLD, WeeklyReport,
+                                 weekly_analysis)
+from repro.core.advisor import (Advice, characterize_all, characterize_user,
+                                recommend_nppn)
+from repro.core.archive import PeriodicArchiver, SnapshotArchive
+from repro.core.collector import (DeviceUtilization, JaxJobRegistry,
+                                  LocalHostCollector, SimCollector,
+                                  publish_step_utilization)
+from repro.core.llload import LLload
+from repro.core.metrics import ClusterSnapshot, JobRecord, NodeSnapshot
+from repro.core.overload import (NPPN_LEVELS, OverloadController,
+                                 OverloadDecision, packed_throughput_model)
+
+__all__ = [
+    "HIGH_THRESHOLD", "LOW_THRESHOLD", "WeeklyReport", "weekly_analysis",
+    "Advice", "characterize_all", "characterize_user", "recommend_nppn",
+    "SnapshotArchive", "PeriodicArchiver", "DeviceUtilization",
+    "JaxJobRegistry", "LocalHostCollector", "SimCollector",
+    "publish_step_utilization", "LLload", "ClusterSnapshot", "JobRecord",
+    "NodeSnapshot", "NPPN_LEVELS", "OverloadController", "OverloadDecision",
+    "packed_throughput_model",
+]

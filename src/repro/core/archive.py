@@ -1,0 +1,74 @@
+"""15-minute snapshot archive (paper §V-A).
+
+Every SNAPSHOT_INTERVAL a ``LLload -q --all --tsv`` equivalent is appended
+to per-day TSV files under an archive directory (the paper stores these on
+the central parallel FS; each cluster keeps its own archive)."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Iterable, List, Optional
+
+from repro.core.metrics import ClusterSnapshot, rows_from_tsv
+
+SNAPSHOT_INTERVAL_S = 15 * 60  # paper: every 15 minutes
+
+
+class SnapshotArchive:
+    def __init__(self, root: str, cluster: str = "txgreen"):
+        self.root = os.path.join(root, cluster)
+        os.makedirs(self.root, exist_ok=True)
+
+    def _path_for(self, timestamp: float) -> str:
+        day = time.strftime("%Y-%m-%d", time.gmtime(timestamp))
+        return os.path.join(self.root, f"llload-{day}.tsv")
+
+    def append(self, snap: ClusterSnapshot):
+        path = self._path_for(snap.timestamp)
+        text = snap.to_tsv()
+        body = text.split("\n", 1)[1] if os.path.exists(path) else text
+        with open(path, "a") as f:
+            f.write(body)
+
+    def append_tsv(self, timestamp: float, tsv_text: str):
+        path = self._path_for(timestamp)
+        body = (tsv_text.split("\n", 1)[1] if os.path.exists(path)
+                else tsv_text)
+        with open(path, "a") as f:
+            f.write(body)
+
+    def files(self) -> List[str]:
+        return sorted(os.path.join(self.root, f)
+                      for f in os.listdir(self.root) if f.endswith(".tsv"))
+
+    def rows(self, start: Optional[float] = None,
+             end: Optional[float] = None) -> List[dict]:
+        out = []
+        for path in self.files():
+            with open(path) as f:
+                for row in rows_from_tsv(f.read()):
+                    t = row["timestamp"]
+                    if start is not None and t < start:
+                        continue
+                    if end is not None and t > end:
+                        continue
+                    out.append(row)
+        return out
+
+
+class PeriodicArchiver:
+    """Drives snapshot capture on the 15-minute cadence (sim or wall time)."""
+
+    def __init__(self, archive: SnapshotArchive, source,
+                 interval_s: float = SNAPSHOT_INTERVAL_S):
+        self.archive = archive
+        self.source = source          # object with .snapshot() -> ClusterSnapshot
+        self.interval_s = interval_s
+        self._last = None
+
+    def maybe_capture(self, now: float) -> bool:
+        if self._last is not None and now - self._last < self.interval_s:
+            return False
+        self.archive.append(self.source.snapshot())
+        self._last = now
+        return True

@@ -1,0 +1,75 @@
+"""The ``LLload`` command (paper Figs 2-5, 10, 11).
+
+Usage (mirrors the paper's flags):
+
+    python -m repro.core.cli [-g] [--all] [-t N] [-n HOST,HOST] [--tsv] [-q]
+                             [--user USER] [--source sim|live]
+
+``--source sim`` (default) runs against the simulated LLSC cluster populated
+with the paper's workload mixture; ``--source live`` collects from this
+host + any in-process JAX jobs.
+"""
+from __future__ import annotations
+
+import argparse
+import random
+import sys
+
+from repro.cluster.workloads import make_llsc_sim, paper_scenario
+from repro.core import formatting
+from repro.core.collector import LocalHostCollector, SimCollector
+from repro.core.llload import LLload
+
+PRIVILEGED = {"admin", "root", "hpcteam"}
+
+
+def build_snapshot(source: str):
+    if source == "live":
+        return LocalHostCollector().snapshot()
+    sim = make_llsc_sim()
+    paper_scenario(sim, random.Random(0))
+    sim.run_until(3600.0)
+    return SimCollector(sim).snapshot()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="LLload",
+                                 description="HPC utilization snapshot")
+    ap.add_argument("-g", action="store_true", dest="gpu",
+                    help="include GPU utilization columns")
+    ap.add_argument("--all", action="store_true", dest="all_users",
+                    help="all users (privileged)")
+    ap.add_argument("-t", type=int, default=None, metavar="N",
+                    help="top-N nodes by CPU load")
+    ap.add_argument("-n", type=str, default=None, metavar="NODELIST",
+                    help="comma-separated node detail")
+    ap.add_argument("--tsv", action="store_true",
+                    help="tab-separated output (archive format)")
+    ap.add_argument("-q", action="store_true", help="quiet (no banner)")
+    ap.add_argument("--user", default="ab12345")
+    ap.add_argument("--source", default="sim", choices=["sim", "live"])
+    args = ap.parse_args(argv)
+
+    snap = build_snapshot(args.source)
+    ll = LLload(snap, privileged_users=PRIVILEGED)
+
+    if args.tsv:
+        sys.stdout.write(snap.to_tsv())
+        return 0
+    if args.t is not None:
+        print(formatting.format_top(ll.top_loaded(args.t), args.t))
+        return 0
+    if args.n is not None:
+        hosts = [h.strip() for h in args.n.split(",") if h.strip()]
+        print(formatting.format_node_detail(ll.node_detail(hosts)))
+        return 0
+    if args.all_users:
+        print(formatting.format_all_view(ll.all_view(args.user), args.gpu))
+        return 0
+    blk = ll.user_view(args.user)
+    print(formatting.format_user_view(snap.cluster, blk, args.gpu))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

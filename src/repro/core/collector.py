@@ -1,0 +1,174 @@
+"""Snapshot collectors.
+
+Three sources, one schema (:class:`ClusterSnapshot`):
+
+  * :class:`SimCollector` — the cluster simulator (Slurm stand-in).
+  * :class:`LocalHostCollector` — this host via /proc + psutil (the paper's
+    sinfo/load-average path).
+  * :class:`JaxJobRegistry` / publish hooks — *self-reported* device
+    utilization from running JAX jobs.  This replaces the paper's
+    privileged ssh+nvidia-smi fan-out (and its latency, which the paper
+    calls out): each training/serving step publishes achieved-FLOP/s and
+    HBM occupancy; the collector turns that into the `gpu_load` /
+    `gpu_mem_*` fields.  See DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import socket
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.core.metrics import ClusterSnapshot, JobRecord, NodeSnapshot
+
+try:
+    import psutil
+except ImportError:  # pragma: no cover
+    psutil = None
+
+
+# --------------------------------------------------------------------------
+# Simulator source
+# --------------------------------------------------------------------------
+
+
+class SimCollector:
+    def __init__(self, sim):
+        self.sim = sim
+
+    def snapshot(self) -> ClusterSnapshot:
+        return self.sim.snapshot()
+
+
+# --------------------------------------------------------------------------
+# Live local host
+# --------------------------------------------------------------------------
+
+
+class LocalHostCollector:
+    """CPU/memory metrics for the current host (one-node 'cluster')."""
+
+    def __init__(self, username: Optional[str] = None,
+                 cluster: str = "local"):
+        self.username = username or os.environ.get("USER", "user")
+        self.cluster = cluster
+        self.hostname = socket.gethostname()
+
+    def node_snapshot(self, device: Optional["DeviceUtilization"] = None
+                      ) -> NodeSnapshot:
+        cores = os.cpu_count() or 1
+        load1, load5, _ = os.getloadavg()
+        if psutil is not None:
+            vm = psutil.virtual_memory()
+            mem_total = vm.total / 1e9
+            mem_used = (vm.total - vm.available) / 1e9
+            cores_used = min(cores, int(round(psutil.cpu_percent(None)
+                                              / 100.0 * cores)))
+        else:  # pragma: no cover
+            mem_total, mem_used, cores_used = 0.0, 0.0, 0
+        gpu = device or DeviceUtilization()
+        return NodeSnapshot(
+            hostname=self.hostname, cores_total=cores, cores_used=cores_used,
+            load=load5, mem_total_gb=mem_total, mem_used_gb=mem_used,
+            gpus_total=gpu.n_devices, gpus_used=gpu.n_active,
+            gpu_load=gpu.duty_cycle, gpu_mem_total_gb=gpu.hbm_total_gb,
+            gpu_mem_used_gb=gpu.hbm_used_gb)
+
+    def snapshot(self) -> ClusterSnapshot:
+        dev = JaxJobRegistry.global_registry().aggregate()
+        node = self.node_snapshot(dev)
+        job = JobRecord(job_id=os.getpid(), username=self.username,
+                        name="local", nodes=[self.hostname],
+                        cores_per_node=node.cores_total,
+                        gpus_per_node=dev.n_devices if dev else 0,
+                        start_time=_PROC_START)
+        return ClusterSnapshot(self.cluster, time.time(),
+                               {self.hostname: node}, [job],
+                               {self.username: f"{self.username}@local"})
+
+
+_PROC_START = time.time()
+
+
+# --------------------------------------------------------------------------
+# JAX self-reporting
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DeviceUtilization:
+    """What a JAX job knows about its own devices."""
+    n_devices: int = 0
+    n_active: int = 0
+    duty_cycle: float = 0.0     # achieved FLOP/s / peak FLOP/s (MFU proxy)
+    hbm_total_gb: float = 0.0
+    hbm_used_gb: float = 0.0
+    step_time_s: float = 0.0
+    achieved_flops: float = 0.0
+
+
+class JaxJobRegistry:
+    """In-process registry JAX jobs publish to; collectors read from it.
+
+    Thread-safe; keyed by job name so several engines (trainer + server)
+    in one process are visible individually and in aggregate.
+    """
+
+    _global = None
+    _global_lock = threading.Lock()
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries: Dict[str, DeviceUtilization] = {}
+
+    @classmethod
+    def global_registry(cls) -> "JaxJobRegistry":
+        with cls._global_lock:
+            if cls._global is None:
+                cls._global = cls()
+            return cls._global
+
+    def publish(self, job_name: str, util: DeviceUtilization):
+        with self._lock:
+            self._entries[job_name] = util
+
+    def remove(self, job_name: str):
+        with self._lock:
+            self._entries.pop(job_name, None)
+
+    def entries(self) -> Dict[str, DeviceUtilization]:
+        with self._lock:
+            return dict(self._entries)
+
+    def aggregate(self) -> DeviceUtilization:
+        with self._lock:
+            entries = list(self._entries.values())
+        if not entries:
+            return DeviceUtilization()
+        n = max(e.n_devices for e in entries)
+        return DeviceUtilization(
+            n_devices=n,
+            n_active=max(e.n_active for e in entries),
+            duty_cycle=min(1.5, sum(e.duty_cycle for e in entries)),
+            hbm_total_gb=max(e.hbm_total_gb for e in entries),
+            hbm_used_gb=sum(e.hbm_used_gb for e in entries),
+            step_time_s=max(e.step_time_s for e in entries),
+            achieved_flops=sum(e.achieved_flops for e in entries),
+        )
+
+
+def publish_step_utilization(job_name: str, *, model_flops_per_step: float,
+                             step_time_s: float, peak_flops: float,
+                             n_devices: int = 1, hbm_used_gb: float = 0.0,
+                             hbm_total_gb: float = 0.0):
+    """Hook called by the trainer/server after each (timed) step."""
+    duty = 0.0
+    if step_time_s > 0 and peak_flops > 0:
+        duty = model_flops_per_step / step_time_s / (peak_flops * n_devices)
+    JaxJobRegistry.global_registry().publish(job_name, DeviceUtilization(
+        n_devices=n_devices, n_active=n_devices, duty_cycle=duty,
+        hbm_total_gb=hbm_total_gb, hbm_used_gb=hbm_used_gb,
+        step_time_s=step_time_s,
+        achieved_flops=model_flops_per_step / max(step_time_s, 1e-9)))

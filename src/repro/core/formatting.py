@@ -1,0 +1,105 @@
+"""Render LLload views in the paper's terminal formats (Figs 2–5, 10, 11)."""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from repro.core.llload import AllView, NodeDetail, TopNode, UserBlock
+from repro.core.metrics import NodeSnapshot
+
+
+def _gb(x: float) -> str:
+    return f"{x:.0f}GB"
+
+
+def _node_row(n: NodeSnapshot, gpu: bool) -> str:
+    row = (f"{n.hostname:<12} {n.cores_total:>4} - {n.cores_used:>3} = "
+           f"{n.cores_free:<4} {n.load:>7.2f}  "
+           f"{_gb(n.mem_total_gb):>7} - {_gb(n.mem_used_gb):>6} = "
+           f"{_gb(n.mem_free_gb):<7}")
+    if gpu:
+        row += (f" | {n.gpus_total:>2} - {n.gpus_used} = {n.gpus_free:<2} "
+                f"{n.gpu_load:>5.2f}  "
+                f"{_gb(n.gpu_mem_total_gb):>6} - {_gb(n.gpu_mem_used_gb):>5}"
+                f" = {_gb(n.gpu_mem_free_gb):<6}")
+    return row
+
+
+def _header(gpu: bool) -> str:
+    h = (f"{'HOSTNAME':<12} {'CORES':>5} - {'USED':>4}= {'FREE':<4}"
+         f" {'LOAD':>6}  {'MEMORY':>7} - {'USED':>6} = {'FREE':<7}")
+    if gpu:
+        h += (f" | {'GPUS':>4}- {'USED'} = {'FREE'} {'LOAD':>4} "
+              f"{'GPUMEM':>7} - {'USED':>5} = {'FREE':<6}")
+    return h
+
+
+def format_user_view(cluster: str, block: UserBlock, gpu: bool = False,
+                     show_email: bool = False) -> str:
+    lines = [f"Cluster name: {cluster}"]
+    who = f"Username: {block.username}"
+    if show_email:
+        who += f" ({block.email})"
+    who += f", Nodes used: {len(block.nodes)}"
+    lines.append(who)
+    lines.append(_header(gpu))
+    for n in block.nodes:
+        lines.append(_node_row(n, gpu))
+    return "\n".join(lines)
+
+
+def format_all_view(view: AllView, gpu: bool = False) -> str:
+    lines = [f"Cluster name: {view.cluster}", ""]
+    if view.jupyter:
+        lines.append("Jupyter notebook jobs:")
+        lines.append("")
+        lines.append(f"{'NodeName':<14} Users(GPU)")
+        for e in view.jupyter:
+            lines.append(f"[J]-{e.hostname:<12}: " + ", ".join(e.users))
+        lines.append("")
+    lines.append("Node information for each user:")
+    lines.append("")
+    for blk in view.users:
+        lines.append(format_user_view(view.cluster, blk, gpu,
+                                      show_email=True))
+        lines.append("")
+    return "\n".join(lines)
+
+
+def format_top(rows: List[TopNode], n: int) -> str:
+    lines = [f"List {n} of nodes with loads, sorted by descending order",
+             f"{'HOSTNAMES':<12} {'AVG_LOAD':>9}  {'CPUS(A/I/O/T)':>14} "
+             f"{'MEMORY(MB, Total)':>18} {'FREE_MEM':>9}"]
+    for r in rows:
+        cpus = f"{r.cpus_alloc}/{r.cpus_idle}/{r.cpus_other}/{r.cpus_total}"
+        lines.append(f"{r.hostname:<12} {r.avg_load:>9.5f}  {cpus:>14} "
+                     f"{r.mem_total_mb:>18} {r.mem_free_mb:>9}")
+    return "\n".join(lines)
+
+
+def format_node_detail(details: Sequence[NodeDetail]) -> str:
+    lines = ["Node Information:",
+             f"{'HOSTNAMES':<12} {'CPU_LOAD':>9} {'CPUS(A/I/O/T)':>14} "
+             f"{'MEMORY':>8} {'FREE_MEM':>9} {'GRES_USED':>24} {'USER':>10}"]
+    for d in details:
+        n = d.node
+        cpus = f"{n.cores_used}/{n.cores_free}/0/{n.cores_total}"
+        gres = f"gpu:{n.gpus_used}" if n.gpus_total else "none"
+        user = ", ".join(sorted({j.username for j in d.jobs})) or "-"
+        lines.append(f"{n.hostname:<12} {n.load:>9.2f} {cpus:>14} "
+                     f"{int(n.mem_total_gb * 1000):>8} "
+                     f"{int(n.mem_free_gb * 1000):>9} {gres:>24} {user:>10}")
+    lines.append("")
+    lines.append(f"{'JOBID':>9} {'NAME':>20} {'USER':>9} {'START_TIME':>19} "
+                 f"{'EXEC_HOST':>11} {'CPUS':>5} {'MEM':>6} {'ST':>3}")
+    seen = set()
+    for d in details:
+        for j in d.jobs:
+            if j.job_id in seen:
+                continue
+            seen.add(j.job_id)
+            lines.append(
+                f"{j.job_id:>9} {j.name:>20} {j.username:>9} "
+                f"{j.start_time:>19.0f} {','.join(j.nodes[:2]):>11} "
+                f"{j.cores_per_node:>5} {int(j.mem_per_node_gb * 1000):>5}M "
+                f"{j.state:>3}")
+    return "\n".join(lines)

@@ -1,0 +1,130 @@
+"""LLload query engine (paper §IV).
+
+Operates on a :class:`ClusterSnapshot` regardless of source (simulator,
+archive TSV, or live collectors).  Implements every paper view:
+
+  * default        — per-user node table (Fig 2)
+  * ``-g``         — adds GPU columns (Fig 3)
+  * ``--all``      — privileged: Jupyter summary + all users with emails
+                     (Fig 4); regular users are silently scoped to self
+  * ``-t N``       — top-N nodes by normalized CPU load (Figs 5, 10)
+  * ``-n LIST``    — node detail + job table (Fig 11)
+  * ``--tsv``      — machine-readable output for the 15-min archive
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.metrics import ClusterSnapshot, JobRecord, NodeSnapshot
+
+
+@dataclasses.dataclass
+class UserBlock:
+    username: str
+    email: str
+    nodes: List[NodeSnapshot]
+
+
+@dataclasses.dataclass
+class JupyterEntry:
+    hostname: str
+    users: List[str]           # "user" or "user(gres:gpu:volta:1)"
+
+
+@dataclasses.dataclass
+class AllView:
+    cluster: str
+    jupyter: List[JupyterEntry]
+    users: List[UserBlock]
+
+
+@dataclasses.dataclass
+class TopNode:
+    hostname: str
+    avg_load: float            # normalized (load / cores): >1 == overloaded
+    cpus_alloc: int
+    cpus_idle: int
+    cpus_other: int
+    cpus_total: int
+    mem_total_mb: int
+    mem_free_mb: int
+
+
+@dataclasses.dataclass
+class NodeDetail:
+    node: NodeSnapshot
+    norm_load: float
+    jobs: List[JobRecord]
+
+
+class PermissionError_(Exception):
+    pass
+
+
+class LLload:
+    def __init__(self, snapshot: ClusterSnapshot,
+                 privileged_users: Optional[set] = None):
+        self.snap = snapshot
+        self.privileged = privileged_users or set()
+
+    # ------------------------------------------------------------ default
+    def user_view(self, username: str) -> UserBlock:
+        hosts = self.snap.nodes_by_user().get(username, [])
+        nodes = [self.snap.nodes[h] for h in sorted(hosts)]
+        return UserBlock(username, self.snap.email_of(username), nodes)
+
+    # -------------------------------------------------------------- --all
+    def all_view(self, requesting_user: str) -> AllView:
+        """Privileged full-system view; non-privileged users get only their
+        own block (the paper scopes --all silently, not with an error)."""
+        by_user = self.snap.nodes_by_user()
+        if requesting_user not in self.privileged:
+            blk = self.user_view(requesting_user)
+            return AllView(self.snap.cluster, [], [blk] if blk.nodes else [])
+
+        jupyter: Dict[str, List[str]] = {}
+        for job in self.snap.jobs:
+            if job.state == "R" and job.job_type == "jupyter":
+                for h in job.nodes:
+                    tag = job.username
+                    if job.gpu_request:
+                        tag += f"({job.gpu_request})"
+                    jupyter.setdefault(h, []).append(tag)
+        jup = [JupyterEntry(h, sorted(us)) for h, us in sorted(jupyter.items())]
+
+        blocks = []
+        for user in sorted(by_user):
+            nodes = [self.snap.nodes[h] for h in sorted(by_user[user])]
+            blocks.append(UserBlock(user, self.snap.email_of(user), nodes))
+        return AllView(self.snap.cluster, jup, blocks)
+
+    # ---------------------------------------------------------------- -t N
+    def top_loaded(self, n: int) -> List[TopNode]:
+        rows = []
+        for host in self.snap.nodes:
+            node = self.snap.nodes[host]
+            alloc = node.cores_used
+            rows.append(TopNode(
+                hostname=host,
+                avg_load=node.norm_load,
+                cpus_alloc=alloc,
+                cpus_idle=node.cores_total - alloc,
+                cpus_other=0,
+                cpus_total=node.cores_total,
+                mem_total_mb=int(node.mem_total_gb * 1000),
+                mem_free_mb=int(node.mem_free_gb * 1000),
+            ))
+        rows.sort(key=lambda r: -r.avg_load)
+        return rows[:n]
+
+    # ----------------------------------------------------------- -n LIST
+    def node_detail(self, nodelist: Sequence[str]) -> List[NodeDetail]:
+        out = []
+        for host in nodelist:
+            if host not in self.snap.nodes:
+                continue
+            node = self.snap.nodes[host]
+            out.append(NodeDetail(node, node.norm_load,
+                                  self.snap.jobs_on_node(host)))
+        return out

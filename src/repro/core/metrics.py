@@ -1,0 +1,166 @@
+"""LLload data model (paper §IV).
+
+The paper tracks a deliberately small set of metrics per node: CPU core
+counts (total/used/free), the 5-minute load average, system memory
+(total/used/free), and — on accelerator nodes — device counts, device duty
+cycle ("GPU load") and device memory.  A :class:`ClusterSnapshot` is one
+point-in-time view of the whole system plus the job table that attributes
+each node to (under whole-node scheduling) exactly one user.
+
+TPU adaptation: ``gpu_load`` is the *device duty-cycle proxy* — for JAX jobs
+it is measured MFU-style utilization (achieved FLOP/s ÷ peak), self-reported
+by the job (see collector.py); ``gpu_mem_*`` is HBM.  Field names keep the
+paper's vocabulary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import time
+from typing import Dict, List, Optional
+
+TSV_COLUMNS = [
+    "timestamp", "cluster", "hostname", "username", "jobtype",
+    "cores_total", "cores_used", "load",
+    "mem_total_gb", "mem_used_gb",
+    "gpus_total", "gpus_used", "gpu_load",
+    "gpu_mem_total_gb", "gpu_mem_used_gb",
+]
+
+
+@dataclasses.dataclass
+class NodeSnapshot:
+    hostname: str
+    cores_total: int
+    cores_used: int
+    load: float                    # 5-min load average (absolute)
+    mem_total_gb: float
+    mem_used_gb: float
+    gpus_total: int = 0
+    gpus_used: int = 0
+    gpu_load: float = 0.0          # mean duty cycle across devices (0..1+)
+    gpu_mem_total_gb: float = 0.0
+    gpu_mem_used_gb: float = 0.0
+
+    @property
+    def cores_free(self) -> int:
+        return self.cores_total - self.cores_used
+
+    @property
+    def mem_free_gb(self) -> float:
+        return self.mem_total_gb - self.mem_used_gb
+
+    @property
+    def gpus_free(self) -> int:
+        return self.gpus_total - self.gpus_used
+
+    @property
+    def gpu_mem_free_gb(self) -> float:
+        return self.gpu_mem_total_gb - self.gpu_mem_used_gb
+
+    @property
+    def norm_load(self) -> float:
+        """Load normalized by core count — 1.0 means fully loaded (paper §IV)."""
+        return self.load / max(self.cores_total, 1)
+
+
+@dataclasses.dataclass
+class JobRecord:
+    job_id: int
+    username: str
+    name: str
+    nodes: List[str]
+    cores_per_node: int
+    state: str = "R"               # R | PD | CG
+    job_type: str = "batch"        # batch | jupyter | debug
+    gpus_per_node: int = 0
+    gpu_request: str = ""          # e.g. "gres:gpu:volta:1"
+    start_time: float = 0.0
+    partition: str = "normal"
+    mem_per_node_gb: float = 0.0
+
+
+@dataclasses.dataclass
+class ClusterSnapshot:
+    cluster: str
+    timestamp: float
+    nodes: Dict[str, NodeSnapshot]
+    jobs: List[JobRecord]
+    user_emails: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------- queries
+    def user_of_node(self, hostname: str) -> Optional[str]:
+        for job in self.jobs:
+            if job.state == "R" and hostname in job.nodes:
+                return job.username
+        return None
+
+    def nodes_by_user(self) -> Dict[str, List[str]]:
+        out: Dict[str, List[str]] = {}
+        for job in self.jobs:
+            if job.state != "R":
+                continue
+            for h in job.nodes:
+                lst = out.setdefault(job.username, [])
+                if h not in lst:
+                    lst.append(h)
+        return out
+
+    def jobs_of_user(self, username: str) -> List[JobRecord]:
+        return [j for j in self.jobs if j.username == username]
+
+    def jobs_on_node(self, hostname: str) -> List[JobRecord]:
+        return [j for j in self.jobs if j.state == "R" and hostname in j.nodes]
+
+    def email_of(self, username: str) -> str:
+        return self.user_emails.get(username, f"{username}@ll.mit.edu")
+
+    # --------------------------------------------------------------- TSV
+    def to_tsv(self) -> str:
+        """One row per (node, owning user) — the `-q --all --tsv` archive
+        format the weekly analysis ingests (paper §V-A)."""
+        buf = io.StringIO()
+        buf.write("\t".join(TSV_COLUMNS) + "\n")
+        owner = {}
+        jobtype = {}
+        for job in self.jobs:
+            if job.state != "R":
+                continue
+            for h in job.nodes:
+                owner.setdefault(h, job.username)
+                jobtype.setdefault(h, job.job_type)
+        for host in sorted(self.nodes):
+            n = self.nodes[host]
+            user = owner.get(host, "")
+            if not user:
+                continue  # idle nodes are not archived (no owning job)
+            row = [f"{self.timestamp:.0f}", self.cluster, host, user,
+                   jobtype.get(host, "batch"),
+                   str(n.cores_total), str(n.cores_used), f"{n.load:.4f}",
+                   f"{n.mem_total_gb:.1f}", f"{n.mem_used_gb:.1f}",
+                   str(n.gpus_total), str(n.gpus_used), f"{n.gpu_load:.4f}",
+                   f"{n.gpu_mem_total_gb:.1f}", f"{n.gpu_mem_used_gb:.1f}"]
+            buf.write("\t".join(row) + "\n")
+        return buf.getvalue()
+
+
+def rows_from_tsv(text: str) -> List[dict]:
+    lines = [ln for ln in text.splitlines() if ln.strip()]
+    if not lines:
+        return []
+    header = lines[0].split("\t")
+    out = []
+    for ln in lines[1:]:
+        vals = ln.split("\t")
+        row = dict(zip(header, vals))
+        for k in ("timestamp", "load", "mem_total_gb", "mem_used_gb",
+                  "gpu_load", "gpu_mem_total_gb", "gpu_mem_used_gb"):
+            row[k] = float(row[k])
+        for k in ("cores_total", "cores_used", "gpus_total", "gpus_used"):
+            row[k] = int(row[k])
+        out.append(row)
+    return out
+
+
+def now() -> float:
+    return time.time()

@@ -1,0 +1,102 @@
+"""Overloading (oversubscription) controller — the paper's §V-B mechanism,
+generalized into a closed-loop policy this framework applies to its own
+serving/training jobs.
+
+Paper: "GPU overloading involves launching a parent job process ... the
+parent process round-robin assigns one of the available GPUs to each of the
+child tasks" with NPPN raised 2 -> 4 -> 8 while load and memory allow.
+
+TPU adaptation: the "device" is a TPU chip (or slice); `duty_cycle` is the
+measured MFU-proxy from the JAX collector; packing happens either by
+co-scheduling micro-jobs on a slice (training) or by admitting more
+concurrent request streams into the batcher (serving).  The *policy* below
+is identical to the paper's.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.advisor import recommend_nppn
+
+NPPN_LEVELS = (1, 2, 4, 8)
+
+
+@dataclasses.dataclass
+class DeviceObservation:
+    duty_cycle: float          # 0..1 utilization of the device
+    mem_used_gb: float         # per co-resident task
+    mem_total_gb: float
+    throughput: float = 0.0    # task-level items/s (optional)
+
+
+@dataclasses.dataclass
+class OverloadDecision:
+    nppn: int
+    reason: str
+
+
+class OverloadController:
+    """Hysteresis-free step controller over NPPN levels.
+
+    ``observe`` accumulates device observations; ``decide`` proposes the
+    next NPPN.  Raising is allowed only when the *projected* duty cycle and
+    memory stay under the caps; lowering triggers when the device saturates
+    (duty > saturate_load) — the paper's "the limiting factor is the GPU
+    load" case.
+    """
+
+    def __init__(self, *, target_load: float = 0.9,
+                 saturate_load: float = 0.98, mem_headroom: float = 0.9,
+                 max_nppn: int = 8):
+        self.target_load = target_load
+        self.saturate_load = saturate_load
+        self.mem_headroom = mem_headroom
+        self.max_nppn = max_nppn
+        self.history: List[DeviceObservation] = []
+
+    def observe(self, obs: DeviceObservation):
+        self.history.append(obs)
+
+    def decide(self, current_nppn: int) -> OverloadDecision:
+        if not self.history:
+            return OverloadDecision(current_nppn, "no observations")
+        window = self.history[-8:]
+        duty = sum(o.duty_cycle for o in window) / len(window)
+        obs = window[-1]
+        per_task_duty = duty / max(current_nppn, 1)
+        per_task_mem = obs.mem_used_gb / max(current_nppn, 1)
+
+        if duty >= self.saturate_load and current_nppn > 1:
+            idx = NPPN_LEVELS.index(current_nppn)
+            return OverloadDecision(
+                NPPN_LEVELS[max(idx - 1, 0)],
+                f"device saturated (duty {duty:.2f}); backing off")
+
+        best = recommend_nppn(per_task_duty, per_task_mem, obs.mem_total_gb,
+                              target_load=self.target_load,
+                              mem_headroom=self.mem_headroom,
+                              max_nppn=self.max_nppn)
+        if best > current_nppn:
+            # step one level at a time (2 -> 4 -> 8), as deployed at LLSC
+            idx = NPPN_LEVELS.index(current_nppn)
+            nxt = NPPN_LEVELS[min(idx + 1, len(NPPN_LEVELS) - 1)]
+            return OverloadDecision(
+                nxt, f"duty/task {per_task_duty:.2f}, mem/task "
+                     f"{per_task_mem:.1f}GB -> headroom for NPPN={best}")
+        if best < current_nppn:
+            return OverloadDecision(best, "memory or load headroom shrank")
+        return OverloadDecision(current_nppn, "at recommended level")
+
+
+def packed_throughput_model(per_task_duty: float, nppn: int,
+                            interference: float = 0.03) -> float:
+    """Analytic throughput multiple for NPPN tasks sharing one device.
+
+    Tasks time-share: aggregate duty saturates at 1.0; each co-resident
+    task adds a small interference tax (context switching / memory traffic).
+    Used as the napkin model for the Fig 7 -> NPPN sweep benchmark; the
+    measured counterpart is benchmarks/bench_overloading.py.
+    """
+    raw = min(1.0, per_task_duty * nppn)
+    return raw * (1.0 - interference * (nppn - 1))

@@ -1,0 +1,75 @@
+"""Weekly report rendering + user notification emails (paper §V, Fig 6)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+from repro.core.analysis import ReportRow, WeeklyReport
+
+
+def _section(title: str, metric: str, rows: List[ReportRow]) -> str:
+    lines = [f"Most {title} node-hours:", "===",
+             f"{metric:>10} | {'Username':<10} | {'Email':<22}"]
+    for r in rows:
+        nh = f"{r.node_hours:g}"
+        lines.append(f"{nh:>10} | {r.username:<10} | {r.email:<22}")
+    return "\n".join(lines)
+
+
+def format_weekly_report(report: WeeklyReport, anonymize: bool = False) -> str:
+    rep = report
+    if anonymize:
+        rep = _anonymized(report)
+    d0 = time.strftime("%m/%d/%Y", time.gmtime(rep.start))
+    d1 = time.strftime("%m/%d/%Y", time.gmtime(rep.end))
+    parts = [f"This report covers activity between {d0} and {d1}.", ""]
+    parts.append(_section("Low GPULOAD", "GPULOAD", rep.low_gpu))
+    parts.append("")
+    parts.append(_section("Low CORELOAD", "CORELOAD", rep.low_cpu))
+    parts.append("")
+    parts.append(_section("High CORELOAD", "CORELOAD", rep.high_cpu))
+    return "\n".join(parts)
+
+
+def _anonymized(report: WeeklyReport) -> WeeklyReport:
+    def anon(rows):
+        return [ReportRow(f"user{i+1:02d}", f"user{i+1:02d}@ll.mit.edu",
+                          r.node_hours) for i, r in enumerate(rows)]
+    return WeeklyReport(report.start, report.end, anon(report.low_gpu),
+                        anon(report.low_cpu), anon(report.high_cpu))
+
+
+@dataclasses.dataclass
+class Email:
+    to: str
+    subject: str
+    body: str
+
+
+DOC_LINKS = ("https://supercloud.mit.edu/optimizing-your-jobs "
+             "(resource-utilization guide)")
+
+
+def notification_email(row: ReportRow, category: str,
+                       advice: Optional[str] = None) -> Email:
+    """The judicious weekly outreach email (paper §V-B)."""
+    what = {
+        "low_gpu": "low GPU utilization",
+        "low_cpu": "low CPU utilization",
+        "high_cpu": "sustained CPU overload",
+    }[category]
+    body = (
+        f"Hello {row.username},\n\n"
+        f"Our weekly LLload analytics noticed {what} from your jobs: "
+        f"{row.node_hours:g} node-hours in the last week.\n\n"
+        "How this was generated: LLload snapshots of all running jobs are "
+        "taken every 15 minutes; node-hours below/above the utilization "
+        "thresholds (0.45 low / 1.55 high, normalized) are aggregated per "
+        "user.\n\n")
+    if advice:
+        body += f"Suggestions:\n{advice}\n\n"
+    body += f"Documentation: {DOC_LINKS}\n\n- The LLSC team"
+    return Email(to=row.email,
+                 subject=f"[LLSC] {what} detected for {row.username}",
+                 body=body)

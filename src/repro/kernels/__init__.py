@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot spots + pure-jnp oracles.
+
+The paper (LLload) has no kernel-level contribution — these kernels belong
+to the serving/training substrate the monitoring system observes: flash
+attention (GQA prefill), SSD intra-chunk (Mamba-2), fused (gated) RMSNorm.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

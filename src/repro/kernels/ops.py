@@ -1,0 +1,80 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python per grid cell, validating kernel logic against the
+ref.py oracles.  On TPU the same calls compile to Mosaic.  The model code
+can route through these via ``use_pallas=True`` call sites.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ssd as _ssd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    """q [B,H,S,D]; k,v [B,Hk,T,D] -> [B,H,S,D].  Forward-only kernel."""
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=_on_cpu())
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention_diff(q, k, v, causal, block_q, block_k):
+    """Differentiable flash attention: Pallas kernel forward, exact
+    reference-math backward (recompute; a fused backward kernel is the
+    natural TPU follow-up)."""
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_k=block_k)
+
+
+def _fad_fwd(q, k, v, causal, block_q, block_k):
+    out = flash_attention(q, k, v, causal=causal, block_q=block_q,
+                          block_k=block_k)
+    return out, (q, k, v)
+
+
+def _fad_bwd(causal, block_q, block_k, res, g):
+    from repro.kernels.ref import attention_ref
+
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: attention_ref(q_, k_, v_,
+                                                      causal=causal),
+                     q, k, v)
+    return vjp(g)
+
+
+flash_attention_diff.defvjp(_fad_fwd, _fad_bwd)
+
+
+def flash_attention_bshd(q, k, v, *, causal: bool = True, block_q=128,
+                         block_k=128):
+    """Layout adapter for model code: q [B,S,H,D]; k,v [B,T,Hk,D]."""
+    o = flash_attention_diff(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                             v.swapaxes(1, 2), causal, block_q, block_k)
+    return o.swapaxes(1, 2)
+
+
+@jax.jit
+def rmsnorm(x, scale):
+    return _rn.rmsnorm(x, scale, interpret=_on_cpu())
+
+
+@jax.jit
+def gated_rmsnorm(y, z, scale):
+    return _rn.gated_rmsnorm(y, z, scale, interpret=_on_cpu())
+
+
+@jax.jit
+def ssd_intra_chunk(x, dt, A, B, C):
+    return _ssd.ssd_intra_chunk(x, dt, A, B, C, interpret=_on_cpu())

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """q [B,H,S,D]; k,v [B,Hk,T,D] (GQA: H = G*Hk).  Full softmax."""
+    B, H, S, D = q.shape
+    Hk, T = k.shape[1], k.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, Hk, G, S, D)
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bhgsd,bhtd->bhgst", qg, k,
+                   preferred_element_type=F32) * scale
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgst,bhtd->bhgsd", w.astype(v.dtype), v)
+    return o.reshape(B, H, S, D)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    xf = x.astype(F32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(F32)).astype(x.dtype)
+
+
+def gated_rmsnorm_ref(y, z, scale, eps: float = 1e-5):
+    """Mamba-2 gated norm: RMSNorm(y * silu(z))."""
+    h = y.astype(F32) * jax.nn.silu(z.astype(F32))
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    return (h * jax.lax.rsqrt(var + eps) * scale.astype(F32)).astype(y.dtype)
+
+
+def ssd_intra_chunk_ref(x, dt, A, B, C):
+    """Intra-chunk SSD (one chunk, diagonal block only).
+
+    x [b,l,h,p]; dt [b,l,h] (>0); A [h] (<0); B,C [b,l,g,n].
+    Returns y_diag [b,l,h,p]: sum_{j<=i} C_i.B_j exp(sum_{j<k<=i} dtA) x_j dt_j.
+    """
+    b, l, h, p = x.shape
+    g = B.shape[2]
+    hg = h // g
+    dtA = dt.astype(F32) * A.astype(F32)[None, None, :]      # [b,l,h]
+    cs = jnp.cumsum(dtA, axis=1)
+    diff = cs[:, :, None, :] - cs[:, None, :, :]             # [b,i,j,h]
+    idx = jnp.arange(l)
+    L = jnp.where((idx[:, None] >= idx[None, :])[None, :, :, None],
+                  jnp.exp(diff), 0.0)                        # [b,i,j,h]
+    xdt = x.astype(F32) * dt.astype(F32)[..., None]
+    Lg = L.reshape(b, l, l, g, hg)
+    xg = xdt.reshape(b, l, g, hg, p)
+    y = jnp.einsum("bign,bjgn,bijgh,bjghp->bighp",
+                   C.astype(F32), B.astype(F32), Lg, xg)
+    return y.reshape(b, l, h, p).astype(x.dtype)

@@ -1,0 +1,19 @@
+"""Launchers and distribution: mesh, sharding rules, dry-run, fault tolerance.
+
+NOTE: repro.launch.dryrun is intentionally NOT imported here — importing it
+sets XLA_FLAGS to 512 host devices, which must only happen for dry-runs.
+"""
+from repro.launch.fault import (CrashInjector, StragglerDetector,
+                                resume_latest)
+from repro.launch.mesh import (axis_size, fsdp_axes, make_host_mesh,
+                               make_production_mesh, tp_axis)
+from repro.launch.sharding import (ShardingOptions, batch_shardings,
+                                   cache_shardings, hint_context,
+                                   param_shardings)
+
+__all__ = [
+    "CrashInjector", "StragglerDetector", "resume_latest", "axis_size",
+    "fsdp_axes", "make_host_mesh", "make_production_mesh", "tp_axis",
+    "ShardingOptions", "batch_shardings", "cache_shardings", "hint_context",
+    "param_shardings",
+]

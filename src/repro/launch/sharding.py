@@ -1,0 +1,215 @@
+"""Sharding rules: parameter / optimizer / cache / batch partition specs.
+
+Strategy (DESIGN.md §3):
+  * 2D weight sharding — the "input" dim of every matmul weight shards over
+    the FSDP axes (pod+data), the "output"/head/ff dim over the tensor axis
+    (`model`) — when divisible; non-divisible dims stay replicated (GQA kv
+    heads, odd head counts).
+  * MoE expert weights shard experts over `model` (expert parallelism; the
+    dispatch buffer hint turns this into an all-to-all), d_model over FSDP.
+  * Activations shard batch over FSDP; optional sequence-parallel hint
+    shards the sequence dim over `model` between blocks (perf lever).
+  * Decode caches shard batch over FSDP when divisible, else the time axis
+    (long_500k batch=1 -> context-parallel decode).
+
+Everything degrades gracefully: any dim not divisible by its axis is
+replicated, so every (arch x shape x mesh) combination lowers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, fsdp_axes, tp_axis
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+
+def _fits(mesh, dim: int, axes) -> bool:
+    return axes is not None and dim % axis_size(mesh, axes) == 0
+
+
+def _axes_or_none(mesh, dim: int, axes):
+    return axes if _fits(mesh, dim, axes) else None
+
+
+class ShardingOptions:
+    """Global toggles used by the perf hillclimb."""
+    sequence_parallel: bool = False
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+_IN_OUT = {  # name -> which dim is the "input" (fsdp) dim for 2D weights
+    "wq": 0, "wk": 0, "wv": 0, "wq_a": 0, "wq_b": 0, "wkv_a": 0,
+    "wkv_b": 0, "w1": 0, "w3": 0, "in_proj": 0, "lm_head": 0,
+    "wo": 1, "w2": 1, "out_proj": 1,
+}
+
+
+def _param_spec_leaf(mesh, name: str, shape, stacked: bool):
+    fsdp = fsdp_axes(mesh)
+    tp = tp_axis(mesh)
+    core = shape[1:] if stacked else shape
+    spec: list = [None] * len(core)
+
+    from repro.models.perf_flags import current as _perf
+
+    if name == "embed":
+        # [V, D]: vocab over model (TP softmax/gather), D over FSDP
+        spec = [_axes_or_none(mesh, core[0], tp),
+                _axes_or_none(mesh, core[1], fsdp)]
+    elif name == "router" and len(core) == 2:
+        spec = [_axes_or_none(mesh, core[0], fsdp), None]
+    elif len(core) == 3 and name in ("w1", "w3"):
+        if _perf().moe_fsdp_tp:
+            # experts replicated; 2D-shard (d_model->fsdp, d_ff->tp):
+            # the combine gather stays local to each model shard (§Perf)
+            spec = [None, _axes_or_none(mesh, core[1], fsdp),
+                    _axes_or_none(mesh, core[2], tp)]
+        else:
+            # MoE experts [E, D, F]: expert-parallel over model
+            spec = [_axes_or_none(mesh, core[0], tp),
+                    _axes_or_none(mesh, core[1], fsdp), None]
+    elif len(core) == 3 and name == "w2":
+        if _perf().moe_fsdp_tp:
+            spec = [None, _axes_or_none(mesh, core[1], tp),
+                    _axes_or_none(mesh, core[2], fsdp)]
+        else:
+            spec = [_axes_or_none(mesh, core[0], tp), None,
+                    _axes_or_none(mesh, core[2], fsdp)]
+    elif name == "conv_w":
+        spec = [None, _axes_or_none(mesh, core[1], tp)]
+    elif len(core) == 2 and name in _IN_OUT:
+        in_dim = _IN_OUT[name]
+        out_dim = 1 - in_dim
+        spec[in_dim] = _axes_or_none(mesh, core[in_dim], fsdp)
+        spec[out_dim] = _axes_or_none(mesh, core[out_dim], tp)
+    elif len(core) >= 1 and core[-1] > 1024:
+        # large 1-D (biases over big ff dims): shard over tp
+        spec[-1] = _axes_or_none(mesh, core[-1], tp)
+
+    if stacked:
+        spec = [None] + spec  # leading n_periods axis
+    return P(*spec)
+
+
+def param_shardings(mesh, params_tree):
+    """Tree of NamedShardings matching a params (or TrainState) tree."""
+
+    def walk(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        name = str(keys[-1]) if keys else ""
+        stacked = any(str(k) in ("blocks", "enc_blocks") for k in keys[:-1])
+        spec = _param_spec_leaf(mesh, name, leaf.shape, stacked)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(walk, params_tree)
+
+
+# --------------------------------------------------------------------------
+# batches / caches
+# --------------------------------------------------------------------------
+
+
+def batch_shardings(mesh, batch_tree):
+    """tokens/labels [B,S], frontend [B,P,D] -> batch over FSDP axes."""
+    fsdp = fsdp_axes(mesh)
+
+    def leaf(x):
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = [None] * x.ndim
+        spec[0] = _axes_or_none(mesh, x.shape[0], fsdp)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf, batch_tree)
+
+
+_CACHE_HEAD_DIM = {"k": 2, "v": 2}  # [B,T,Hk,dh] (after batch dim)
+
+
+def cache_shardings(mesh, cache_tree):
+    from repro.models.perf_flags import current as _perf
+
+    fsdp = fsdp_axes(mesh)
+    tp = tp_axis(mesh)
+
+    def walk(path, leaf):
+        keys = [str(getattr(p, "key", p)) for p in path]
+        name = keys[-1]
+        stacked = "blocks" in keys[:-1]
+        off = 1 if stacked else 0
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        bdim = off
+        if _fits(mesh, shape[bdim], fsdp):
+            spec[bdim] = fsdp
+        elif name in ("k", "v", "ckv", "krope") and len(shape) > bdim + 1 \
+                and _fits(mesh, shape[bdim + 1], fsdp):
+            spec[bdim + 1] = fsdp  # context-parallel decode (batch=1)
+        if name in ("k", "v", "xk", "xv") and len(shape) >= bdim + 4:
+            hdim = bdim + 2
+            if _fits(mesh, shape[hdim], tp):
+                spec[hdim] = tp
+            elif _perf().decode_cache_seq_shard and spec[bdim + 1] is None \
+                    and _fits(mesh, shape[bdim + 1], tp):
+                # heads don't divide the model axis: context-parallel the
+                # cache time dim instead (§Perf decode lever)
+                spec[bdim + 1] = tp
+        if name in ("ckv", "krope") and _perf().decode_cache_seq_shard \
+                and len(shape) > bdim + 1 and spec[bdim + 1] is None \
+                and _fits(mesh, shape[bdim + 1], tp):
+            spec[bdim + 1] = tp
+        if name == "ssd" and len(shape) >= bdim + 3:
+            # [B, G, HG, P, N]: heads-per-group over tp
+            if _fits(mesh, shape[bdim + 2], tp):
+                spec[bdim + 2] = tp
+        if name == "conv" and _fits(mesh, shape[-1], tp):
+            spec[-1] = tp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(walk, cache_tree)
+
+
+# --------------------------------------------------------------------------
+# activation hints for the model interior
+# --------------------------------------------------------------------------
+
+
+def activation_hints(mesh) -> dict:
+    from repro.models.perf_flags import current as _perf
+
+    fsdp = fsdp_axes(mesh)
+    tp = tp_axis(mesh)
+    seq = tp if (ShardingOptions.sequence_parallel
+                 or _perf().sequence_parallel) else None
+    moe_expert_axis = None if _perf().moe_fsdp_tp else tp
+    return {
+        # [B, S, D]
+        "activation": P(fsdp, seq, None),
+        # [G, E, C, d] MoE dispatch buffer: groups over FSDP; experts over TP
+        # only under expert parallelism (baseline)
+        "moe_dispatch": P(fsdp, moe_expert_axis, None, None),
+        # [G, T, d] MoE combine output (psum lands here under moe_fsdp_tp)
+        "moe_out": P(fsdp, None, None),
+        # CE-loss head weight resharding (loss_weight_gather lever):
+        # untied [D, V]: replicate D, keep V on tp; tied [V, D]: same idea
+        "loss_head": P(None, tp),
+        "loss_head_tied": P(tp, None),
+        # [B, C, V] logits chunk
+        "logits": P(fsdp, None, tp),
+    }
+
+
+def hint_context(mesh):
+    from repro.models.sharding_hints import hint_context as _ctx
+
+    return _ctx(activation_hints(mesh), mesh)

@@ -1,0 +1,10 @@
+from repro.models.model import (count_params, count_params_analytic,
+                                decode_step, forward_hidden, init_cache,
+                                init_params, init_params_shape, lm_loss,
+                                model_flops, prefill)
+
+__all__ = [
+    "count_params", "count_params_analytic", "decode_step", "forward_hidden",
+    "init_cache", "init_params", "init_params_shape", "lm_loss",
+    "model_flops", "prefill",
+]

@@ -1,0 +1,94 @@
+"""Perf-iteration toggles (EXPERIMENTS.md §Perf).
+
+Each flag is one hillclimb lever with an explicit hypothesis; the dry-run
+records which flags were active so before/after roofline terms are
+attributable.  Defaults = paper-faithful baseline (all off).
+
+  loss_weight_gather    Force the CE-loss head weight to gather its FSDP
+                        shards (replicate the contraction dim) instead of
+                        letting GSPMD all-reduce [B,C,V]-sized partial
+                        logits over the data axis.  Hypothesis: collective
+                        bytes drop by ~tokens*vocab*4B per step for
+                        vocab-heavy archs (gemma3, qwen*, internvl2).
+  banded_local          Sliding-window layers slice KV to the band instead
+                        of masking full-length scores.  Hypothesis: local-
+                        attention FLOPs/bytes drop ~S/(chunk+window)x
+                        (gemma3 5/6 layers at S=32k: ~10x on those layers).
+  decode_cache_seq_shard  Shard decode KV caches over the model axis on the
+                        *time* dim (context-parallel decode) when heads
+                        don't divide.  Hypothesis: per-device cache bytes
+                        (and the decode memory term) drop ~16x for GQA
+                        archs with kv_heads < 16 (phi3: kv=10).
+  moe_fsdp_tp           MoE experts replicated on the expert dim, 2D-
+                        sharded on (d_model->fsdp, d_ff->tp) instead of
+                        expert-parallel.  The combine gather becomes local;
+                        collective cost becomes FSDP weight gathers +
+                        an output psum GSPMD can defer through the combine.
+                        Hypothesis: MoE collective bytes drop >5x
+                        (qwen3-moe train: 2.25TB/dev baseline).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+_state = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfFlags:
+    loss_weight_gather: bool = False
+    banded_local: bool = False
+    decode_cache_seq_shard: bool = False
+    moe_fsdp_tp: bool = False
+    # Expert-parallel MoE with explicit shard_map all-to-all (moe_a2a.py).
+    # Hypothesis: replaces the per-layer buffer-sized all-reduce/all-gather
+    # pairs of the GSPMD combine with ~2*T_loc*k*d-byte all-to-alls.
+    moe_a2a: bool = False
+    # Megatron-style sequence parallelism: activations between blocks are
+    # sharded [B->fsdp, S->model, D].  Hypothesis: the TP backward dx
+    # all-reduces (f32 [B_loc,S,D] per matmul) become all-gather +
+    # reduce-scatter pairs and norms/elementwise run on S/16 tokens.
+    sequence_parallel: bool = False
+    # Gradient compression: force block-boundary cotangents to bf16
+    # (identity forward, cast backward).  The HLO ranking shows f32
+    # [B_loc, S, D] activation-gradient collectives; hypothesis: those
+    # halve, cutting the remaining train collective term up to ~2x.
+    bf16_grads: bool = False
+    # Route global causal attention through the Pallas flash kernel
+    # (kernels/flash_attention.py) — the TPU deployment path for the
+    # memory-bound prefill cells (on CPU it runs in interpret mode; the
+    # model-level equivalence test uses small shapes).
+    flash_kernel: bool = False
+    # Remat policy override: save matmul outputs (checkpoint_dots) instead
+    # of full recompute.  Hypothesis: backward recompute FLOPs (~1/4 of the
+    # train step) disappear at the cost of storing matmul activations.
+    remat_dots: bool = False
+
+    @classmethod
+    def parse(cls, csv: str) -> "PerfFlags":
+        names = [s.strip() for s in csv.split(",") if s.strip()]
+        known = {f.name for f in dataclasses.fields(cls)}
+        bad = set(names) - known
+        if bad:
+            raise ValueError(f"unknown perf flags {bad}; known: {known}")
+        return cls(**{n: True for n in names})
+
+    def active(self) -> list:
+        return [f.name for f in dataclasses.fields(self)
+                if getattr(self, f.name)]
+
+
+def current() -> PerfFlags:
+    return getattr(_state, "flags", None) or PerfFlags()
+
+
+@contextlib.contextmanager
+def perf_flags(flags: PerfFlags):
+    prev = getattr(_state, "flags", None)
+    _state.flags = flags
+    try:
+        yield
+    finally:
+        _state.flags = prev

@@ -1,0 +1,56 @@
+"""Scan wrapper that can unroll into a Python loop.
+
+Why: ``compiled.cost_analysis()`` counts a while-loop body ONCE, not
+times-trip-count, so any FLOP/byte/collective statistics extracted from a
+scanned model are wrong by ~n_layers.  The dry-run therefore lowers *cost
+probes* with all scans unrolled (UNROLL flag), while the production path
+keeps ``lax.scan`` (small HLO, fast compiles, native remat).
+
+Use ``repro.models.scan_util.scan`` everywhere a model loops.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+
+_state = threading.local()
+
+
+def unrolling() -> bool:
+    return getattr(_state, "unroll", False)
+
+
+@contextlib.contextmanager
+def unroll_scans(enable: bool = True):
+    prev = unrolling()
+    _state.unroll = enable
+    try:
+        yield
+    finally:
+        _state.unroll = prev
+
+
+def scan(f, init, xs, length=None):
+    """Drop-in for jax.lax.scan(f, init, xs) honoring the unroll flag."""
+    if not unrolling():
+        return jax.lax.scan(f, init, xs, length=length)
+    if xs is None:
+        n = length
+        slices = [None] * n
+    else:
+        leaves = jax.tree.leaves(xs)
+        n = leaves[0].shape[0] if leaves else length
+        slices = [jax.tree.map(lambda a: a[i], xs) for i in range(n)]
+    carry = init
+    ys = []
+    for i in range(n):
+        carry, y = f(carry, slices[i])
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys_stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys_stacked = None
+    return carry, ys_stacked

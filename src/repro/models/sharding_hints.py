@@ -1,0 +1,47 @@
+"""Sharding hints: model code stays mesh-agnostic.
+
+``repro.launch.sharding`` installs a hint table (name -> PartitionSpec) for
+the active mesh; model code calls :func:`shard_hint` at the few places where
+GSPMD needs help (MoE dispatch buffers, block boundaries).  Outside a mesh
+context the hints are no-ops, so tests/smoke runs on one CPU device are
+unaffected.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_state = threading.local()
+
+
+def current_hints():
+    return getattr(_state, "hints", None)
+
+
+@contextlib.contextmanager
+def hint_context(hints: dict, mesh=None):
+    """hints: name -> PartitionSpec; with `mesh`, constraints bind to it."""
+    prev = current_hints()
+    _state.hints = (mesh, hints)
+    try:
+        yield
+    finally:
+        _state.hints = prev
+
+
+def shard_hint(x, name: str):
+    state = current_hints()
+    if state is None:
+        return x
+    mesh, hints = state
+    if not hints or name not in hints:
+        return x
+    spec = hints[name]
+    # Trim the spec to the array rank (specs are written for full-rank views).
+    if len(spec) > x.ndim:
+        spec = jax.sharding.PartitionSpec(*tuple(spec)[: x.ndim])
+    target = (jax.sharding.NamedSharding(mesh, spec) if mesh is not None
+              else spec)
+    return jax.lax.with_sharding_constraint(x, target)

@@ -1,0 +1,5 @@
+from repro.roofline import hw
+from repro.roofline.analysis import (RooflineTerms, parse_collective_bytes,
+                                     roofline)
+
+__all__ = ["hw", "RooflineTerms", "parse_collective_bytes", "roofline"]

@@ -1,0 +1,118 @@
+"""Three-term roofline from compiled dry-run artifacts (no real hardware).
+
+    compute    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory     = HLO_bytes / HBM_bw               (per chip)
+    collective = collective_bytes / ICI link bw   (per chip)
+
+``cost_analysis()`` on the SPMD-partitioned executable reports *per-device*
+FLOPs/bytes, so per-chip rates apply directly (equivalent to the global
+form HLO_FLOPs_total / (chips x peak)).
+
+collective_bytes comes from parsing the partitioned HLO: we sum, per
+collective op, the bytes each chip moves over ICI (ring-cost convention:
+all-reduce 2x, all-gather/reduce-scatter ~1x payload, all-to-all and
+collective-permute 1x).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.roofline import hw
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_TUPLE_COLLECTIVE_RE = re.compile(
+    r"=\s+\((.*?)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * hw.DTYPE_BYTES.get(dtype, 4)
+
+
+_COST_FACTOR = {
+    "all-reduce": 2.0,          # ring: 2(n-1)/n ~= 2
+    "all-gather": 1.0,          # receives (n-1)/n of output ~= output
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes moved per collective kind, summed over ops."""
+    out: Dict[str, float] = {k: 0.0 for k in _COST_FACTOR}
+    counts: Dict[str, int] = {k: 0 for k in _COST_FACTOR}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if m:
+            dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+            size = _shape_bytes(dtype, dims)
+        else:
+            mt = _TUPLE_COLLECTIVE_RE.search(line)
+            if not mt:
+                continue
+            kind = mt.group(2)
+            size = sum(_shape_bytes(d, s)
+                       for d, s in _SHAPE_RE.findall(mt.group(1)))
+        out[kind] += size * _COST_FACTOR[kind]
+        counts[kind] += 1
+    out["_op_counts"] = counts  # type: ignore
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    collective_bytes: float      # per-device ICI bytes (cost-weighted)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float = 0.0     # 6ND / 2ND convention
+    useful_ratio: float = 0.0    # model_flops_per_device / HLO flops
+    collective_breakdown: Optional[dict] = None
+
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self) -> float:
+        """compute_term / max(all terms): 1.0 == compute-bound at peak."""
+        b = self.bound_s()
+        return self.compute_s / b if b > 0 else 0.0
+
+
+def roofline(cost: dict, hlo_text: str, *, n_devices: int,
+             model_flops_global: float = 0.0) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collective_bytes(hlo_text)
+    breakdown = {k: v for k, v in coll.items() if k != "_op_counts"}
+    coll_bytes = sum(breakdown.values())
+    compute_s = flops / hw.PEAK_FLOPS_BF16
+    memory_s = hbm / hw.HBM_BW
+    coll_s = coll_bytes / hw.ICI_BW_PER_LINK
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf_dev = model_flops_global / max(n_devices, 1)
+    return RooflineTerms(
+        flops=flops, hbm_bytes=hbm, collective_bytes=coll_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        dominant=dominant, model_flops=model_flops_global,
+        useful_ratio=(mf_dev / flops) if flops else 0.0,
+        collective_breakdown={**breakdown,
+                              "op_counts": coll.get("_op_counts")},
+    )

@@ -1,0 +1,5 @@
+from repro.serve.engine import (Completion, EngineConfig, Request,
+                                ServeEngine, overload_decision)
+
+__all__ = ["Completion", "EngineConfig", "Request", "ServeEngine",
+           "overload_decision"]

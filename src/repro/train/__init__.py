@@ -1,0 +1,16 @@
+from repro.train.checkpoint import (latest_step, list_checkpoints,
+                                    restore_checkpoint, save_checkpoint)
+from repro.train.data import DataConfig, SyntheticLM
+from repro.train.optimizer import AdamWConfig, AdamWState, adamw_update, init_opt_state
+from repro.train.train_step import (TrainState, default_opt_cfg,
+                                    init_train_state, init_train_state_shape,
+                                    make_train_step)
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = [
+    "latest_step", "list_checkpoints", "restore_checkpoint",
+    "save_checkpoint", "DataConfig", "SyntheticLM", "AdamWConfig",
+    "AdamWState", "adamw_update", "init_opt_state", "TrainState",
+    "default_opt_cfg", "init_train_state", "init_train_state_shape",
+    "make_train_step", "Trainer", "TrainerConfig",
+]

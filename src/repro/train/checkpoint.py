@@ -1,0 +1,126 @@
+"""Checkpoint save/restore: atomic, mesh-independent, retention-managed.
+
+Arrays are stored *unsharded* with logical tree paths as npz keys, so a
+checkpoint written on one mesh restores onto any other (elastic re-scaling:
+the loader re-shards on load).  Writes are atomic (tmp + rename) so a
+preempted node never leaves a torn checkpoint — the restart path picks the
+latest complete step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":
+            # npz has no bf16 codec; bf16 -> f32 is lossless and the loader
+            # casts back to the template dtype.
+            arr = arr.astype(np.float32)
+        out[jax.tree_util.keystr(path)] = arr
+    return out
+
+
+_async_state = {"thread": None}
+
+
+def save_checkpoint_async(ckpt_dir: str, step: int, state: Any,
+                          extra: Optional[dict] = None, keep: int = 3):
+    """Non-blocking checkpoint: the write happens on a background thread so
+    the train loop overlaps I/O with the next step (jax arrays are
+    immutable, so reading them off-thread is safe).  At most one write is
+    in flight; a new save joins the previous one first."""
+    import threading
+
+    wait_pending_checkpoints()
+    t = threading.Thread(target=save_checkpoint,
+                         args=(ckpt_dir, step, state, extra, keep),
+                         daemon=True)
+    _async_state["thread"] = t
+    t.start()
+    return t
+
+
+def wait_pending_checkpoints():
+    t = _async_state.get("thread")
+    if t is not None and t.is_alive():
+        t.join()
+    _async_state["thread"] = None
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state: Any,
+                    extra: Optional[dict] = None, keep: int = 3):
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp-step-{step}")
+    final = os.path.join(ckpt_dir, f"step-{step:09d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    np.savez(os.path.join(tmp, "arrays.npz"), **_flatten(state))
+    meta = {"step": step, **(extra or {})}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+    _apply_retention(ckpt_dir, keep)
+
+
+def _apply_retention(ckpt_dir: str, keep: int):
+    steps = sorted(list_checkpoints(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step-{s:09d}"),
+                      ignore_errors=True)
+
+
+def list_checkpoints(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step-") and not name.startswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "meta.json")):
+                out.append(int(name.split("-")[1]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = list_checkpoints(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, state_template: Any,
+                       shardings=None):
+    """Restore into the structure of ``state_template``; optionally re-shard
+    with a matching tree of NamedShardings (elastic re-meshing)."""
+    path = os.path.join(ckpt_dir, f"step-{step:09d}")
+    with np.load(os.path.join(path, "arrays.npz")) as zf:
+        arrays = {k: zf[k] for k in zf.files}
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+
+    flat_t = jax.tree_util.tree_flatten_with_path(state_template)
+    leaves = []
+    for kpath, leaf in flat_t[0]:
+        key = jax.tree_util.keystr(kpath)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        leaves.append(arr)
+    state = jax.tree_util.tree_unflatten(flat_t[1], leaves)
+    if shardings is not None:
+        state = jax.device_put(state, shardings)
+    return state, meta

@@ -1,0 +1,105 @@
+"""AdamW with global-norm clipping and schedules, pure JAX.
+
+Master params stay fp32; moments use ``cfg.opt_dtype`` (bf16 for the 398B
+jamba so optimizer state fits pod HBM; fp32 elsewhere).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    moment_dtype: str = "float32"
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(F32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def init_opt_state(params, cfg: AdamWConfig) -> AdamWState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(F32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms, biases, scalars."""
+    name = str(path[-1]) if path else ""
+    return not any(s in name for s in ("scale", "norm", "bias", "A_log",
+                                       "dt_bias", "'D'"))
+
+
+def adamw_update(params, grads, state: AdamWState, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    bc1 = 1 - cfg.b1 ** step.astype(F32)
+    bc2 = 1 - cfg.b2 ** step.astype(F32)
+    dt = jnp.dtype(cfg.moment_dtype)
+
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    decay_flags = {jax.tree_util.keystr(path): _decay_mask(path)
+                   for path, _ in flat_p}
+
+    def upd(path, p, g, m, v):
+        g = g.astype(F32) * scale
+        m2 = cfg.b1 * m.astype(F32) + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v.astype(F32) + (1 - cfg.b2) * jnp.square(g)
+        update = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+        if decay_flags.get(jax.tree_util.keystr(path), True):
+            update = update + cfg.weight_decay * p.astype(F32)
+        p2 = p.astype(F32) - lr * update
+        return p2.astype(p.dtype), m2.astype(dt), v2.astype(dt)
+
+    out = jax.tree_util.tree_map_with_path(
+        lambda path, p, g, m, v: upd(path, p, g, m, v),
+        params, grads, state.m, state.v)
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(step, new_m, new_v), metrics

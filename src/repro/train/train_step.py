@@ -1,0 +1,63 @@
+"""Train step: loss -> grad -> AdamW, with bf16 compute / fp32 master params."""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm_loss
+from repro.train.optimizer import (AdamWConfig, AdamWState, adamw_update,
+                                   init_opt_state)
+
+
+class TrainState(NamedTuple):
+    params: dict          # fp32 master
+    opt: AdamWState
+
+
+def init_train_state(cfg, key, opt_cfg: AdamWConfig) -> TrainState:
+    from repro.models import init_params
+
+    params = init_params(cfg, key, dtype=jnp.float32)
+    return TrainState(params, init_opt_state(params, opt_cfg))
+
+
+def init_train_state_shape(cfg, opt_cfg: AdamWConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_train_state(cfg, k, opt_cfg), key)
+
+
+def cast_params(params, dtype):
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda p: p.astype(dt) if p.dtype == jnp.float32 and p.ndim > 1 else p,
+        params)
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, *, banded: bool = False,
+                    aux_weights=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``aux_weights=(lb, z)`` enables the MoE load-balance / router-z
+    auxiliary losses (ST-MoE defaults: (0.01, 1e-3))."""
+
+    def train_step(state: TrainState, batch: dict):
+        def loss_fn(params):
+            p = cast_params(params, cfg.dtype)
+            return lm_loss(p, cfg, batch["tokens"], batch["labels"],
+                           batch.get("frontend"), banded=banded,
+                           aux_weights=aux_weights)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state.params)
+        new_params, new_opt, metrics = adamw_update(
+            state.params, grads, state.opt, opt_cfg)
+        metrics["loss"] = loss
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def default_opt_cfg(cfg, total_steps: int = 10_000) -> AdamWConfig:
+    return AdamWConfig(moment_dtype=cfg.opt_dtype, total_steps=total_steps)

@@ -1,0 +1,13 @@
+import os
+import sys
+
+# Tests run with PYTHONPATH=src, but make it robust when invoked otherwise.
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from hypothesis import settings
+
+settings.register_profile("repro", max_examples=25, deadline=None)
+settings.load_profile("repro")

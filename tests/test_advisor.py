@@ -1,0 +1,95 @@
+"""Usage characterization (paper §V-B, Figs 7-9) + NPPN recommendation."""
+import random
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.cluster.workloads import (fixed_gpu_job, io_storm_job, low_gpu_job,
+                                     make_llsc_sim, missubmitted_gpu_job,
+                                     thread_oversubscribed_job)
+from repro.core.advisor import characterize_user, recommend_nppn
+
+
+def _sim_with(*jobs):
+    sim = make_llsc_sim()
+    for j in jobs:
+        sim.submit(j)
+    sim.run_until(1800.0)
+    return sim
+
+
+def test_low_gpu_detected_fig7():
+    sim = _sim_with(low_gpu_job("va67890", tasks=4, gpu_frac=0.35))
+    advice = characterize_user(sim.snapshot(), "va67890")
+    kinds = {a.kind for a in advice}
+    assert "low_gpu" in kinds
+    a = next(a for a in advice if a.kind == "low_gpu")
+    assert a.suggested_nppn and a.suggested_nppn >= 2
+    assert "overloading" in a.message
+
+
+def test_missubmission_detected_fig8():
+    sim = _sim_with(missubmitted_gpu_job("rs12345", tasks=3))
+    advice = characterize_user(sim.snapshot(), "rs12345")
+    a = next(a for a in advice if a.kind == "missubmission")
+    # 40-core 2-GPU nodes: fair request is 20 cores/task (the paper's fix)
+    assert a.suggested_cores_per_task == 20
+
+
+def test_fix_improves_packing_fig9():
+    """After the advisor's fix, tasks pack 2/node instead of 1/node."""
+    sim_bad = _sim_with(missubmitted_gpu_job("u", tasks=4))
+    sim_good = _sim_with(fixed_gpu_job("u", tasks=4))
+    bad_nodes = len(sim_bad.snapshot().nodes_by_user().get("u", []))
+    good_nodes = len(sim_good.snapshot().nodes_by_user().get("u", []))
+    assert good_nodes < bad_nodes
+    assert good_nodes == 2 and bad_nodes == 4
+
+
+def test_thread_oversubscription_fig10():
+    sim = _sim_with(thread_oversubscribed_job("user01", tasks=2))
+    advice = characterize_user(sim.snapshot(), "user01")
+    a = next(a for a in advice if a.kind in ("overload", "io_storm"))
+    assert a.kind == "overload"
+    assert "threads" in a.message
+
+
+def test_io_storm_fig11():
+    sim = _sim_with(io_storm_job("user02", tasks=2))
+    advice = characterize_user(sim.snapshot(), "user02")
+    a = next(a for a in advice if a.kind == "io_storm")
+    assert "I/O" in a.message
+
+
+def test_healthy_job_no_advice():
+    from repro.cluster.workloads import ml_training_job
+    sim = _sim_with(ml_training_job("ok", tasks=4, gpu_frac=0.85))
+    advice = characterize_user(sim.snapshot(), "ok")
+    assert advice == []
+
+
+# ----------------------------------------------------------------- NPPN ----
+
+def test_recommend_nppn_paper_case():
+    # Fig 7: gpu load ~0.4, 2GB of 32GB -> load allows 2, memory allows 8+
+    assert recommend_nppn(0.4, 2.0, 32.0) == 2
+    # very low duty -> memory-capped at 8 (LLsub levels)
+    assert recommend_nppn(0.1, 2.0, 32.0) == 8
+    # memory-bound: 20GB of 32GB -> 1
+    assert recommend_nppn(0.4, 20.0, 32.0) == 1
+
+
+@given(st.floats(0.01, 1.0), st.floats(0.1, 32.0))
+def test_recommend_nppn_properties(load, mem):
+    n = recommend_nppn(load, mem, 32.0)
+    assert n in (1, 2, 4, 8)
+    # projected duty cycle stays under ~target
+    assert n * load <= 0.91 or n == 1
+    # projected memory stays under headroom
+    assert n * mem <= 32.0 * 0.9 or n == 1
+
+
+@given(st.floats(0.01, 0.5), st.floats(0.01, 0.5))
+def test_recommend_nppn_monotone_in_load(l1, l2):
+    lo, hi = sorted([l1, l2])
+    assert recommend_nppn(hi, 1.0, 32.0) <= recommend_nppn(lo, 1.0, 32.0)

@@ -1,0 +1,57 @@
+"""The LLload CLI (paper's command surface)."""
+import pytest
+
+from repro.core import cli
+
+
+def test_default_view(capsys):
+    assert cli.main(["--user", "va67890"]) == 0
+    out = capsys.readouterr().out
+    assert "Cluster name: txgreen" in out
+    assert "va67890" in out and "HOSTNAME" in out
+
+
+def test_gpu_flag(capsys):
+    cli.main(["-g", "--user", "va67890"])
+    assert "GPUMEM" in capsys.readouterr().out
+
+
+def test_all_privileged(capsys):
+    cli.main(["--all", "-g", "--user", "admin"])
+    out = capsys.readouterr().out
+    assert "Jupyter notebook jobs:" in out
+    assert "@ll.mit.edu" in out
+
+
+def test_all_unprivileged_scoped(capsys):
+    cli.main(["--all", "--user", "va67890"])
+    out = capsys.readouterr().out
+    assert "Jupyter notebook jobs:" not in out
+    assert "va67890" in out
+
+
+def test_topn(capsys):
+    cli.main(["-t", "3"])
+    out = capsys.readouterr().out
+    assert "sorted by descending order" in out
+    assert len([l for l in out.splitlines() if l.strip()]) >= 4
+
+
+def test_nodelist(capsys):
+    # find a real host via tsv first
+    cli.main(["--tsv"])
+    host = capsys.readouterr().out.splitlines()[1].split("\t")[2]
+    cli.main(["-n", host])
+    out = capsys.readouterr().out
+    assert "Node Information:" in out and host in out
+
+
+def test_tsv(capsys):
+    cli.main(["--tsv"])
+    out = capsys.readouterr().out
+    header = out.splitlines()[0].split("\t")
+    assert header[:3] == ["timestamp", "cluster", "hostname"]
+
+
+def test_live_source(capsys):
+    assert cli.main(["--source", "live", "--user", "nobody"]) == 0

@@ -1,0 +1,98 @@
+"""LLload query engine + formatting (paper Figs 2-5, 10, 11)."""
+import random
+
+import pytest
+
+from repro.cluster.workloads import (make_llsc_sim, paper_scenario,
+                                     low_gpu_job, io_storm_job)
+from repro.core import formatting
+from repro.core.llload import LLload
+from repro.core.metrics import rows_from_tsv
+
+
+@pytest.fixture(scope="module")
+def snap():
+    sim = make_llsc_sim()
+    paper_scenario(sim, random.Random(0))
+    sim.run_until(3600.0)
+    return sim.snapshot()
+
+
+def test_user_view_lists_only_that_users_nodes(snap):
+    ll = LLload(snap)
+    blk = ll.user_view("va67890")
+    assert blk.nodes, "user should hold nodes"
+    owners = snap.nodes_by_user()
+    for n in blk.nodes:
+        assert n.hostname in owners["va67890"]
+
+
+def test_default_output_format_fig2(snap):
+    ll = LLload(snap)
+    out = formatting.format_user_view(snap.cluster, ll.user_view("va67890"))
+    assert out.startswith("Cluster name: txgreen")
+    assert "Username: va67890" in out
+    assert "HOSTNAME" in out and "LOAD" in out and "MEMORY" in out
+    # no GPU columns without -g
+    assert "GPUMEM" not in out
+
+
+def test_gpu_option_adds_gpu_columns_fig3(snap):
+    ll = LLload(snap)
+    out = formatting.format_user_view(snap.cluster, ll.user_view("va67890"),
+                                      gpu=True)
+    assert "GPUS" in out and "GPUMEM" in out
+
+
+def test_all_view_requires_privilege(snap):
+    ll = LLload(snap, privileged_users={"admin"})
+    view = ll.all_view("va67890")  # not privileged: scoped to self
+    assert len(view.users) == 1
+    assert view.users[0].username == "va67890"
+    assert view.jupyter == []
+
+    full = ll.all_view("admin")
+    assert len(full.users) > 1
+    assert full.jupyter, "jupyter summary expected (Fig 4)"
+    assert all("@" in b.email for b in full.users)
+
+
+def test_all_view_gpu_request_tags(snap):
+    ll = LLload(snap, privileged_users={"admin"})
+    view = ll.all_view("admin")
+    tags = [u for e in view.jupyter for u in e.users]
+    assert any("gres:gpu" in t for t in tags), "Fig 4 GPU gres tag"
+
+
+def test_top_loaded_sorted_and_normalized(snap):
+    ll = LLload(snap)
+    rows = ll.top_loaded(5)
+    assert len(rows) == 5
+    loads = [r.avg_load for r in rows]
+    assert loads == sorted(loads, reverse=True)
+    # io storm nodes dominate, normalized load >> 1 (Fig 10)
+    assert loads[0] > 5.0
+    out = formatting.format_top(rows, 5)
+    assert "AVG_LOAD" in out and "CPUS(A/I/O/T)" in out
+
+
+def test_node_detail_shows_jobs_fig11(snap):
+    ll = LLload(snap)
+    top = ll.top_loaded(2)
+    details = ll.node_detail([t.hostname for t in top])
+    assert details
+    out = formatting.format_node_detail(details)
+    assert "JOBID" in out and "START_TIME" in out
+    assert any(d.jobs for d in details)
+
+
+def test_tsv_roundtrip(snap):
+    text = snap.to_tsv()
+    rows = rows_from_tsv(text)
+    assert rows
+    hosts_with_jobs = {h for j in snap.jobs for h in j.nodes}
+    assert {r["hostname"] for r in rows} == hosts_with_jobs
+    for r in rows:
+        n = snap.nodes[r["hostname"]]
+        assert r["cores_total"] == n.cores_total
+        assert abs(r["load"] - n.load) < 1e-3

@@ -1,0 +1,62 @@
+"""Overloading controller: the paper's NPPN 1->2->4->8 policy."""
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.overload import (DeviceObservation, OverloadController,
+                                 packed_throughput_model, NPPN_LEVELS)
+
+
+def _obs(duty, mem=2.0, total=32.0):
+    return DeviceObservation(duty_cycle=duty, mem_used_gb=mem,
+                             mem_total_gb=total)
+
+
+def test_steps_up_one_level_at_a_time():
+    c = OverloadController()
+    for _ in range(4):
+        c.observe(_obs(0.3))
+    d = c.decide(1)
+    assert d.nppn == 2, d.reason
+    # simulate running at 2 with same per-task duty
+    c2 = OverloadController()
+    for _ in range(4):
+        c2.observe(_obs(0.6))
+    assert c2.decide(2).nppn == 4 - 2 or c2.decide(2).nppn in (2, 4)
+
+
+def test_saturation_backs_off():
+    c = OverloadController()
+    for _ in range(8):
+        c.observe(_obs(0.99))
+    d = c.decide(4)
+    assert d.nppn == 2
+    assert "saturated" in d.reason
+
+
+def test_memory_caps_packing():
+    c = OverloadController()
+    for _ in range(4):
+        c.observe(_obs(0.1, mem=20.0, total=32.0))
+    assert c.decide(1).nppn == 1
+
+
+def test_no_observations_keeps_level():
+    c = OverloadController()
+    assert c.decide(4).nppn == 4
+
+
+@given(st.floats(0.05, 1.0), st.sampled_from(NPPN_LEVELS))
+def test_packed_throughput_model_properties(duty, nppn):
+    t1 = packed_throughput_model(duty, 1)
+    tn = packed_throughput_model(duty, nppn)
+    assert tn <= nppn * t1 + 1e-9          # no superlinear speedup
+    assert tn <= 1.0                       # device duty saturates
+    if duty * nppn <= 1.0 and nppn <= 2:
+        assert tn >= t1 - 1e-9             # packing low-duty work helps
+
+
+def test_paper_fig7_scenario_gain():
+    """GPU duty 0.35 job: NPPN=2 nearly doubles throughput (paper claim)."""
+    t1 = packed_throughput_model(0.35, 1)
+    t2 = packed_throughput_model(0.35, 2)
+    assert t2 / t1 > 1.8

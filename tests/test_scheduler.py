@@ -1,0 +1,110 @@
+"""Whole-node scheduling policy invariants (paper §III)."""
+import random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster.job import JobSpec, TaskProfile
+from repro.cluster.node import make_nodes
+from repro.cluster.scheduler import Scheduler
+from repro.cluster.workloads import make_llsc_sim, jupyter_job
+
+
+def _sched(n=8, gpus=0):
+    return Scheduler(make_nodes("d", n, cores=48, gpus=gpus,
+                                gpu_mem_gb=32.0 if gpus else 0.0))
+
+
+def _job(user, tasks=1, cores=8, gpus=0, tpg=1, mem=4.0, excl=False):
+    return JobSpec(user, "j", n_tasks=tasks, cores_per_task=cores,
+                   gpus_per_task=gpus, tasks_per_gpu=tpg, exclusive=excl,
+                   profile=TaskProfile(mem_gb=mem))
+
+
+def test_whole_node_isolation():
+    s = _sched(2)
+    s.submit(_job("alice", tasks=1, cores=8), 0.0)
+    s.submit(_job("bob", tasks=1, cores=8), 0.0)
+    s.tick(1.0)
+    assert s.check_whole_node_invariant() == []
+    nodes_a = {h for j in s.running if j.spec.username == "alice"
+               for h in j.hostnames}
+    nodes_b = {h for j in s.running if j.spec.username == "bob"
+               for h in j.hostnames}
+    assert nodes_a.isdisjoint(nodes_b)
+
+
+def test_same_user_packs_same_node():
+    s = _sched(4)
+    s.submit(_job("alice", tasks=1, cores=8), 0.0)
+    s.tick(1.0)
+    s.submit(_job("alice", tasks=1, cores=8), 1.0)
+    s.tick(2.0)
+    hosts = {h for j in s.running for h in j.hostnames}
+    assert len(hosts) == 1, "second job of same user should co-locate"
+
+
+def test_pending_when_no_capacity():
+    s = _sched(1)
+    s.submit(_job("a", tasks=1, cores=48), 0.0)
+    s.submit(_job("b", tasks=1, cores=1), 0.0)
+    s.tick(1.0)
+    assert len(s.running) == 1 and len(s.pending) == 1
+    # completion frees the node
+    s.tick(1e9)
+    assert any(j.spec.username == "b" for j in s.running)
+
+
+def test_exclusive_job():
+    s = _sched(2)
+    s.submit(_job("a", tasks=1, cores=1, excl=True), 0.0)
+    s.submit(_job("a", tasks=1, cores=1), 0.0)
+    s.tick(1.0)
+    excl_host = next(j for j in s.running if j.spec.exclusive).hostnames[0]
+    other_host = next(j for j in s.running
+                      if not j.spec.exclusive).hostnames[0]
+    assert excl_host != other_host
+
+
+def test_gpu_overloading_slots():
+    s = _sched(1, gpus=2)
+    # NPPN=4: 8 tasks over 2 GPUs on one node
+    s.submit(_job("a", tasks=8, cores=4, gpus=1, tpg=4), 0.0)
+    s.tick(1.0)
+    assert len(s.running) == 1
+    ns = list(s.nodes.values())[0]
+    occ = ns.gpu_occupancy()
+    assert sum(occ.values()) == 8 and max(occ.values()) == 4
+
+
+def test_shared_partition_allows_multiuser():
+    sim = make_llsc_sim(n_cpu=4, n_gpu=2)
+    # both need the single GPU jupyter host -> must co-reside (shared policy)
+    sim.submit(jupyter_job("u1", gpu=True))
+    sim.submit(jupyter_job("u2", gpu=True))
+    sim.run_until(120.0)
+    snap = sim.snapshot()
+    hosts_u1 = set(snap.nodes_by_user().get("u1", []))
+    hosts_u2 = set(snap.nodes_by_user().get("u2", []))
+    assert hosts_u1 & hosts_u2, "jupyter partition should share nodes"
+    assert sim.sched.check_whole_node_invariant() == []
+
+
+@settings(max_examples=20)
+@given(st.lists(st.tuples(
+    st.sampled_from(["u1", "u2", "u3", "u4"]),
+    st.integers(1, 4),     # tasks
+    st.integers(1, 48),    # cores per task
+    st.floats(1.0, 64.0),  # mem
+), min_size=1, max_size=20))
+def test_whole_node_invariant_random_streams(jobs):
+    s = _sched(6)
+    t = 0.0
+    for (u, tasks, cores, mem) in jobs:
+        s.submit(_job(u, tasks=tasks, cores=cores, mem=mem), t)
+        t += 60.0
+        s.tick(t)
+        assert s.check_whole_node_invariant() == []
+        # resource caps hold
+        for ns in s.nodes.values():
+            assert ns.cores_used <= ns.spec.cores
+            assert ns.mem_used() <= ns.spec.mem_gb + 1e-6

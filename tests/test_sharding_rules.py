@@ -1,0 +1,98 @@
+"""Sharding rule engine: specs valid (divisible or replicated) per arch."""
+import types
+
+import pytest
+
+from repro.configs import get_config
+from repro.configs.archs import ASSIGNED
+from repro.launch.sharding import _param_spec_leaf
+
+
+class FakeMesh:
+    """Duck-typed mesh for spec-rule tests (no devices needed)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+        self.size = 1
+        for v in shape.values():
+            self.size *= v
+
+
+SP = FakeMesh({"data": 16, "model": 16})
+MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _axis_size(mesh, axes):
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _norm(entry):
+    """PartitionSpec normalizes 1-tuples to bare strings."""
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry) if entry is not None else None
+
+
+@pytest.mark.parametrize("mesh", [SP, MP], ids=["single-pod", "multi-pod"])
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_param_specs_divisible(mesh, arch):
+    """Every sharded dim must divide by its axis product."""
+    import jax
+    from repro.models import init_params_shape
+
+    cfg = get_config(arch)
+    tree = init_params_shape(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    n_sharded = 0
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", p)) for p in path]
+        name = keys[-1]
+        stacked = any(k in ("blocks", "enc_blocks") for k in keys[:-1])
+        spec = _param_spec_leaf(mesh, name, leaf.shape, stacked)
+        assert len(spec) <= len(leaf.shape)
+        for dim, axes in zip(leaf.shape, tuple(spec)):
+            if axes is not None:
+                n_sharded += 1
+                assert dim % _axis_size(mesh, axes) == 0, \
+                    f"{arch} {name} {leaf.shape} spec={spec}"
+    assert n_sharded > 0, f"{arch}: nothing sharded at all"
+
+
+@pytest.mark.parametrize("arch", ["phi3-medium-14b", "qwen3-moe-30b-a3b",
+                                  "jamba-1.5-large-398b"])
+def test_big_matrices_are_2d_sharded(arch):
+    """The large weights must shard on two axes (FSDP x TP) on single pod."""
+    import jax
+    from repro.models import init_params_shape
+
+    cfg = get_config(arch)
+    tree = init_params_shape(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    found_2d = 0
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", p)) for p in path]
+        stacked = any(k in ("blocks", "enc_blocks") for k in keys[:-1])
+        spec = _param_spec_leaf(SP, keys[-1], leaf.shape, stacked)
+        n_axes = sum(1 for s in tuple(spec) if s is not None)
+        if n_axes >= 2:
+            found_2d += 1
+    assert found_2d >= 3, f"{arch}: expected 2D-sharded weights"
+
+
+def test_moe_experts_on_model_axis():
+    spec = _param_spec_leaf(SP, "w1", (128, 2048, 768), False)
+    assert _norm(tuple(spec)[0]) == ("model",)   # expert parallelism
+    assert _norm(tuple(spec)[1]) == ("data",)    # fsdp on d_model
+
+
+def test_nondivisible_replicates():
+    spec = _param_spec_leaf(SP, "wq", (2560, 1234), False)
+    assert tuple(spec)[1] is None  # 1234 % 16 != 0 -> replicated
+    assert _norm(tuple(spec)[0]) == ("data",)

@@ -1,0 +1,89 @@
+"""End-to-end system behaviour: the full paper loop against a REAL JAX job.
+
+Story (paper Fig 1 + §V-B):
+  1. a JAX training job runs with LLload self-reporting hooks,
+  2. LLload observes its utilization through the collector,
+  3. the weekly-style analysis flags low device duty,
+  4. the advisor recommends overloading (NPPN analog),
+  5. the serving engine applies it (more concurrent streams) and
+     aggregate throughput improves.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core.collector import (JaxJobRegistry, LocalHostCollector,
+                                  publish_step_utilization)
+from repro.core.overload import OverloadController, DeviceObservation
+from repro.models import init_params
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def test_training_job_visible_to_llload():
+    JaxJobRegistry.global_registry().remove("e2e")
+    cfg = reduced_config("llsc-100m")
+    t = Trainer(cfg, TrainerConfig(steps=4, batch_size=2, seq_len=32,
+                                   log_every=0, job_name="e2e"))
+    t.run(resume=False)
+    agg = JaxJobRegistry.global_registry().aggregate()
+    assert agg.n_devices >= 1
+    assert agg.duty_cycle >= 0.0
+    assert agg.step_time_s > 0
+
+    snap = LocalHostCollector(username="tester").snapshot()
+    node = list(snap.nodes.values())[0]
+    assert node.cores_total >= 1
+    assert node.load >= 0.0
+    JaxJobRegistry.global_registry().remove("e2e")
+
+
+def test_loss_decreases_on_copy_task():
+    cfg = reduced_config("llsc-100m")
+    t = Trainer(cfg, TrainerConfig(steps=40, batch_size=4, seq_len=64,
+                                   log_every=0, monitor_every=0))
+    out = t.run(resume=False)
+    first = np.mean(out["losses"][:5])
+    last = np.mean(out["losses"][-5:])
+    assert last < first - 0.1, f"no learning: {first:.3f} -> {last:.3f}"
+
+
+def test_overloading_improves_throughput():
+    """The paper's central claim, measured on real decode workloads:
+    co-scheduling more low-duty request streams raises aggregate tok/s."""
+    cfg = reduced_config("llsc-100m")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    def run_with_slots(slots, n_req=8):
+        eng = ServeEngine(cfg, params, EngineConfig(
+            slots=slots, max_seq_len=64, monitor=False))
+        rng = np.random.default_rng(0)
+        for i in range(n_req):
+            eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 8)
+                               .astype(np.int32), max_new_tokens=8))
+        stats = eng.run()
+        return stats
+
+    s1 = run_with_slots(1)
+    s4 = run_with_slots(4)
+    assert s4["steps"] < s1["steps"], "packing must cut decode steps"
+    # per-token work is batched: fewer steps for the same tokens
+    assert s4["tokens"] == s1["tokens"]
+
+
+def test_controller_converges_to_saturation():
+    """Closed loop: simulated device with per-task duty 0.3 under the
+    controller reaches NPPN that saturates near target without exceeding."""
+    ctl = OverloadController()
+    nppn = 1
+    per_task = 0.3
+    for _ in range(6):
+        duty = min(1.0, per_task * nppn)
+        for _ in range(4):
+            ctl.observe(DeviceObservation(duty_cycle=duty, mem_used_gb=0.5,
+                                          mem_total_gb=32.0))
+        nppn = ctl.decide(nppn).nppn
+    assert nppn == 2  # 0.3 * 2 = 0.6; stepping to 4 would exceed 0.9 target

@@ -1,0 +1,126 @@
+"""MoE auxiliary losses, sampling, async checkpointing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.configs.base import MoESpec
+from repro.models import init_params, lm_loss
+from repro.models.moe import (init_moe, load_balance_loss, moe_aux_losses,
+                              router_z_loss, _route)
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.train import checkpoint as ck
+from repro.train.train_step import default_opt_cfg, init_train_state, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------ aux losses ---
+
+def test_load_balance_loss_uniform_is_one():
+    """Perfectly uniform router => loss == 1 (Switch normalization)."""
+    T, E = 512, 8
+    logits = jnp.zeros((T, E))
+    idx = jnp.stack([jnp.arange(T) % E, (jnp.arange(T) + 1) % E], axis=1)
+    spec = MoESpec(n_experts=E, top_k=2, d_ff_expert=8)
+    assert float(load_balance_loss(logits, idx, spec)) == pytest.approx(1.0)
+
+
+def test_load_balance_loss_collapse_is_high():
+    T, E = 256, 8
+    logits = jnp.full((T, E), -10.0).at[:, 0].set(10.0)
+    idx = jnp.zeros((T, 2), jnp.int32)
+    spec = MoESpec(n_experts=E, top_k=2, d_ff_expert=8)
+    assert float(load_balance_loss(logits, idx, spec)) > 4.0
+
+
+def test_router_z_loss_penalizes_scale():
+    small = router_z_loss(jnp.ones((64, 8)))
+    big = router_z_loss(100.0 * jnp.ones((64, 8)))
+    assert float(big) > float(small)
+
+
+def test_lm_loss_with_aux_weights_differs_and_trains():
+    cfg = reduced_config("granite-moe-1b-a400m")
+    params = init_params(cfg, KEY)
+    k1, k2 = jax.random.split(KEY)
+    tokens = jax.random.randint(k1, (2, 24), 0, cfg.vocab_size)
+    labels = jax.random.randint(k2, (2, 24), 0, cfg.vocab_size)
+    plain = float(lm_loss(params, cfg, tokens, labels))
+    withaux = float(lm_loss(params, cfg, tokens, labels,
+                            aux_weights=(0.01, 1e-3)))
+    assert withaux > plain  # aux losses are non-negative, ~1.0 at init
+
+    opt_cfg = default_opt_cfg(cfg, total_steps=5)
+    state = init_train_state(cfg, KEY, opt_cfg)
+    step = make_train_step(cfg, opt_cfg, aux_weights=(0.01, 1e-3))
+    state2, metrics = step(state, {"tokens": tokens, "labels": labels})
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+
+
+def test_aux_weights_ignored_for_dense():
+    cfg = reduced_config("qwen1.5-4b")
+    params = init_params(cfg, KEY)
+    k1, k2 = jax.random.split(KEY)
+    tokens = jax.random.randint(k1, (2, 16), 0, cfg.vocab_size)
+    labels = jax.random.randint(k2, (2, 16), 0, cfg.vocab_size)
+    a = float(lm_loss(params, cfg, tokens, labels))
+    b = float(lm_loss(params, cfg, tokens, labels, aux_weights=(0.01, 1e-3)))
+    assert a == pytest.approx(b)
+
+
+# -------------------------------------------------------------- sampling ---
+
+def _engine(greedy, top_k=0, temp=1.0, seed=0):
+    cfg = reduced_config("llsc-100m")
+    params = init_params(cfg, KEY)
+    return cfg, ServeEngine(cfg, params, EngineConfig(
+        slots=2, max_seq_len=64, monitor=False, greedy=greedy,
+        top_k=top_k, temperature=temp, seed=seed))
+
+
+def test_sampling_deterministic_by_seed():
+    outs = []
+    for _ in range(2):
+        cfg, eng = _engine(greedy=False, top_k=8, temp=1.0, seed=7)
+        rng = np.random.default_rng(0)
+        for i in range(3):
+            eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 8)
+                               .astype(np.int32), max_new_tokens=5))
+        eng.run()
+        outs.append({c.request_id: c.tokens for c in eng.completions})
+    assert outs[0] == outs[1]
+
+
+def test_sampling_differs_from_greedy():
+    results = {}
+    for greedy in (True, False):
+        cfg, eng = _engine(greedy=greedy, top_k=0, temp=5.0, seed=3)
+        rng = np.random.default_rng(0)
+        for i in range(3):
+            eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 8)
+                               .astype(np.int32), max_new_tokens=6))
+        eng.run()
+        results[greedy] = {c.request_id: c.tokens for c in eng.completions}
+    assert results[True] != results[False]
+
+
+# --------------------------------------------------------- async ckpt ------
+
+def test_async_checkpoint_trainer(tmp_path):
+    cfg = reduced_config("llsc-100m")
+    t = Trainer(cfg, TrainerConfig(steps=6, batch_size=2, seq_len=32,
+                                   ckpt_dir=str(tmp_path), ckpt_every=2,
+                                   async_ckpt=True, log_every=0,
+                                   monitor_every=0))
+    t.run(resume=False)
+    ck.wait_pending_checkpoints()
+    steps = ck.list_checkpoints(str(tmp_path))
+    assert 6 in steps and len(steps) >= 2
+    # resumable
+    template = jax.eval_shape(t._init_state)
+    state, meta = ck.restore_checkpoint(str(tmp_path), 6, template)
+    assert meta["step"] == 6

@@ -1,0 +1,103 @@
+"""Weekly node-hours analysis (paper §V-A, Fig 6) + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.analysis import (HIGH_THRESHOLD, LOW_THRESHOLD,
+                                 weekly_analysis)
+from repro.core.report import format_weekly_report, notification_email
+
+
+def _row(user, load, cores, gpu_load, gpus, ts=0.0):
+    return {"timestamp": ts, "cluster": "tx", "hostname": f"n-{user}",
+            "username": user, "jobtype": "batch", "cores_total": cores,
+            "cores_used": cores, "load": load, "mem_total_gb": 192.0,
+            "mem_used_gb": 10.0, "gpus_total": gpus, "gpus_used": gpus,
+            "gpu_load": gpu_load, "gpu_mem_total_gb": 64.0 * gpus,
+            "gpu_mem_used_gb": 1.0}
+
+
+def test_thresholds_match_paper():
+    assert LOW_THRESHOLD == 0.45
+    assert HIGH_THRESHOLD == pytest.approx(1.55)
+
+
+def test_categories():
+    rows = [
+        _row("lowgpu", load=30.0, cores=48, gpu_load=0.2, gpus=2),
+        _row("lowcpu", load=5.0, cores=48, gpu_load=0.9, gpus=2),
+        _row("highcpu", load=100.0, cores=48, gpu_load=0.0, gpus=0),
+        _row("fine", load=40.0, cores=48, gpu_load=0.9, gpus=2),
+    ]
+    rep = weekly_analysis(rows)
+    assert [r.username for r in rep.low_gpu] == ["lowgpu"]
+    assert "lowcpu" in [r.username for r in rep.low_cpu]
+    assert [r.username for r in rep.high_cpu] == ["highcpu"]
+    # 1 snapshot = 0.25 node-hours (15-minute cadence)
+    assert rep.low_gpu[0].node_hours == pytest.approx(0.25)
+
+
+def test_cpu_only_nodes_never_low_gpu():
+    rows = [_row("u", load=1.0, cores=48, gpu_load=0.0, gpus=0)]
+    rep = weekly_analysis(rows)
+    assert rep.low_gpu == []
+
+
+def test_top10_cap_and_order():
+    rows = []
+    for i in range(15):
+        for _ in range(i + 1):  # user i accrues (i+1) snapshots
+            rows.append(_row(f"u{i:02d}", load=1.0, cores=48, gpu_load=0.1,
+                             gpus=2))
+    rep = weekly_analysis(rows)
+    assert len(rep.low_gpu) == 10
+    hours = [r.node_hours for r in rep.low_gpu]
+    assert hours == sorted(hours, reverse=True)
+    assert rep.low_gpu[0].username == "u14"
+
+
+def test_report_rendering_fig6():
+    rows = [_row("user01", load=30.0, cores=48, gpu_load=0.2, gpus=2)]
+    rep = weekly_analysis(rows)
+    text = format_weekly_report(rep, anonymize=True)
+    assert "Most Low GPULOAD node-hours:" in text
+    assert "user01@ll.mit.edu" in text
+    assert "This report covers activity between" in text
+
+
+def test_notification_email():
+    rows = [_row("user01", load=30.0, cores=48, gpu_load=0.2, gpus=2)]
+    rep = weekly_analysis(rows)
+    mail = notification_email(rep.low_gpu[0], "low_gpu", advice="overload")
+    assert mail.to == "user01@ll.mit.edu"
+    assert "every 15 minutes" in mail.body
+    assert "overload" in mail.body
+
+
+@given(st.lists(st.tuples(
+    st.sampled_from(["u1", "u2", "u3"]),
+    st.floats(0.0, 200.0),          # load
+    st.floats(0.0, 1.0),            # gpu load
+    st.booleans(),                  # has gpu
+), min_size=1, max_size=60))
+def test_node_hours_conservation(entries):
+    """Every snapshot row lands in at most one CPU bucket; totals add up."""
+    rows = [_row(u, load=l, cores=48, gpu_load=g, gpus=2 if has else 0)
+            for (u, l, g, has) in entries]
+    rep = weekly_analysis(rows)
+    low = sum(r.node_hours for r in rep.low_cpu)
+    high = sum(r.node_hours for r in rep.high_cpu)
+    n_low = sum(1 for r in rows if r["load"] / 48 < LOW_THRESHOLD)
+    n_high = sum(1 for r in rows if r["load"] / 48 > HIGH_THRESHOLD)
+    # <=: top-10 truncation can only drop hours (3 users -> never drops)
+    assert low == pytest.approx(0.25 * n_low)
+    assert high == pytest.approx(0.25 * n_high)
+
+
+@given(st.floats(0.0, 0.44), st.floats(1.56, 50.0))
+def test_threshold_boundaries(low_gpu, high_norm):
+    rows = [_row("a", load=low_gpu * 48, cores=48, gpu_load=low_gpu, gpus=2),
+            _row("b", load=high_norm * 48, cores=48, gpu_load=0.9, gpus=2)]
+    rep = weekly_analysis(rows)
+    assert any(r.username == "a" for r in rep.low_gpu)
+    assert any(r.username == "b" for r in rep.high_cpu)
