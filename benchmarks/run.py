@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows (one per benchmark).
 | llload_all_2048          | Fig 4 privileged --all -g view               |
 | llload_topn_4096         | Fig 5/10 top-N overloaded nodes              |
 | snapshot_tsv_2048        | 15-min archive write format (§V-A)           |
+| bus_read_{cached,uncached} | TelemetryBus snapshot-query throughput     |
 | weekly_analysis_1wk      | Fig 6 weekly node-hours aggregation          |
 | monitor_overhead         | "light-weight" claim: train loop +hooks      |
 | overloading_nppn_*       | §V-B GPU overloading throughput (measured)   |
@@ -92,6 +93,29 @@ def bench_snapshot_tsv():
     snap = sim.snapshot()
     us = _timeit(snap.to_tsv)
     _row("snapshot_tsv_2048n", us)
+
+
+def bench_bus_reads():
+    """Snapshot-query throughput through the TelemetryBus: a cached read
+    (within TTL) vs. a read that must re-collect from the source."""
+    from repro.monitor import TelemetryBus
+
+    sim = _sim(512)
+
+    cached = TelemetryBus(ttl_s=1e9)
+    cached.register(sim.as_source(name="cached"))
+    cached.read("cached")                        # warm the cache
+    us_hit = _timeit(lambda: cached.read("cached"), repeat=5, warmup=1)
+    st = cached.stats("cached")
+    _row("bus_read_cached_512n", us_hit,
+         f"reads_per_s={1e6 / us_hit:.0f};collections={st.collections}")
+
+    uncached = TelemetryBus(ttl_s=0.0)           # every read re-collects
+    uncached.register(sim.as_source(name="uncached"))
+    us_miss = _timeit(lambda: uncached.read("uncached"), repeat=5, warmup=1)
+    _row("bus_read_uncached_512n", us_miss,
+         f"reads_per_s={1e6 / us_miss:.0f};"
+         f"cache_speedup={us_miss / max(us_hit, 1e-9):.0f}x")
 
 
 def bench_weekly_analysis():
@@ -234,6 +258,7 @@ BENCHES = [
     bench_llload_all,
     bench_topn,
     bench_snapshot_tsv,
+    bench_bus_reads,
     bench_weekly_analysis,
     bench_monitor_overhead,
     bench_overloading,

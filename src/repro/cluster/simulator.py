@@ -3,6 +3,7 @@ LLload :class:`ClusterSnapshot`s from running task profiles."""
 from __future__ import annotations
 
 import math
+import zlib
 from typing import Dict, List, Optional
 
 from repro.cluster.job import JobSpec
@@ -34,6 +35,18 @@ class ClusterSim:
         while self.t < t:
             self.step(min(dt, t - self.t))
 
+    def as_source(self, *, advance_s: float = 0.0,
+                  name: Optional[str] = None,
+                  interval_hint: Optional[float] = None):
+        """This sim as a :class:`repro.monitor.source.MetricSource`.
+
+        ``advance_s`` > 0 makes each poll advance simulated time, so a
+        TelemetryBus watching the sim sees the cluster evolve."""
+        from repro.monitor.source import SimSource
+
+        return SimSource(self, advance_s=advance_s, name=name,
+                         interval_hint=interval_hint)
+
     # ----------------------------------------------------------- snapshot
     def snapshot(self) -> ClusterSnapshot:
         nodes: Dict[str, NodeSnapshot] = {}
@@ -43,11 +56,14 @@ class ClusterSim:
             gpu_duty = 0.0
             gpu_mem = 0.0
             gpus_used = set()
+            # stable per-host jitter seed: str.__hash__ is randomized per
+            # process (PYTHONHASHSEED), which made snapshots non-reproducible
+            hseed = zlib.crc32(host.encode())
             for task in ns.tasks:
-                load += task.profile.cpu_load(self.t, hash(host) % 97)
+                load += task.profile.cpu_load(self.t, hseed % 97)
                 for g in task.gpu_slots:
                     gpus_used.add(g)
-                gpu_duty += task.profile.gpu_load(self.t, hash(host) % 89)
+                gpu_duty += task.profile.gpu_load(self.t, hseed % 89)
                 gpu_mem += task.profile.gpu_mem_gb
             # duty cycle saturates at 1.0 per device (the overloading payoff:
             # several low-duty tasks sum toward full utilization)

@@ -2,27 +2,33 @@
 
 Snapshot model, query engine/CLI, 15-minute archive, weekly node-hours
 analysis, usage characterization (advisor) and the overloading (NPPN)
-controller.  See DESIGN.md §1 for the paper-to-module map.
+controller.  See DESIGN.md §1 for the paper-to-module map; the pluggable
+source/bus layer that feeds all of it is :mod:`repro.monitor`
+(DESIGN.md §5).
 """
 from repro.core.analysis import (HIGH_THRESHOLD, LOW_THRESHOLD, WeeklyReport,
-                                 weekly_analysis)
-from repro.core.advisor import (Advice, characterize_all, characterize_user,
+                                 rows_from_snapshots, weekly_analysis)
+from repro.core.advisor import (Advice, characterize_all,
+                                characterize_snapshots, characterize_user,
                                 recommend_nppn)
-from repro.core.archive import PeriodicArchiver, SnapshotArchive
+from repro.core.archive import (ArchiveSubscriber, PeriodicArchiver,
+                                SnapshotArchive)
 from repro.core.collector import (DeviceUtilization, JaxJobRegistry,
                                   LocalHostCollector, SimCollector,
                                   publish_step_utilization)
-from repro.core.llload import LLload
+from repro.core.llload import LLload, NodeDetailReport
 from repro.core.metrics import ClusterSnapshot, JobRecord, NodeSnapshot
 from repro.core.overload import (NPPN_LEVELS, OverloadController,
                                  OverloadDecision, packed_throughput_model)
 
 __all__ = [
     "HIGH_THRESHOLD", "LOW_THRESHOLD", "WeeklyReport", "weekly_analysis",
-    "Advice", "characterize_all", "characterize_user", "recommend_nppn",
-    "SnapshotArchive", "PeriodicArchiver", "DeviceUtilization",
-    "JaxJobRegistry", "LocalHostCollector", "SimCollector",
-    "publish_step_utilization", "LLload", "ClusterSnapshot", "JobRecord",
-    "NodeSnapshot", "NPPN_LEVELS", "OverloadController", "OverloadDecision",
+    "rows_from_snapshots", "Advice", "characterize_all",
+    "characterize_snapshots", "characterize_user", "recommend_nppn",
+    "ArchiveSubscriber", "SnapshotArchive", "PeriodicArchiver",
+    "DeviceUtilization", "JaxJobRegistry", "LocalHostCollector",
+    "SimCollector", "publish_step_utilization", "LLload",
+    "NodeDetailReport", "ClusterSnapshot", "JobRecord", "NodeSnapshot",
+    "NPPN_LEVELS", "OverloadController", "OverloadDecision",
     "packed_throughput_model",
 ]

@@ -14,7 +14,7 @@ Reproduces the LLSC team's diagnostic playbook:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Iterable, List, Optional, Sequence
 
 from repro.core.analysis import HIGH_THRESHOLD, LOW_THRESHOLD
 from repro.core.metrics import ClusterSnapshot, NodeSnapshot
@@ -126,3 +126,32 @@ def characterize_all(snap: ClusterSnapshot) -> List[Advice]:
     for user in sorted(snap.nodes_by_user()):
         out.extend(characterize_user(snap, user))
     return out
+
+
+def characterize_snapshots(snaps: Iterable[ClusterSnapshot],
+                           username: Optional[str] = None) -> List[Advice]:
+    """Characterize from a snapshot *history* (any MetricSource replay or
+    the bus ring buffer) instead of a single point in time.
+
+    Advice comes from the latest snapshot; each item gains a
+    ``persistence`` evidence field — the fraction of snapshots in which
+    the same (kind, user) diagnosis held — so one noisy sample doesn't
+    trigger an email.
+    """
+    snaps = list(snaps)
+    if not snaps:
+        return []
+    latest = snaps[-1]
+    advice = (characterize_user(latest, username) if username is not None
+              else characterize_all(latest))
+    if len(snaps) > 1:
+        counts = {}
+        for snap in snaps:
+            for a in (characterize_user(snap, username)
+                      if username is not None else characterize_all(snap)):
+                counts[(a.kind, a.username)] = \
+                    counts.get((a.kind, a.username), 0) + 1
+        for a in advice:
+            a.evidence["persistence"] = \
+                counts.get((a.kind, a.username), 0) / len(snaps)
+    return advice

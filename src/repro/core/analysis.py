@@ -13,9 +13,11 @@ top-10 users per category.  Implemented columnar (numpy) so a week of
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, Iterable, List, Sequence, Union
 
 import numpy as np
+
+from repro.core.metrics import ClusterSnapshot, rows_from_tsv
 
 LOW_THRESHOLD = 0.45
 HIGH_THRESHOLD = 1.0 + (1.0 - LOW_THRESHOLD)   # = 1.55
@@ -49,6 +51,15 @@ class ColumnarRows:
     timestamps: np.ndarray      # [N] float
 
 
+def rows_from_snapshots(snaps: Iterable[ClusterSnapshot]) -> List[dict]:
+    """Flatten snapshots (from any MetricSource / bus history) into the
+    archive row schema the weekly analysis aggregates."""
+    rows: List[dict] = []
+    for snap in snaps:
+        rows.extend(rows_from_tsv(snap.to_tsv()))
+    return rows
+
+
 def columnarize(rows: Sequence[dict]) -> ColumnarRows:
     users = sorted({r["username"] for r in rows})
     uidx = {u: i for i, u in enumerate(users)}
@@ -80,11 +91,17 @@ def _top10(node_hours: np.ndarray, users: List[str], emails: Dict[str, str]
     return out
 
 
-def weekly_analysis(rows: Sequence[dict], emails: Dict[str, str] = None,
+def weekly_analysis(rows: Union[Sequence[dict],
+                                Iterable[ClusterSnapshot]],
+                    emails: Dict[str, str] = None,
                     interval_hours: float = SNAPSHOT_INTERVAL_HOURS,
                     low_threshold: float = LOW_THRESHOLD) -> WeeklyReport:
-    """rows: archive rows (one per node-user-snapshot)."""
+    """rows: archive rows (one per node-user-snapshot), or an iterable of
+    :class:`ClusterSnapshot` from any source / the bus ring buffer."""
     emails = emails or {}
+    rows = list(rows)
+    if rows and isinstance(rows[0], ClusterSnapshot):
+        rows = rows_from_snapshots(rows)
     if not rows:
         return WeeklyReport(0, 0, [], [], [])
     col = columnarize(rows)

@@ -2,7 +2,16 @@
 
 Every SNAPSHOT_INTERVAL a ``LLload -q --all --tsv`` equivalent is appended
 to per-day TSV files under an archive directory (the paper stores these on
-the central parallel FS; each cluster keeps its own archive)."""
+the central parallel FS; each cluster keeps its own archive).
+
+Two ways to drive capture:
+
+  * :class:`PeriodicArchiver` — the legacy pull loop (caller ticks it).
+  * :class:`ArchiveSubscriber` — a :class:`~repro.monitor.bus.TelemetryBus`
+    subscriber: register it once and every bus collection that crosses the
+    cadence is archived, per source.  Replaying an archive back out is
+    :meth:`SnapshotArchive.as_source` (DESIGN.md §5).
+"""
 from __future__ import annotations
 
 import os
@@ -54,6 +63,43 @@ class SnapshotArchive:
                         continue
                     out.append(row)
         return out
+
+    def as_source(self, *, loop: bool = False):
+        """Replay this archive as a :class:`repro.monitor.source.MetricSource`
+        (one snapshot per archived timestamp)."""
+        from repro.monitor.source import ArchiveSource
+
+        return ArchiveSource(self.files(), loop=loop)
+
+
+class ArchiveSubscriber:
+    """TelemetryBus subscriber that archives on the 15-minute cadence.
+
+        bus.subscribe(ArchiveSubscriber(archive))
+
+    Snapshots arrive from every bus collection; one per ``interval_s`` of
+    *snapshot* time is appended (per source, so a multi-source bus keeps
+    each cluster's cadence independent).  ``source_name`` restricts the
+    subscriber to one source.
+    """
+
+    def __init__(self, archive: SnapshotArchive,
+                 interval_s: float = SNAPSHOT_INTERVAL_S,
+                 source_name: Optional[str] = None):
+        self.archive = archive
+        self.interval_s = interval_s
+        self.source_name = source_name
+        self._last: dict = {}
+
+    def __call__(self, source_name: str, snap: ClusterSnapshot) -> bool:
+        if self.source_name is not None and source_name != self.source_name:
+            return False
+        last = self._last.get(source_name)
+        if last is not None and snap.timestamp - last < self.interval_s:
+            return False
+        self.archive.append(snap)
+        self._last[source_name] = snap.timestamp
+        return True
 
 
 class PeriodicArchiver:

@@ -1,35 +1,68 @@
 """The ``LLload`` command (paper Figs 2-5, 10, 11).
 
-Usage (mirrors the paper's flags):
+Usage (mirrors the paper's flags, plus the streaming extensions):
 
     python -m repro.core.cli [-g] [--all] [-t N] [-n HOST,HOST] [--tsv] [-q]
-                             [--user USER] [--source sim|live]
+                             [--user USER] [--source sim|live|jobs|archive]
+                             [--cluster NAME[,NAME]] [--archive-dir DIR]
+                             [--watch] [--interval S] [--frames N]
 
 ``--source sim`` (default) runs against the simulated LLSC cluster populated
 with the paper's workload mixture; ``--source live`` collects from this
-host + any in-process JAX jobs.
+host + any in-process JAX jobs; ``--source jobs`` shows only the in-process
+JAX job registry; ``--source archive --archive-dir DIR`` replays archived
+TSV snapshots.  Sources are built by name through the
+:mod:`repro.monitor` registry — ``--cluster a,b`` fans the chosen source
+out over several clusters and merges the snapshots.  ``--watch`` streams
+the selected view through the TelemetryBus (cached reads between polls).
 """
 from __future__ import annotations
 
 import argparse
-import random
 import sys
 
-from repro.cluster.workloads import make_llsc_sim, paper_scenario
 from repro.core import formatting
-from repro.core.collector import LocalHostCollector, SimCollector
 from repro.core.llload import LLload
+from repro.monitor import TelemetryBus, build_source, default_registry, watch
 
 PRIVILEGED = {"admin", "root", "hpcteam"}
 
 
 def build_snapshot(source: str):
-    if source == "live":
-        return LocalHostCollector().snapshot()
-    sim = make_llsc_sim()
-    paper_scenario(sim, random.Random(0))
-    sim.run_until(3600.0)
-    return SimCollector(sim).snapshot()
+    """Back-compat helper: one snapshot from a registry source name."""
+    return build_source(source).snapshot()
+
+
+def render_view(snap, args) -> str:
+    """Render the view selected by the parsed flags (shared by the
+    one-shot and --watch paths)."""
+    ll = LLload(snap, privileged_users=PRIVILEGED)
+    if args.tsv:
+        return snap.to_tsv()
+    if args.t is not None:
+        return formatting.format_top(ll.top_loaded(args.t), args.t)
+    if args.n is not None:
+        hosts = [h.strip() for h in args.n.split(",") if h.strip()]
+        rep = ll.node_detail_report(hosts)
+        return formatting.format_node_detail(rep.details, rep.missing)
+    if args.all_users:
+        return formatting.format_all_view(ll.all_view(args.user), args.gpu)
+    blk = ll.user_view(args.user)
+    return formatting.format_user_view(snap.cluster, blk, args.gpu)
+
+
+def _make_source(args):
+    clusters = [c.strip() for c in (args.cluster or "").split(",")
+                if c.strip()]
+    kwargs = {}
+    if args.source == "archive":
+        if not args.archive_dir:
+            raise SystemExit("--source archive requires --archive-dir")
+        kwargs["root"] = args.archive_dir
+    if args.watch and args.source == "sim":
+        # advance simulated time on each poll so the stream evolves
+        kwargs["advance_s"] = 60.0
+    return build_source(args.source, clusters=clusters, **kwargs)
 
 
 def main(argv=None) -> int:
@@ -47,27 +80,49 @@ def main(argv=None) -> int:
                     help="tab-separated output (archive format)")
     ap.add_argument("-q", action="store_true", help="quiet (no banner)")
     ap.add_argument("--user", default="ab12345")
-    ap.add_argument("--source", default="sim", choices=["sim", "live"])
+    ap.add_argument("--source", default="sim",
+                    choices=default_registry().names())
+    ap.add_argument("--cluster", default=None, metavar="NAME[,NAME]",
+                    help="cluster selection; several names fan out and "
+                         "merge (multi-cluster view)")
+    ap.add_argument("--archive-dir", default=None,
+                    help="TSV archive root for --source archive")
+    ap.add_argument("--watch", action="store_true",
+                    help="stream the view, refreshing every --interval s")
+    ap.add_argument("--interval", type=float, default=2.0, metavar="S",
+                    help="watch refresh interval (seconds)")
+    ap.add_argument("--frames", type=int, default=None, metavar="N",
+                    help="stop watch after N frames (default: until ^C)")
     args = ap.parse_args(argv)
 
-    snap = build_snapshot(args.source)
-    ll = LLload(snap, privileged_users=PRIVILEGED)
+    source = _make_source(args)
 
+    if args.watch:
+        bus = TelemetryBus(ttl_s=3.0 * args.interval)
+        bus.register(source)
+        ws = watch(bus, lambda snap: render_view(snap, args),
+                   source_name=source.name, interval_s=args.interval,
+                   max_frames=args.frames)
+        if not args.q:
+            try:
+                print(f"watch: {ws.frames} frames, {ws.reads} reads, "
+                      f"{ws.collections} collections")
+            except BrokenPipeError:
+                pass      # downstream pager closed mid-stream
+        return 0
+
+    snap = source.snapshot()
     if args.tsv:
-        sys.stdout.write(snap.to_tsv())
+        sys.stdout.write(render_view(snap, args))
         return 0
-    if args.t is not None:
-        print(formatting.format_top(ll.top_loaded(args.t), args.t))
-        return 0
-    if args.n is not None:
+    # legacy flag precedence: -t wins over -n (matches render_view/--watch)
+    if args.n is not None and args.t is None:
         hosts = [h.strip() for h in args.n.split(",") if h.strip()]
-        print(formatting.format_node_detail(ll.node_detail(hosts)))
-        return 0
-    if args.all_users:
-        print(formatting.format_all_view(ll.all_view(args.user), args.gpu))
-        return 0
-    blk = ll.user_view(args.user)
-    print(formatting.format_user_view(snap.cluster, blk, args.gpu))
+        ll = LLload(snap, privileged_users=PRIVILEGED)
+        rep = ll.node_detail_report(hosts)
+        print(formatting.format_node_detail(rep.details, rep.missing))
+        return 1 if (rep.missing and not rep.details) else 0
+    print(render_view(snap, args))
     return 0
 
 

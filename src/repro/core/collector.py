@@ -1,6 +1,6 @@
 """Snapshot collectors.
 
-Three sources, one schema (:class:`ClusterSnapshot`):
+Three collectors, one schema (:class:`ClusterSnapshot`):
 
   * :class:`SimCollector` — the cluster simulator (Slurm stand-in).
   * :class:`LocalHostCollector` — this host via /proc + psutil (the paper's
@@ -11,6 +11,12 @@ Three sources, one schema (:class:`ClusterSnapshot`):
     calls out): each training/serving step publishes achieved-FLOP/s and
     HBM occupancy; the collector turns that into the `gpu_load` /
     `gpu_mem_*` fields.  See DESIGN.md §2.
+
+The uniform source layer lives in :mod:`repro.monitor` (DESIGN.md §5):
+these collectors are wrapped as ``MetricSource``s there, and new
+consumers should go through the :class:`~repro.monitor.bus.TelemetryBus`
+rather than wiring collectors together by hand.  This module keeps the
+original names as thin shims for backward compatibility.
 """
 from __future__ import annotations
 
@@ -143,15 +149,32 @@ class JaxJobRegistry:
             return dict(self._entries)
 
     def aggregate(self) -> DeviceUtilization:
+        """Combine all co-resident jobs into one per-device view.
+
+        Jobs in one process share the same physical devices (that is the
+        whole point of overloading), so their duty cycles *add* per
+        device.  The combined duty is the device-weighted sum normalized
+        by the device count::
+
+            duty = sum_j(duty_j * n_devices_j) / max_j(n_devices_j)
+
+        i.e. total achieved FLOP/s over the peak of the devices actually
+        present.  It is capped at the true oversubscription bound — the
+        number of co-resident jobs ``k`` — because each job can at most
+        saturate every device (duty_j <= 1 per device); anything beyond
+        ``k`` is self-report noise (e.g. a miscalibrated peak), not load.
+        """
         with self._lock:
             entries = list(self._entries.values())
         if not entries:
             return DeviceUtilization()
         n = max(e.n_devices for e in entries)
+        weighted = sum(e.duty_cycle * max(e.n_devices, 1)
+                       for e in entries) / max(n, 1)
         return DeviceUtilization(
             n_devices=n,
             n_active=max(e.n_active for e in entries),
-            duty_cycle=min(1.5, sum(e.duty_cycle for e in entries)),
+            duty_cycle=min(float(len(entries)), weighted),
             hbm_total_gb=max(e.hbm_total_gb for e in entries),
             hbm_used_gb=sum(e.hbm_used_gb for e in entries),
             step_time_s=max(e.step_time_s for e in entries),
@@ -159,16 +182,9 @@ class JaxJobRegistry:
         )
 
 
-def publish_step_utilization(job_name: str, *, model_flops_per_step: float,
-                             step_time_s: float, peak_flops: float,
-                             n_devices: int = 1, hbm_used_gb: float = 0.0,
-                             hbm_total_gb: float = 0.0):
-    """Hook called by the trainer/server after each (timed) step."""
-    duty = 0.0
-    if step_time_s > 0 and peak_flops > 0:
-        duty = model_flops_per_step / step_time_s / (peak_flops * n_devices)
-    JaxJobRegistry.global_registry().publish(job_name, DeviceUtilization(
-        n_devices=n_devices, n_active=n_devices, duty_cycle=duty,
-        hbm_total_gb=hbm_total_gb, hbm_used_gb=hbm_used_gb,
-        step_time_s=step_time_s,
-        achieved_flops=model_flops_per_step / max(step_time_s, 1e-9)))
+def publish_step_utilization(job_name: str, **kwargs):
+    """Backward-compatible shim: the canonical publish hook now lives on
+    the telemetry bus (:func:`repro.monitor.publish_step_utilization`)."""
+    from repro.monitor.bus import publish_step_utilization as _publish
+
+    return _publish(job_name, **kwargs)

@@ -76,7 +76,12 @@ def format_top(rows: List[TopNode], n: int) -> str:
     return "\n".join(lines)
 
 
-def format_node_detail(details: Sequence[NodeDetail]) -> str:
+def format_node_detail(details: Sequence[NodeDetail],
+                       missing: Sequence[str] = ()) -> str:
+    if not details and missing:
+        return ("Node Information:\n"
+                f"Unknown node(s): {', '.join(missing)} "
+                "(no such host in this snapshot)")
     lines = ["Node Information:",
              f"{'HOSTNAMES':<12} {'CPU_LOAD':>9} {'CPUS(A/I/O/T)':>14} "
              f"{'MEMORY':>8} {'FREE_MEM':>9} {'GRES_USED':>24} {'USER':>10}"]
@@ -102,4 +107,8 @@ def format_node_detail(details: Sequence[NodeDetail]) -> str:
                 f"{j.start_time:>19.0f} {','.join(j.nodes[:2]):>11} "
                 f"{j.cores_per_node:>5} {int(j.mem_per_node_gb * 1000):>5}M "
                 f"{j.state:>3}")
+    if missing:
+        lines.append("")
+        lines.append(f"Unknown node(s): {', '.join(missing)} "
+                     "(no such host in this snapshot)")
     return "\n".join(lines)

@@ -58,6 +58,14 @@ class NodeDetail:
     jobs: List[JobRecord]
 
 
+@dataclasses.dataclass
+class NodeDetailReport:
+    """``-n LIST`` result: found details plus the hostnames that matched
+    nothing — misses are reported, never silently dropped."""
+    details: List[NodeDetail]
+    missing: List[str]
+
+
 class PermissionError_(Exception):
     pass
 
@@ -120,11 +128,17 @@ class LLload:
 
     # ----------------------------------------------------------- -n LIST
     def node_detail(self, nodelist: Sequence[str]) -> List[NodeDetail]:
-        out = []
+        """Details for the known hosts only (legacy shape); use
+        :meth:`node_detail_report` to also learn which hosts missed."""
+        return self.node_detail_report(nodelist).details
+
+    def node_detail_report(self, nodelist: Sequence[str]) -> NodeDetailReport:
+        details, missing = [], []
         for host in nodelist:
             if host not in self.snap.nodes:
+                missing.append(host)
                 continue
             node = self.snap.nodes[host]
-            out.append(NodeDetail(node, node.norm_load,
-                                  self.snap.jobs_on_node(host)))
-        return out
+            details.append(NodeDetail(node, node.norm_load,
+                                      self.snap.jobs_on_node(host)))
+        return NodeDetailReport(details, missing)

@@ -88,6 +88,11 @@ def flash_attention(q, k, v, *, causal: bool = True, scale=None,
 
     from jax.experimental.pallas import tpu as pltpu
 
+    # jax renamed TPUCompilerParams -> CompilerParams across releases; accept
+    # whichever this jax build provides.
+    _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or \
+        getattr(pltpu, "TPUCompilerParams")
+
     grid = (B, H, nq, nk)
     return pl.pallas_call(
         kernel,
@@ -107,7 +112,7 @@ def flash_attention(q, k, v, *, causal: bool = True, scale=None,
             pltpu.VMEM((block_q,), F32),
             pltpu.VMEM((block_q, D), F32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

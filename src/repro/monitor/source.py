@@ -1,0 +1,465 @@
+"""Metric sources — the uniform "where snapshots come from" layer.
+
+Everything that can produce a :class:`ClusterSnapshot` is a
+:class:`MetricSource` (DESIGN.md §5): the cluster simulator, the local
+host, the in-process JAX job registry, a TSV archive replay, and a
+multi-cluster fan-out that merges N child sources.  Consumers
+(:class:`~repro.monitor.bus.TelemetryBus`, the CLI, the archiver, the
+weekly analysis) only ever see the protocol, so adding a new vantage
+point — a remote cluster, a Prometheus scrape — is one class, not a CLI
+rewrite.
+
+Sources are constructed by name through :class:`SourceRegistry`; the
+default registry knows ``sim``, ``live``, ``jobs`` and ``archive``.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import os
+import threading
+import time
+from typing import (Callable, Dict, Iterable, List, Optional, Protocol,
+                    Sequence, runtime_checkable)
+
+from repro.core.metrics import (ClusterSnapshot, JobRecord, NodeSnapshot,
+                                rows_from_tsv)
+
+
+@runtime_checkable
+class MetricSource(Protocol):
+    """One vantage point that can be snapshotted.
+
+    ``interval_hint`` (seconds) tells pollers how often a fresh snapshot
+    is worth collecting; ``None`` means "poller's choice".
+    """
+
+    name: str
+    interval_hint: Optional[float]
+
+    def snapshot(self) -> ClusterSnapshot: ...
+
+
+# --------------------------------------------------------------------------
+# Simulator
+# --------------------------------------------------------------------------
+
+
+class SimSource:
+    """Adapter over :class:`repro.cluster.simulator.ClusterSim`.
+
+    ``advance_s`` > 0 advances simulated time on every poll so watch mode
+    shows the cluster evolving; 0 keeps the sim frozen (one-shot queries,
+    and the byte-identical legacy CLI path).
+    """
+
+    def __init__(self, sim, *, advance_s: float = 0.0,
+                 name: Optional[str] = None,
+                 interval_hint: Optional[float] = None):
+        self.sim = sim
+        self.advance_s = advance_s
+        self.name = name or sim.cluster
+        self.interval_hint = interval_hint
+
+    def snapshot(self) -> ClusterSnapshot:
+        if self.advance_s > 0:
+            self.sim.run_until(self.sim.t + self.advance_s)
+        return self.sim.snapshot()
+
+
+# --------------------------------------------------------------------------
+# Local host + in-process JAX jobs
+# --------------------------------------------------------------------------
+
+
+class LocalHostSource:
+    """This host (CPU/mem via /proc + psutil, devices via the registry)."""
+
+    def __init__(self, username: Optional[str] = None,
+                 cluster: str = "local", interval_hint: float = 5.0):
+        from repro.core.collector import LocalHostCollector
+
+        self._collector = LocalHostCollector(username=username,
+                                             cluster=cluster)
+        self.name = cluster
+        self.interval_hint = interval_hint
+
+    def snapshot(self) -> ClusterSnapshot:
+        return self._collector.snapshot()
+
+
+class RegistrySource:
+    """The in-process JAX job registry as its own pseudo-cluster.
+
+    One node per published job (hostname == job name) carrying the
+    self-reported device metrics — the "what are my jobs doing right now"
+    view without any host metrics mixed in.
+    """
+
+    def __init__(self, registry=None, *, name: str = "jobs",
+                 interval_hint: float = 1.0):
+        from repro.core.collector import JaxJobRegistry
+
+        self._registry = registry or JaxJobRegistry.global_registry()
+        self.name = name
+        self.interval_hint = interval_hint
+
+    def snapshot(self) -> ClusterSnapshot:
+        entries = self._registry.entries()
+        nodes: Dict[str, NodeSnapshot] = {}
+        jobs: List[JobRecord] = []
+        user = os.environ.get("USER", "user")
+        for i, (job_name, util) in enumerate(sorted(entries.items())):
+            nodes[job_name] = NodeSnapshot(
+                hostname=job_name, cores_total=os.cpu_count() or 1,
+                cores_used=0, load=0.0, mem_total_gb=0.0, mem_used_gb=0.0,
+                gpus_total=util.n_devices, gpus_used=util.n_active,
+                gpu_load=util.duty_cycle,
+                gpu_mem_total_gb=util.hbm_total_gb,
+                gpu_mem_used_gb=util.hbm_used_gb)
+            jobs.append(JobRecord(
+                job_id=i + 1, username=user, name=job_name,
+                nodes=[job_name], cores_per_node=0,
+                gpus_per_node=util.n_devices, start_time=0.0))
+        return ClusterSnapshot(self.name, time.time(), nodes, jobs,
+                               {user: f"{user}@local"})
+
+
+# --------------------------------------------------------------------------
+# Archive replay
+# --------------------------------------------------------------------------
+
+
+class ArchiveSource:
+    """Replay archived ``--tsv`` rows as a sequence of snapshots.
+
+    Rows (from one or more daily TSV files) are grouped by timestamp into
+    frames; each ``snapshot()`` call returns the next frame, so the bus /
+    watch mode can scrub through history exactly as if it were live.
+    After the last frame the source holds it (or loops when
+    ``loop=True``).
+
+    ``interval_hint`` stays ``None``: every poll yields a new frame, so
+    the poller picks the replay pace (advertising the archive's 15-min
+    snapshot-time cadence as a *wall-clock* hint would freeze replay).
+    The original cadence is exposed as ``cadence_s``.
+    """
+
+    def __init__(self, root_or_files, *, cluster: Optional[str] = None,
+                 loop: bool = False, name: Optional[str] = None):
+        if isinstance(root_or_files, str):
+            # accept a flat dir of TSVs or a SnapshotArchive root with
+            # per-cluster subdirectories
+            files = sorted(
+                os.path.join(dirpath, f)
+                for dirpath, _, fnames in os.walk(root_or_files)
+                for f in fnames if f.endswith(".tsv"))
+        else:
+            files = list(root_or_files)
+        rows: List[dict] = []
+        for path in files:
+            with open(path) as f:
+                rows.extend(rows_from_tsv(f.read()))
+        self._frames = self._group(rows, cluster)
+        self.loop = loop
+        self._pos = 0
+        first = self._frames[0].cluster if self._frames else "archive"
+        self.name = name or (cluster or first)
+        self.interval_hint = None
+        self.cadence_s = self._infer_interval()
+
+    # ------------------------------------------------------------- build
+    @staticmethod
+    def _group(rows: Sequence[dict], cluster: Optional[str]
+               ) -> List[ClusterSnapshot]:
+        # group per (timestamp, cluster) so a multi-cluster archive root
+        # never mixes clusters inside one frame (hostname collisions would
+        # silently overwrite nodes); same-timestamp frames from different
+        # clusters are then merged with collision qualification.
+        by_key: Dict[tuple, List[dict]] = {}
+        for r in rows:
+            if cluster is not None and r["cluster"] != cluster:
+                continue
+            by_key.setdefault((r["timestamp"], r["cluster"]), []).append(r)
+        per_cluster: Dict[float, List[ClusterSnapshot]] = {}
+        for ts, cname in sorted(by_key):
+            frame_rows = by_key[(ts, cname)]
+            nodes: Dict[str, NodeSnapshot] = {}
+            by_user: Dict[str, List[dict]] = {}
+            for r in frame_rows:
+                nodes[r["hostname"]] = NodeSnapshot(
+                    hostname=r["hostname"],
+                    cores_total=r["cores_total"],
+                    cores_used=r["cores_used"], load=r["load"],
+                    mem_total_gb=r["mem_total_gb"],
+                    mem_used_gb=r["mem_used_gb"],
+                    gpus_total=r["gpus_total"], gpus_used=r["gpus_used"],
+                    gpu_load=r["gpu_load"],
+                    gpu_mem_total_gb=r["gpu_mem_total_gb"],
+                    gpu_mem_used_gb=r["gpu_mem_used_gb"])
+                by_user.setdefault(r["username"], []).append(r)
+            jobs = []
+            for i, (user, urows) in enumerate(sorted(by_user.items())):
+                jobs.append(JobRecord(
+                    job_id=i + 1, username=user,
+                    name=f"{user}-replay",
+                    nodes=[r["hostname"] for r in urows],
+                    cores_per_node=urows[0]["cores_used"],
+                    job_type=urows[0]["jobtype"],
+                    gpus_per_node=urows[0]["gpus_used"],
+                    start_time=ts))
+            per_cluster.setdefault(ts, []).append(
+                ClusterSnapshot(cname, ts, nodes, jobs))
+        return [snaps[0] if len(snaps) == 1 else merge_snapshots(snaps)
+                for _, snaps in sorted(per_cluster.items())]
+
+    def _infer_interval(self) -> Optional[float]:
+        if len(self._frames) < 2:
+            return None
+        return self._frames[1].timestamp - self._frames[0].timestamp
+
+    # ------------------------------------------------------------- iterate
+    def __len__(self) -> int:
+        return len(self._frames)
+
+    def rewind(self):
+        self._pos = 0
+
+    def frames(self) -> List[ClusterSnapshot]:
+        return list(self._frames)
+
+    def snapshot(self) -> ClusterSnapshot:
+        if not self._frames:
+            raise ValueError(f"archive source {self.name!r} is empty")
+        snap = self._frames[min(self._pos, len(self._frames) - 1)]
+        if self._pos < len(self._frames) - 1:
+            self._pos += 1
+        elif self.loop:
+            self._pos = 0
+        return snap
+
+
+# --------------------------------------------------------------------------
+# Multi-cluster fan-out
+# --------------------------------------------------------------------------
+
+
+class MultiClusterSource:
+    """Fan-out over N child sources with merged snapshots.
+
+    ``snapshot()`` collects every child concurrently (one thread each —
+    the paper's ssh fan-out latency lesson: never serialize per-cluster
+    collection).  A child that raises keeps serving its last good
+    snapshot and is tracked as stale; :meth:`staleness` and
+    :meth:`last_error` expose per-source health.  Hostname collisions
+    across children are disambiguated as ``cluster:host``.
+    """
+
+    def __init__(self, sources: Sequence[MetricSource], *,
+                 name: Optional[str] = None,
+                 timeout_s: Optional[float] = 30.0):
+        if not sources:
+            raise ValueError("MultiClusterSource needs >= 1 child source")
+        self.sources = list(sources)
+        self.name = name or "+".join(s.name for s in self.sources)
+        self.timeout_s = timeout_s
+        hints = [s.interval_hint for s in self.sources
+                 if s.interval_hint is not None]
+        self.interval_hint = min(hints) if hints else None
+        self._lock = threading.Lock()
+        self._last_good: Dict[str, ClusterSnapshot] = {}
+        self._last_good_at: Dict[str, float] = {}
+        self._errors: Dict[str, BaseException] = {}
+        # one persistent worker per child; a hung child's future stays
+        # in-flight and is reused instead of stacking new threads per poll
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=len(self.sources),
+            thread_name_prefix=f"fanout-{self.name}")
+        self._inflight: Dict[str, concurrent.futures.Future] = {}
+
+    # ------------------------------------------------------------- health
+    def staleness(self) -> Dict[str, float]:
+        """Seconds since each child last produced a good snapshot."""
+        now = time.monotonic()
+        with self._lock:
+            return {name: now - at
+                    for name, at in self._last_good_at.items()}
+
+    def last_error(self, name: str) -> Optional[BaseException]:
+        with self._lock:
+            return self._errors.get(name)
+
+    # ------------------------------------------------------------ collect
+    def _collect_child(self, src: MetricSource) -> Optional[ClusterSnapshot]:
+        try:
+            snap = src.snapshot()
+        except Exception as exc:  # noqa: BLE001 — per-child isolation
+            with self._lock:
+                self._errors[src.name] = exc
+                return self._last_good.get(src.name)
+        with self._lock:
+            self._last_good[src.name] = snap
+            self._last_good_at[src.name] = time.monotonic()
+            self._errors.pop(src.name, None)
+        return snap
+
+    def snapshot(self) -> ClusterSnapshot:
+        futs = {}
+        for src in self.sources:
+            prev = self._inflight.get(src.name)
+            if prev is not None and not prev.done():
+                futs[src.name] = prev      # child still hung: don't stack
+            else:
+                futs[src.name] = self._pool.submit(self._collect_child, src)
+            self._inflight[src.name] = futs[src.name]
+        # one overall deadline for the whole fan-out, not N sequential waits
+        concurrent.futures.wait(futs.values(), timeout=self.timeout_s)
+        snaps = []
+        for src in self.sources:
+            fut = futs[src.name]
+            if fut.done():
+                snaps.append(fut.result())
+            else:
+                # hung child: serve its last good snapshot, keep the merge
+                # alive (isolation promise); its future stays in-flight
+                with self._lock:
+                    self._errors[src.name] = TimeoutError(
+                        f"collection exceeded {self.timeout_s}s")
+                    snaps.append(self._last_good.get(src.name))
+        good = [(src, snap) for src, snap in zip(self.sources, snaps)
+                if snap is not None]
+        if not good:
+            raise RuntimeError(
+                f"all {len(self.sources)} child sources failed: "
+                f"{ {n: str(e) for n, e in self._errors.items()} }")
+        return merge_snapshots([s for _, s in good], name=self.name)
+
+
+def merge_snapshots(snaps: Sequence[ClusterSnapshot], *,
+                    name: Optional[str] = None) -> ClusterSnapshot:
+    """Merge per-cluster snapshots into one cross-cluster view.
+
+    Hostnames that appear in more than one child are qualified as
+    ``cluster:host`` (job node lists are renamed consistently); unique
+    hostnames keep their short names so single-cluster behaviour is
+    unchanged.
+    """
+    if len(snaps) == 1 and name is None:
+        return snaps[0]
+    seen: Dict[str, int] = {}
+    for s in snaps:
+        for h in s.nodes:
+            seen[h] = seen.get(h, 0) + 1
+    nodes: Dict[str, NodeSnapshot] = {}
+    jobs: List[JobRecord] = []
+    emails: Dict[str, str] = {}
+    for s in snaps:
+        rename = {h: (f"{s.cluster}:{h}" if seen[h] > 1 else h)
+                  for h in s.nodes}
+        for h, node in s.nodes.items():
+            nodes[rename[h]] = (
+                node if rename[h] == h else
+                _renamed_node(node, rename[h]))
+        for job in s.jobs:
+            new_nodes = [rename.get(h, h) for h in job.nodes]
+            jobs.append(job if new_nodes == job.nodes else
+                        _renamed_job(job, new_nodes))
+        emails.update(s.user_emails)
+    return ClusterSnapshot(
+        cluster=name or "+".join(s.cluster for s in snaps),
+        timestamp=max(s.timestamp for s in snaps),
+        nodes=nodes, jobs=jobs, user_emails=emails)
+
+
+def _renamed_node(node: NodeSnapshot, hostname: str) -> NodeSnapshot:
+    import dataclasses
+    return dataclasses.replace(node, hostname=hostname)
+
+
+def _renamed_job(job: JobRecord, nodes: List[str]) -> JobRecord:
+    import dataclasses
+    return dataclasses.replace(job, nodes=nodes)
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+
+class SourceRegistry:
+    """Named source factories — the CLI (and anything else) builds sources
+    by name instead of hard-coding an if/else per kind."""
+
+    def __init__(self):
+        self._factories: Dict[str, Callable[..., MetricSource]] = {}
+
+    def register(self, name: str,
+                 factory: Callable[..., MetricSource]) -> None:
+        self._factories[name] = factory
+
+    def names(self) -> List[str]:
+        return sorted(self._factories)
+
+    def create(self, name: str, **kwargs) -> MetricSource:
+        if name not in self._factories:
+            raise KeyError(
+                f"unknown source {name!r}; registered: {self.names()}")
+        return self._factories[name](**kwargs)
+
+
+def _make_sim_source(*, cluster: str = "txgreen", seed: int = 0,
+                     warmup_s: float = 3600.0, advance_s: float = 0.0,
+                     n_cpu: int = 64, n_gpu: int = 16) -> SimSource:
+    """The paper's LLSC-like simulated cluster, scenario-populated.
+
+    Defaults reproduce the legacy ``--source sim`` CLI path exactly
+    (seeded scenario, one simulated hour of warmup, frozen time).
+    """
+    import random as _random
+
+    from repro.cluster.workloads import make_llsc_sim, paper_scenario
+
+    sim = make_llsc_sim(n_cpu, n_gpu, cluster=cluster)
+    paper_scenario(sim, _random.Random(seed))
+    sim.run_until(warmup_s)
+    return SimSource(sim, advance_s=advance_s, name=cluster)
+
+
+def _make_live_source(*, cluster: str = "local",
+                      username: Optional[str] = None) -> LocalHostSource:
+    return LocalHostSource(username=username, cluster=cluster)
+
+
+def _make_jobs_source(*, cluster: str = "jobs") -> RegistrySource:
+    return RegistrySource(name=cluster)
+
+
+def _make_archive_source(*, root: str, cluster: Optional[str] = None,
+                         loop: bool = False) -> ArchiveSource:
+    return ArchiveSource(root, cluster=cluster, loop=loop)
+
+
+_DEFAULT_REGISTRY = SourceRegistry()
+_DEFAULT_REGISTRY.register("sim", _make_sim_source)
+_DEFAULT_REGISTRY.register("live", _make_live_source)
+_DEFAULT_REGISTRY.register("jobs", _make_jobs_source)
+_DEFAULT_REGISTRY.register("archive", _make_archive_source)
+
+
+def default_registry() -> SourceRegistry:
+    return _DEFAULT_REGISTRY
+
+
+def build_source(name: str, *, clusters: Optional[Sequence[str]] = None,
+                 registry: Optional[SourceRegistry] = None,
+                 **kwargs) -> MetricSource:
+    """Build one source by name, fanning out over ``clusters`` when more
+    than one is requested (``--cluster a,b`` => MultiClusterSource)."""
+    registry = registry or default_registry()
+    clusters = [c for c in (clusters or []) if c]
+    if len(clusters) <= 1:
+        if clusters:
+            kwargs.setdefault("cluster", clusters[0])
+        return registry.create(name, **kwargs)
+    children = [registry.create(name, cluster=c, **kwargs)
+                for c in clusters]
+    return MultiClusterSource(children)

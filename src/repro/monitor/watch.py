@@ -1,0 +1,89 @@
+"""Streaming watch mode (``LLload --watch [--interval S]``).
+
+A render loop over the :class:`~repro.monitor.bus.TelemetryBus`: the
+background sampler collects at each source's cadence while the loop
+re-renders from *cached* reads at the display interval — refreshing the
+terminal faster than the source is polled costs nothing (the acceptance
+property: snapshot() calls < reads).
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+from typing import Callable, Optional, TextIO
+
+from repro.core.metrics import ClusterSnapshot
+
+from repro.monitor.bus import TelemetryBus
+
+Renderer = Callable[[ClusterSnapshot], str]
+
+
+@dataclasses.dataclass
+class WatchStats:
+    frames: int = 0
+    reads: int = 0
+    collections: int = 0
+
+
+def frame_header(frame: int, snap: ClusterSnapshot, bus: TelemetryBus,
+                 name: Optional[str] = None) -> str:
+    trend = bus.load_trend(name)
+    stats = bus.stats(name)
+    arrow = "+" if trend >= 0 else ""
+    return (f"=== LLload watch | frame {frame} | cluster {snap.cluster} | "
+            f"t={snap.timestamp:.0f} | trend {arrow}{trend:.4f}/s | "
+            f"reads {stats.reads} / collections {stats.collections} ===")
+
+
+def watch(bus: TelemetryBus, render: Renderer, *,
+          source_name: Optional[str] = None,
+          interval_s: float = 2.0,
+          max_frames: Optional[int] = None,
+          poll_interval_s: Optional[float] = None,
+          out: TextIO = None,
+          sleep: Callable[[float], None] = time.sleep) -> WatchStats:
+    """Run the watch loop; returns per-run stats.
+
+    The sampler polls at ``poll_interval_s`` (default 3x the display
+    interval, so intermediate frames are served from cache);
+    ``max_frames=None`` streams until KeyboardInterrupt.
+    """
+    out = out if out is not None else sys.stdout
+    interval_s = max(interval_s, 0.0)
+    if poll_interval_s is None:
+        poll_interval_s = 3.0 * interval_s
+    # floor the sampler period so --interval 0 degrades to "render as fast
+    # as you like" rather than hammering the source in a busy loop
+    poll_interval_s = max(poll_interval_s, 0.05)
+    # cached reads stay valid for a full sampler period (restored on exit —
+    # the bus may be shared with other consumers)
+    saved_ttl = bus.ttl_s
+    bus.ttl_s = max(bus.ttl_s, poll_interval_s)
+    ws = WatchStats()
+    base = bus.stats(source_name)      # report deltas over this run only
+    bus.start(poll_interval_s)
+    try:
+        frame = 0
+        while max_frames is None or frame < max_frames:
+            snap = bus.read(source_name)
+            frame += 1
+            ws.frames = frame
+            out.write(frame_header(frame, snap, bus, source_name) + "\n")
+            out.write(render(snap) + "\n")
+            out.flush()
+            if max_frames is not None and frame >= max_frames:
+                break
+            sleep(interval_s)
+    except KeyboardInterrupt:
+        pass
+    except BrokenPipeError:
+        pass      # downstream pager/head closed the stream mid-frame
+    finally:
+        bus.stop()
+        bus.ttl_s = saved_ttl
+        stats = bus.stats(source_name)
+        ws.reads = stats.reads - base.reads
+        ws.collections = stats.collections - base.collections
+    return ws

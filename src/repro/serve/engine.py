@@ -18,9 +18,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.collector import publish_step_utilization
 from repro.core.overload import (DeviceObservation, OverloadController,
                                  OverloadDecision)
+from repro.monitor import publish_step_utilization
 from repro.models import model as model_lib
 from repro.roofline import hw
 

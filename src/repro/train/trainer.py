@@ -17,8 +17,8 @@ from typing import Callable, Optional
 import jax
 import numpy as np
 
-from repro.core.collector import publish_step_utilization
 from repro.launch.fault import CrashInjector, StragglerDetector
+from repro.monitor import publish_step_utilization
 from repro.models import model as model_lib
 from repro.roofline import hw
 from repro.train import checkpoint as ckpt_lib

@@ -1,0 +1,119 @@
+"""CLI regressions for the telemetry refactor: deterministic sim output,
+node-detail miss reporting, and multi-cluster selection."""
+import random
+
+import pytest
+
+from repro.cluster.workloads import make_llsc_sim, paper_scenario
+from repro.core import cli
+from repro.core.llload import LLload
+
+
+def _legacy_snapshot():
+    """The pre-refactor build path, inlined: sim + scenario + 1h warmup."""
+    sim = make_llsc_sim()
+    paper_scenario(sim, random.Random(0))
+    sim.run_until(3600.0)
+    return sim.snapshot()
+
+
+def test_sim_output_matches_legacy_build_path(capsys):
+    """--source sim must render exactly what the old if/else construction
+    produced (the registry is plumbing, not behaviour)."""
+    from repro.core import formatting
+
+    assert cli.main(["--source", "sim"]) == 0
+    out = capsys.readouterr().out
+
+    snap = _legacy_snapshot()
+    ll = LLload(snap, privileged_users=cli.PRIVILEGED)
+    legacy = formatting.format_user_view(
+        snap.cluster, ll.user_view("ab12345"), False) + "\n"
+    assert out == legacy
+
+
+def test_sim_output_deterministic_across_builds(capsys):
+    cli.main(["--source", "sim", "--tsv"])
+    first = capsys.readouterr().out
+    cli.main(["--source", "sim", "--tsv"])
+    second = capsys.readouterr().out
+    assert first == second
+
+
+# ------------------------------------------------------------- node misses
+
+
+def test_unknown_node_reported_and_nonzero_exit(capsys):
+    rc = cli.main(["-n", "no-such-host"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "Unknown node(s): no-such-host" in out
+
+
+def test_mixed_known_unknown_nodes(capsys):
+    cli.main(["--tsv"])
+    host = capsys.readouterr().out.splitlines()[1].split("\t")[2]
+    rc = cli.main(["-n", f"{host},badhost"])
+    out = capsys.readouterr().out
+    assert rc == 0                      # something useful was shown
+    assert host in out
+    assert "Unknown node(s): badhost" in out
+
+
+def test_t_takes_precedence_over_n_as_in_legacy_cli(capsys):
+    """The pre-refactor CLI checked -t before -n; both the one-shot and
+    watch paths must keep that order."""
+    rc = cli.main(["-t", "3", "-n", "badhost"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "sorted by descending order" in out       # top view rendered
+    assert "Unknown node" not in out
+
+
+def test_node_detail_report_api():
+    snap = _legacy_snapshot()
+    ll = LLload(snap)
+    some = next(iter(snap.nodes))
+    rep = ll.node_detail_report([some, "ghost"])
+    assert [d.node.hostname for d in rep.details] == [some]
+    assert rep.missing == ["ghost"]
+    # legacy shape unchanged
+    assert [d.node.hostname for d in ll.node_detail([some, "ghost"])] \
+        == [some]
+
+
+# ------------------------------------------------------------ multi-cluster
+
+
+def test_cluster_flag_single_rename(capsys):
+    assert cli.main(["--source", "sim", "--cluster", "west",
+                     "--user", "ab12345"]) == 0
+    out = capsys.readouterr().out
+    assert out.startswith("Cluster name: west")
+
+
+def test_cluster_flag_fans_out_and_merges(capsys):
+    assert cli.main(["--source", "sim", "--cluster", "east,west",
+                     "--tsv"]) == 0
+    out = capsys.readouterr().out
+    hosts = {ln.split("\t")[2] for ln in out.splitlines()[1:] if ln}
+    assert any(h.startswith("east:") for h in hosts)
+    assert any(h.startswith("west:") for h in hosts)
+
+
+def test_archive_source_requires_dir():
+    with pytest.raises(SystemExit):
+        cli.main(["--source", "archive"])
+
+
+def test_archive_source_replays(tmp_path, capsys):
+    from repro.core.archive import SnapshotArchive
+
+    archive = SnapshotArchive(str(tmp_path), cluster="txgreen")
+    archive.append(_legacy_snapshot())
+    rc = cli.main(["--source", "archive", "--archive-dir", str(tmp_path),
+                   "--user", "ab12345"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "Cluster name: txgreen" in out
+    assert "ab12345" in out

@@ -1,0 +1,69 @@
+"""JaxJobRegistry.aggregate(): device-weighted duty combination capped at
+the true oversubscription bound (number of co-resident jobs)."""
+import pytest
+
+from repro.core.collector import DeviceUtilization, JaxJobRegistry
+
+
+def _util(duty, n_devices=1, **kw):
+    return DeviceUtilization(n_devices=n_devices, n_active=n_devices,
+                             duty_cycle=duty, **kw)
+
+
+def test_empty_registry_aggregates_to_zero():
+    assert JaxJobRegistry().aggregate() == DeviceUtilization()
+
+
+def test_single_job_passthrough():
+    reg = JaxJobRegistry()
+    reg.publish("a", _util(0.4, n_devices=2, hbm_used_gb=1.0,
+                           hbm_total_gb=16.0))
+    agg = reg.aggregate()
+    assert agg.duty_cycle == pytest.approx(0.4)
+    assert agg.n_devices == 2
+
+
+def test_co_resident_jobs_duties_add():
+    """Two jobs sharing the same device: duty sums (the overloading
+    payoff), and is NOT clamped at the old magic 1.5."""
+    reg = JaxJobRegistry()
+    reg.publish("a", _util(0.9))
+    reg.publish("b", _util(0.9))
+    assert reg.aggregate().duty_cycle == pytest.approx(1.8)
+
+    reg.publish("c", _util(0.9))
+    # three jobs: 2.7 <= bound of 3
+    assert reg.aggregate().duty_cycle == pytest.approx(2.7)
+
+
+def test_device_weighted_mean_for_mixed_device_counts():
+    """duty = sum(duty_j * n_j) / max_j(n_j): a 1-device job cannot claim
+    the same absolute load as a 4-device job at equal duty."""
+    reg = JaxJobRegistry()
+    reg.publish("big", _util(1.0, n_devices=4))
+    reg.publish("small", _util(1.0, n_devices=1))
+    assert reg.aggregate().duty_cycle == pytest.approx((4 + 1) / 4)
+
+
+def test_cap_at_oversubscription_bound():
+    """Self-report noise (duty > 1 from a miscalibrated peak) cannot push
+    the aggregate past the number of co-resident jobs."""
+    reg = JaxJobRegistry()
+    reg.publish("noisy", _util(7.5))
+    assert reg.aggregate().duty_cycle == pytest.approx(1.0)
+
+    reg.publish("other", _util(0.2))
+    agg = reg.aggregate()
+    assert agg.duty_cycle == pytest.approx(2.0)     # capped at k=2
+
+
+def test_memory_and_flops_aggregation_unchanged():
+    reg = JaxJobRegistry()
+    reg.publish("a", _util(0.1, hbm_used_gb=2.0, hbm_total_gb=16.0,
+                           achieved_flops=1e9))
+    reg.publish("b", _util(0.2, hbm_used_gb=3.0, hbm_total_gb=16.0,
+                           achieved_flops=2e9))
+    agg = reg.aggregate()
+    assert agg.hbm_used_gb == pytest.approx(5.0)    # sums (shared HBM pool)
+    assert agg.hbm_total_gb == pytest.approx(16.0)  # same physical devices
+    assert agg.achieved_flops == pytest.approx(3e9)

@@ -1,0 +1,274 @@
+"""MetricSource layer: protocol conformance, archive replay round-trip,
+multi-cluster merge semantics, and the source registry."""
+import random
+
+import pytest
+
+from repro.cluster.workloads import make_llsc_sim, paper_scenario
+from repro.core.archive import SnapshotArchive
+from repro.core.collector import SimCollector
+from repro.core.metrics import ClusterSnapshot
+from repro.monitor import (ArchiveSource, MetricSource, MultiClusterSource,
+                           RegistrySource, SimSource, SourceRegistry,
+                           build_source, default_registry, merge_snapshots)
+
+
+def _sim(cluster="txgreen", n_cpu=6, n_gpu=4, until=1800.0):
+    sim = make_llsc_sim(n_cpu, n_gpu, cluster=cluster)
+    paper_scenario(sim, random.Random(0))
+    sim.run_until(until)
+    return sim
+
+
+# ------------------------------------------------------------------ protocol
+
+
+def test_all_sources_satisfy_protocol(tmp_path):
+    sim = _sim()
+    archive = SnapshotArchive(str(tmp_path))
+    archive.append(sim.snapshot())
+    sources = [
+        SimSource(sim),
+        RegistrySource(),
+        ArchiveSource(archive.files()),
+        MultiClusterSource([SimSource(sim)]),
+    ]
+    for src in sources:
+        assert isinstance(src, MetricSource)
+        assert isinstance(src.snapshot(), ClusterSnapshot)
+
+
+def test_sim_source_matches_collector_and_advances():
+    sim = _sim()
+    src = sim.as_source()
+    assert src.snapshot().to_tsv() == SimCollector(sim).snapshot().to_tsv()
+
+    moving = _sim().as_source(advance_s=900.0)
+    t0 = moving.snapshot().timestamp
+    t1 = moving.snapshot().timestamp
+    assert t1 == t0 + 900.0
+
+
+# ------------------------------------------------------- archive round-trip
+
+
+def test_archive_tsv_roundtrip(tmp_path):
+    sim = _sim()
+    orig = sim.snapshot()
+    archive = SnapshotArchive(str(tmp_path), cluster="txgreen")
+    archive.append(orig)
+
+    src = archive.as_source()
+    replay = src.snapshot()
+
+    assert replay.cluster == orig.cluster
+    assert replay.timestamp == orig.timestamp
+    # archived rows only cover owned nodes
+    owned = {h for j in orig.jobs if j.state == "R" for h in j.nodes}
+    assert set(replay.nodes) == owned
+    for host in owned:
+        a, b = orig.nodes[host], replay.nodes[host]
+        assert b.cores_total == a.cores_total
+        assert b.cores_used == a.cores_used
+        assert abs(b.load - a.load) < 1e-3
+        assert b.gpus_total == a.gpus_total
+        assert abs(b.gpu_load - a.gpu_load) < 1e-3
+    # user -> nodes attribution survives the round trip (the TSV format
+    # attributes each host to its single owning job, so users who only
+    # share already-owned nodes are folded into the owner's rows)
+    orig_by_user = orig.nodes_by_user()
+    replay_by_user = replay.nodes_by_user()
+    assert set(replay_by_user) <= set(orig_by_user)
+    for user, hosts in replay_by_user.items():
+        assert set(hosts) <= set(orig_by_user[user])
+
+
+def test_archive_source_steps_through_frames(tmp_path):
+    sim = _sim(until=900.0)
+    archive = SnapshotArchive(str(tmp_path))
+    for _ in range(3):
+        archive.append(sim.snapshot())
+        sim.run_until(sim.t + 900.0)
+
+    src = archive.as_source()
+    assert len(src) == 3
+    stamps = [src.snapshot().timestamp for _ in range(5)]
+    assert stamps[0] < stamps[1] < stamps[2]
+    assert stamps[2] == stamps[3] == stamps[4]   # holds the last frame
+    assert src.cadence_s == 900.0
+    assert src.interval_hint is None   # replay pace is the poller's choice
+
+    src.rewind()
+    assert src.snapshot().timestamp == stamps[0]
+
+    looping = archive.as_source(loop=True)
+    seq = [looping.snapshot().timestamp for _ in range(4)]
+    assert seq[3] == seq[0]
+
+
+def test_archive_source_empty_raises(tmp_path):
+    src = ArchiveSource(str(tmp_path))
+    with pytest.raises(ValueError):
+        src.snapshot()
+
+
+def test_archive_source_multi_cluster_root_merges_not_corrupts(tmp_path):
+    """An archive root holding several clusters (same hostnames, same
+    timestamps) must merge frames with qualification, not overwrite."""
+    for cname in ("east", "west"):
+        sim = _sim(cname, until=900.0)
+        SnapshotArchive(str(tmp_path), cluster=cname).append(sim.snapshot())
+
+    src = ArchiveSource(str(tmp_path))
+    assert len(src) == 1                      # one merged frame per stamp
+    snap = src.snapshot()
+    east = ArchiveSource(str(tmp_path), cluster="east").snapshot()
+    # both clusters' nodes survive, qualified on collision
+    assert len(snap.nodes) == 2 * len(east.nodes)
+    assert {h.split(":")[0] for h in snap.nodes} == {"east", "west"}
+
+    # cluster= still restricts to one
+    assert set(east.nodes) == {h.split(":", 1)[1] for h in snap.nodes
+                               if h.startswith("east:")}
+
+
+# ------------------------------------------------------- multi-cluster merge
+
+
+def test_multi_cluster_merges_and_qualifies_collisions():
+    a, b = _sim("alpha"), _sim("beta")
+    multi = MultiClusterSource([SimSource(a), SimSource(b)])
+    snap = multi.snapshot()
+
+    assert snap.cluster == "alpha+beta"
+    # identical topologies => every hostname collides => all qualified
+    assert len(snap.nodes) == len(a.snapshot().nodes) * 2
+    assert all(":" in h for h in snap.nodes)
+    assert {h.split(":")[0] for h in snap.nodes} == {"alpha", "beta"}
+    # job node lists are renamed consistently with the node table
+    for job in snap.jobs:
+        for h in job.nodes:
+            assert h in snap.nodes
+    # NodeSnapshot.hostname matches its key after qualification
+    for h, node in snap.nodes.items():
+        assert node.hostname == h
+
+
+def test_multi_cluster_keeps_unique_hostnames_short():
+    a = _sim("alpha")
+    b = _sim("beta")
+    # rename beta's nodes so nothing collides
+    bsnap = b.snapshot()
+
+    class Renamed:
+        name = "beta"
+        interval_hint = None
+
+        def snapshot(self):
+            import dataclasses
+            nodes = {f"b-{h}": dataclasses.replace(n, hostname=f"b-{h}")
+                     for h, n in bsnap.nodes.items()}
+            jobs = [dataclasses.replace(j, nodes=[f"b-{h}" for h in j.nodes])
+                    for j in bsnap.jobs]
+            return ClusterSnapshot("beta", bsnap.timestamp, nodes, jobs)
+
+    snap = MultiClusterSource([SimSource(a), Renamed()]).snapshot()
+    assert all(":" not in h for h in snap.nodes)
+
+
+def test_multi_cluster_staleness_on_child_failure():
+    a = _sim("alpha")
+
+    class Flaky:
+        name = "flaky"
+        interval_hint = None
+
+        def __init__(self):
+            self.fail = False
+            self._sim = _sim("flaky")
+
+        def snapshot(self):
+            if self.fail:
+                raise RuntimeError("collection failed")
+            return self._sim.snapshot()
+
+    flaky = Flaky()
+    multi = MultiClusterSource([SimSource(a), flaky])
+    s1 = multi.snapshot()                      # both healthy
+    n_nodes = len(s1.nodes)
+
+    flaky.fail = True
+    s2 = multi.snapshot()                      # flaky serves last-good
+    assert len(s2.nodes) == n_nodes
+    assert isinstance(multi.last_error("flaky"), RuntimeError)
+    assert multi.last_error("alpha") is None
+    assert set(multi.staleness()) == {"alpha", "flaky"}
+
+
+def test_multi_cluster_hung_child_serves_last_good():
+    """A child that exceeds the collection timeout must not break the
+    merged snapshot — it serves its last good one and reports the miss."""
+    import time as _time
+
+    a = _sim("alpha")
+
+    class Hanging:
+        name = "slow"
+        interval_hint = None
+
+        def __init__(self):
+            self.hang = False
+            self._sim = _sim("slow")
+
+        def snapshot(self):
+            if self.hang:
+                _time.sleep(1.0)
+            return self._sim.snapshot()
+
+    slow = Hanging()
+    multi = MultiClusterSource([SimSource(a), slow], timeout_s=0.15)
+    n_nodes = len(multi.snapshot().nodes)      # both healthy
+
+    slow.hang = True
+    snap = multi.snapshot()                    # returns before 1s sleep ends
+    assert len(snap.nodes) == n_nodes
+    assert isinstance(multi.last_error("slow"), TimeoutError)
+
+
+def test_multi_cluster_all_failed_raises():
+    class Dead:
+        name = "dead"
+        interval_hint = None
+
+        def snapshot(self):
+            raise RuntimeError("down")
+
+    with pytest.raises(RuntimeError):
+        MultiClusterSource([Dead()]).snapshot()
+
+
+def test_merge_snapshots_single_passthrough():
+    snap = _sim().snapshot()
+    assert merge_snapshots([snap]) is snap
+
+
+# --------------------------------------------------------------- registry
+
+
+def test_default_registry_names():
+    assert {"sim", "live", "jobs", "archive"} <= \
+        set(default_registry().names())
+
+
+def test_registry_unknown_source():
+    with pytest.raises(KeyError):
+        SourceRegistry().create("nope")
+
+
+def test_build_source_fans_out_over_clusters():
+    src = build_source("sim", clusters=["alpha", "beta"])
+    assert isinstance(src, MultiClusterSource)
+    assert src.name == "alpha+beta"
+    single = build_source("sim", clusters=["gamma"])
+    assert isinstance(single, SimSource)
+    assert single.name == "gamma"
