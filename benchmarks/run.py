@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows (one per benchmark).
 | llload_topn_4096         | Fig 5/10 top-N overloaded nodes              |
 | snapshot_tsv_2048        | 15-min archive write format (§V-A)           |
 | bus_read_{cached,uncached} | TelemetryBus snapshot-query throughput     |
+| daemon_snapshot_*        | HTTP /snapshot requests/s, cached vs collect |
+| columnarize_1wk          | vectorized archive columnarization           |
 | weekly_analysis_1wk      | Fig 6 weekly node-hours aggregation          |
 | monitor_overhead         | "light-weight" claim: train loop +hooks      |
 | overloading_nppn_*       | §V-B GPU overloading throughput (measured)   |
@@ -116,6 +118,78 @@ def bench_bus_reads():
     _row("bus_read_uncached_512n", us_miss,
          f"reads_per_s={1e6 / us_miss:.0f};"
          f"cache_speedup={us_miss / max(us_hit, 1e-9):.0f}x")
+
+
+def bench_daemon():
+    """The daemon's request-serving hot path at 512 simulated nodes:
+    requests/s for cached /snapshot (bytes reused within the TTL window)
+    vs. a daemon that must re-collect per request.  Emits
+    ``BENCH_daemon.json`` for CI / acceptance (cached >= 10x uncached)."""
+    import http.client
+    import json
+
+    from repro.daemon import LLloadDaemon, serve_background
+
+    def rps(ttl_s, n_requests):
+        sim = _sim(512)
+        daemon = LLloadDaemon(sim.as_source(name="bench"), ttl_s=ttl_s)
+        server, _ = serve_background(daemon)
+        host, port = server.server_address[:2]
+        conn = http.client.HTTPConnection(host, port)
+        try:
+            conn.request("GET", "/snapshot")   # warm (bind, first collect)
+            conn.getresponse().read()
+            t0 = time.perf_counter()
+            for _ in range(n_requests):
+                conn.request("GET", "/snapshot")
+                rsp = conn.getresponse()
+                body = rsp.read()
+                assert rsp.status == 200 and body
+            dt = time.perf_counter() - t0
+        finally:
+            conn.close()
+            server.shutdown()
+            server.server_close()
+            daemon.close()
+        return n_requests / dt, dt / n_requests * 1e6
+
+    cached_rps, cached_us = rps(ttl_s=1e9, n_requests=300)
+    uncached_rps, uncached_us = rps(ttl_s=0.0, n_requests=30)
+    speedup = cached_rps / max(uncached_rps, 1e-9)
+    _row("daemon_snapshot_cached_512n", cached_us,
+         f"requests_per_s={cached_rps:.0f}")
+    _row("daemon_snapshot_uncached_512n", uncached_us,
+         f"requests_per_s={uncached_rps:.0f};cache_speedup={speedup:.1f}x")
+    with open("BENCH_daemon.json", "w") as f:
+        json.dump({
+            "nodes": 512,
+            "cached_requests_per_s": round(cached_rps, 1),
+            "uncached_requests_per_s": round(uncached_rps, 1),
+            "cache_speedup_x": round(speedup, 2),
+        }, f, indent=2)
+        f.write("\n")
+
+
+def bench_columnarize():
+    """Vectorized archive columnarization on a week-scale synthetic
+    archive (the per-row loop this replaced ran ~5x slower)."""
+    from repro.core.analysis import columnarize
+
+    rng = np.random.default_rng(0)
+    users = [f"u{i:03d}" for i in range(200)]
+    rows = [{
+        "timestamp": 900.0 * s, "cluster": "tx", "hostname": f"n{n}",
+        "username": users[rng.integers(len(users))], "jobtype": "batch",
+        "cores_total": 48, "cores_used": 48,
+        "load": float(rng.uniform(0, 96)),
+        "mem_total_gb": 192.0, "mem_used_gb": 50.0,
+        "gpus_total": 2, "gpus_used": 2,
+        "gpu_load": float(rng.uniform(0, 1)),
+        "gpu_mem_total_gb": 64.0, "gpu_mem_used_gb": 2.0}
+        for s in range(7 * 24 * 4) for n in range(100)]
+    us = _timeit(lambda: columnarize(rows), repeat=3)
+    _row("columnarize_1wk", us,
+         f"rows={len(rows)};rows_per_s={len(rows) / (us / 1e6):.0f}")
 
 
 def bench_weekly_analysis():
@@ -259,6 +333,8 @@ BENCHES = [
     bench_topn,
     bench_snapshot_tsv,
     bench_bus_reads,
+    bench_daemon,
+    bench_columnarize,
     bench_weekly_analysis,
     bench_monitor_overhead,
     bench_overloading,

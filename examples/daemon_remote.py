@@ -1,0 +1,69 @@
+"""The daemon round trip, in-process: serve the simulated cluster over
+HTTP, read it back through every client surface, then stack a second
+daemon on top of the first (cluster-of-clusters).
+
+    PYTHONPATH=src python examples/daemon_remote.py
+"""
+from repro.core import cli
+from repro.daemon import (LLloadDaemon, RemoteClient, RemoteSource,
+                          serve_background)
+from repro.monitor import build_source
+
+
+def main():
+    # -- tier 0: a daemon collecting from the simulated LLSC cluster
+    daemon = LLloadDaemon(build_source("sim"), ttl_s=5.0)
+    daemon.start_sampler(0.2)                  # feed the history store
+    server, _ = serve_background(daemon)
+    host, port = server.server_address[:2]
+    url = f"http://{host}:{port}"
+    print(f"daemon up at {url}\n")
+
+    client = RemoteClient(url)
+    print("healthz:", client.healthz())
+    snap = client.snapshot()
+    print(f"snapshot: {len(snap.nodes)} nodes on {snap.cluster!r} "
+          f"at t={snap.timestamp:.0f}\n")
+
+    print("the same CLI, over the network (byte-identical to local):")
+    cli.main(["--source", "remote", "--url", url, "-t", "3"])
+
+    print("\ntrend (downsampled from the history store):")
+    trend = client.trend()
+    for p in trend["points"][-3:]:
+        nl = p["norm_load"]
+        print(f"  t={p['t']:.0f} count={p['count']} "
+              f"norm_load min/mean/max = "
+              f"{nl['min']:.3f}/{nl['mean']:.3f}/{nl['max']:.3f}")
+
+    print("\nweekly report from store tiers (top entries):")
+    weekly = client.weekly()
+    for cat in ("low_gpu", "high_cpu"):
+        rows = weekly[cat][:2]
+        print(f"  {cat}: " + (", ".join(
+            f"{r['username']} ({r['node_hours']:.2f} node-h)"
+            for r in rows) or "none"))
+
+    print("\nPrometheus exposition (first lines):")
+    for line in client.metrics_text().splitlines()[:4]:
+        print(" ", line)
+
+    # -- tier 1: a daemon whose source is the first daemon
+    upstream = RemoteSource(url, name="tier0")
+    top = LLloadDaemon(upstream, ttl_s=5.0)
+    top_server, _ = serve_background(top)
+    thost, tport = top_server.server_address[:2]
+    snap2 = RemoteClient(f"http://{thost}:{tport}").snapshot()
+    print(f"\ncluster-of-clusters: tier-1 daemon serves the same "
+          f"{len(snap2.nodes)}-node snapshot: "
+          f"{snap2 == snap}")
+
+    for srv, d in ((top_server, top), (server, daemon)):
+        srv.shutdown()
+        srv.server_close()
+        d.close()
+    print("both daemons stopped cleanly")
+
+
+if __name__ == "__main__":
+    main()

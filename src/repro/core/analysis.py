@@ -61,21 +61,22 @@ def rows_from_snapshots(snaps: Iterable[ClusterSnapshot]) -> List[dict]:
 
 
 def columnarize(rows: Sequence[dict]) -> ColumnarRows:
-    users = sorted({r["username"] for r in rows})
-    uidx = {u: i for i, u in enumerate(users)}
+    """Vectorized: one list-comprehension pass extracts each column, then
+    every derived quantity is a numpy array op (no per-row Python math) —
+    ``np.unique`` both sorts the user vocabulary and codes every row."""
     n = len(rows)
-    codes = np.empty(n, np.int32)
-    norm_cpu = np.empty(n, np.float64)
-    gpu_load = np.empty(n, np.float64)
-    has_gpu = np.empty(n, bool)
-    ts = np.empty(n, np.float64)
-    for i, r in enumerate(rows):
-        codes[i] = uidx[r["username"]]
-        norm_cpu[i] = r["load"] / max(r["cores_total"], 1)
-        gpu_load[i] = r["gpu_load"]
-        has_gpu[i] = r["gpus_total"] > 0
-        ts[i] = r["timestamp"]
-    return ColumnarRows(codes, users, norm_cpu, gpu_load, has_gpu, ts)
+    users, codes = np.unique(np.array([r["username"] for r in rows],
+                                      dtype=object), return_inverse=True)
+    load = np.fromiter((r["load"] for r in rows), np.float64, count=n)
+    cores = np.fromiter((r["cores_total"] for r in rows), np.float64,
+                        count=n)
+    gpu_load = np.fromiter((r["gpu_load"] for r in rows), np.float64,
+                           count=n)
+    gpus = np.fromiter((r["gpus_total"] for r in rows), np.int64, count=n)
+    ts = np.fromiter((r["timestamp"] for r in rows), np.float64, count=n)
+    return ColumnarRows(codes.astype(np.int32), [str(u) for u in users],
+                        load / np.maximum(cores, 1.0), gpu_load,
+                        gpus > 0, ts)
 
 
 def _top10(node_hours: np.ndarray, users: List[str], emails: Dict[str, str]
@@ -89,6 +90,39 @@ def _top10(node_hours: np.ndarray, users: List[str], emails: Dict[str, str]
         out.append(ReportRow(u, emails.get(u, f"{u}@ll.mit.edu"),
                              float(node_hours[i])))
     return out
+
+
+def weekly_from_buckets(buckets: Sequence[tuple],
+                        emails: Dict[str, str] = None,
+                        interval_hours: float = SNAPSHOT_INTERVAL_HOURS
+                        ) -> WeeklyReport:
+    """Weekly report from pre-aggregated per-user utilization flags.
+
+    ``buckets`` is a sequence of ``(timestamp, {user: (low_gpu_nodes,
+    low_cpu_nodes, high_cpu_nodes)})`` — one entry per archive-cadence
+    bucket, as maintained by the daemon's
+    :class:`~repro.daemon.store.HistoryStore` tiers.  Each flagged node
+    contributes ``interval_hours`` node-hours, exactly like a replayed
+    archive row, but the cost is O(buckets · users) instead of
+    O(snapshots · nodes).
+    """
+    emails = emails or {}
+    if not buckets:
+        return WeeklyReport(0, 0, [], [], [])
+    users = sorted({u for _, flags in buckets for u in flags})
+    uidx = {u: i for i, u in enumerate(users)}
+    hours = np.zeros((3, len(users)), np.float64)
+    for _, flags in buckets:
+        for user, counts in flags.items():
+            for cat in range(3):
+                hours[cat, uidx[user]] += counts[cat] * interval_hours
+    ts = [t for t, _ in buckets]
+    return WeeklyReport(
+        start=float(min(ts)), end=float(max(ts)),
+        low_gpu=_top10(hours[0], users, emails),
+        low_cpu=_top10(hours[1], users, emails),
+        high_cpu=_top10(hours[2], users, emails),
+    )
 
 
 def weekly_analysis(rows: Union[Sequence[dict],

@@ -15,6 +15,7 @@ Two ways to drive capture:
 from __future__ import annotations
 
 import os
+import threading
 import time
 from typing import Iterable, List, Optional
 
@@ -27,24 +28,31 @@ class SnapshotArchive:
     def __init__(self, root: str, cluster: str = "txgreen"):
         self.root = os.path.join(root, cluster)
         os.makedirs(self.root, exist_ok=True)
+        # serializes the header-or-body decision against the append that
+        # follows it: two concurrent writers (bus subscriber + periodic
+        # archiver, two daemons sharing an archive object) must not both
+        # see "file missing" and each write a header row
+        self._lock = threading.Lock()
 
     def _path_for(self, timestamp: float) -> str:
         day = time.strftime("%Y-%m-%d", time.gmtime(timestamp))
         return os.path.join(self.root, f"llload-{day}.tsv")
 
+    def _append_text(self, path: str, tsv_text: str):
+        with self._lock:
+            # decide header-vs-body *after* opening in append mode: the
+            # open itself creates the file, so "did it exist" is judged by
+            # the write position, which cannot race with our own creation
+            with open(path, "a") as f:
+                body = (tsv_text if f.tell() == 0
+                        else tsv_text.split("\n", 1)[1])
+                f.write(body)
+
     def append(self, snap: ClusterSnapshot):
-        path = self._path_for(snap.timestamp)
-        text = snap.to_tsv()
-        body = text.split("\n", 1)[1] if os.path.exists(path) else text
-        with open(path, "a") as f:
-            f.write(body)
+        self._append_text(self._path_for(snap.timestamp), snap.to_tsv())
 
     def append_tsv(self, timestamp: float, tsv_text: str):
-        path = self._path_for(timestamp)
-        body = (tsv_text.split("\n", 1)[1] if os.path.exists(path)
-                else tsv_text)
-        with open(path, "a") as f:
-            f.write(body)
+        self._append_text(self._path_for(timestamp), tsv_text)
 
     def files(self) -> List[str]:
         return sorted(os.path.join(self.root, f)

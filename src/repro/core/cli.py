@@ -3,15 +3,19 @@
 Usage (mirrors the paper's flags, plus the streaming extensions):
 
     python -m repro.core.cli [-g] [--all] [-t N] [-n HOST,HOST] [--tsv] [-q]
-                             [--user USER] [--source sim|live|jobs|archive]
+                             [--user USER]
+                             [--source sim|live|jobs|archive|remote]
                              [--cluster NAME[,NAME]] [--archive-dir DIR]
+                             [--url URL[,URL]]
                              [--watch] [--interval S] [--frames N]
 
 ``--source sim`` (default) runs against the simulated LLSC cluster populated
 with the paper's workload mixture; ``--source live`` collects from this
 host + any in-process JAX jobs; ``--source jobs`` shows only the in-process
 JAX job registry; ``--source archive --archive-dir DIR`` replays archived
-TSV snapshots.  Sources are built by name through the
+TSV snapshots; ``--source remote --url http://host:port`` reads an LLload
+daemon (``python -m repro.daemon``) over HTTP — several URLs fan out and
+merge.  Sources are built by name through the
 :mod:`repro.monitor` registry — ``--cluster a,b`` fans the chosen source
 out over several clusters and merges the snapshots.  ``--watch`` streams
 the selected view through the TelemetryBus (cached reads between polls).
@@ -19,6 +23,7 @@ the selected view through the TelemetryBus (cached reads between polls).
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 
 from repro.core import formatting
@@ -51,18 +56,64 @@ def render_view(snap, args) -> str:
     return formatting.format_user_view(snap.cluster, blk, args.gpu)
 
 
-def _make_source(args):
-    clusters = [c.strip() for c in (args.cluster or "").split(",")
-                if c.strip()]
+def make_source_from_args(args):
+    """Build the MetricSource selected by parsed CLI/daemon flags (shared
+    by this CLI and ``python -m repro.daemon``)."""
+    clusters = [c.strip() for c in (getattr(args, "cluster", None) or "")
+                .split(",") if c.strip()]
     kwargs = {}
     if args.source == "archive":
         if not args.archive_dir:
             raise SystemExit("--source archive requires --archive-dir")
         kwargs["root"] = args.archive_dir
-    if args.watch and args.source == "sim":
+    if args.source == "remote":
+        # handled fully here: the generic build_source cluster fan-out
+        # would create one RemoteSource per cluster name all pointing at
+        # the same URL (every node merged twice) — for remote, fan-out is
+        # per *URL*, and --cluster just names the children one-to-one
+        urls = [u.strip() for u in (getattr(args, "url", None) or "")
+                .split(",") if u.strip()]
+        if not urls:
+            raise SystemExit("--source remote requires --url")
+        if clusters and len(clusters) != len(urls):
+            raise SystemExit(
+                f"--source remote: --cluster must name each --url "
+                f"one-to-one (got {len(clusters)} names for "
+                f"{len(urls)} URLs)")
+        registry = default_registry()
+        sources = [registry.create("remote", url=u, cluster=c)
+                   for u, c in zip(urls, clusters or [None] * len(urls))]
+        if len(sources) == 1:
+            return sources[0]
+        from repro.monitor import MultiClusterSource
+        return MultiClusterSource(sources)
+    if getattr(args, "watch", False) and args.source == "sim":
         # advance simulated time on each poll so the stream evolves
         kwargs["advance_s"] = 60.0
     return build_source(args.source, clusters=clusters, **kwargs)
+
+
+_make_source = make_source_from_args       # back-compat alias
+
+
+def _positive_int(s: str) -> int:
+    try:
+        v = int(s)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"invalid int value: {s!r}")
+    if v <= 0:
+        raise argparse.ArgumentTypeError(f"must be > 0, got {s!r}")
+    return v
+
+
+def _positive_float(s: str) -> float:
+    try:
+        v = float(s)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"invalid float value: {s!r}")
+    if v <= 0:
+        raise argparse.ArgumentTypeError(f"must be > 0, got {s!r}")
+    return v
 
 
 def main(argv=None) -> int:
@@ -72,7 +123,7 @@ def main(argv=None) -> int:
                     help="include GPU utilization columns")
     ap.add_argument("--all", action="store_true", dest="all_users",
                     help="all users (privileged)")
-    ap.add_argument("-t", type=int, default=None, metavar="N",
+    ap.add_argument("-t", type=_positive_int, default=None, metavar="N",
                     help="top-N nodes by CPU load")
     ap.add_argument("-n", type=str, default=None, metavar="NODELIST",
                     help="comma-separated node detail")
@@ -87,15 +138,19 @@ def main(argv=None) -> int:
                          "merge (multi-cluster view)")
     ap.add_argument("--archive-dir", default=None,
                     help="TSV archive root for --source archive")
+    ap.add_argument("--url", default=None, metavar="URL[,URL]",
+                    help="LLload daemon URL(s) for --source remote; "
+                         "several fan out and merge")
     ap.add_argument("--watch", action="store_true",
                     help="stream the view, refreshing every --interval s")
-    ap.add_argument("--interval", type=float, default=2.0, metavar="S",
-                    help="watch refresh interval (seconds)")
-    ap.add_argument("--frames", type=int, default=None, metavar="N",
+    ap.add_argument("--interval", type=_positive_float, default=2.0,
+                    metavar="S", help="watch refresh interval (seconds)")
+    ap.add_argument("--frames", type=_positive_int, default=None,
+                    metavar="N",
                     help="stop watch after N frames (default: until ^C)")
     args = ap.parse_args(argv)
 
-    source = _make_source(args)
+    source = make_source_from_args(args)
 
     if args.watch:
         bus = TelemetryBus(ttl_s=3.0 * args.interval)
@@ -112,18 +167,32 @@ def main(argv=None) -> int:
         return 0
 
     snap = source.snapshot()
-    if args.tsv:
-        sys.stdout.write(render_view(snap, args))
+    # one-shot output can land in a closed pager (`LLload ... | head`):
+    # a BrokenPipeError is a normal exit, not a traceback
+    try:
+        if args.tsv:
+            sys.stdout.write(render_view(snap, args))
+            sys.stdout.flush()
+            return 0
+        # legacy flag precedence: -t wins over -n (matches
+        # render_view/--watch)
+        if args.n is not None and args.t is None:
+            hosts = [h.strip() for h in args.n.split(",") if h.strip()]
+            ll = LLload(snap, privileged_users=PRIVILEGED)
+            rep = ll.node_detail_report(hosts)
+            print(formatting.format_node_detail(rep.details, rep.missing))
+            sys.stdout.flush()
+            return 1 if (rep.missing and not rep.details) else 0
+        print(render_view(snap, args))
+        sys.stdout.flush()
         return 0
-    # legacy flag precedence: -t wins over -n (matches render_view/--watch)
-    if args.n is not None and args.t is None:
-        hosts = [h.strip() for h in args.n.split(",") if h.strip()]
-        ll = LLload(snap, privileged_users=PRIVILEGED)
-        rep = ll.node_detail_report(hosts)
-        print(formatting.format_node_detail(rep.details, rep.missing))
-        return 1 if (rep.missing and not rep.details) else 0
-    print(render_view(snap, args))
-    return 0
+    except BrokenPipeError:
+        # keep the interpreter's exit-time stdout flush from tracebacking
+        try:
+            os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        except (OSError, ValueError, AttributeError):
+            pass      # stdout is not a real fd (tests, embedding)
+        return 0
 
 
 if __name__ == "__main__":

@@ -151,6 +151,11 @@ def rows_from_tsv(text: str) -> List[dict]:
     header = lines[0].split("\t")
     out = []
     for ln in lines[1:]:
+        # tolerate duplicate header rows mid-file: cross-process archive
+        # writers can both lose the "does the file exist yet" race (the
+        # in-process case is locked in SnapshotArchive)
+        if ln.startswith(f"{header[0]}\t"):
+            continue
         vals = ln.split("\t")
         row = dict(zip(header, vals))
         for k in ("timestamp", "load", "mem_total_gb", "mem_used_gb",

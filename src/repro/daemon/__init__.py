@@ -1,0 +1,23 @@
+"""repro.daemon — the LLload telemetry service (DESIGN.md §6).
+
+One daemon collects through the telemetry bus; any number of clients
+read over HTTP: JSON snapshots on a versioned wire schema, rendered
+views, trend/weekly queries answered from a multi-resolution history
+store, and Prometheus text exposition.  :class:`RemoteSource` closes the
+loop: a daemon is itself a :class:`MetricSource`, so CLIs — and other
+daemons — consume it like any local source.
+"""
+from repro.daemon.client import RemoteClient, RemoteError, RemoteSource
+from repro.daemon.promtext import parse_prometheus, render_prometheus
+from repro.daemon.protocol import (WIRE_VERSION, WireError, decode_snapshot,
+                                   encode_snapshot)
+from repro.daemon.server import (LLloadDaemon, serve, serve_background)
+from repro.daemon.store import (DEFAULT_TIERS, HistoryStore, TierPoint,
+                                TierSpec)
+
+__all__ = [
+    "DEFAULT_TIERS", "HistoryStore", "LLloadDaemon", "RemoteClient",
+    "RemoteError", "RemoteSource", "TierPoint", "TierSpec", "WIRE_VERSION",
+    "WireError", "decode_snapshot", "encode_snapshot", "parse_prometheus",
+    "render_prometheus", "serve", "serve_background",
+]

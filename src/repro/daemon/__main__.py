@@ -1,0 +1,5 @@
+"""``python -m repro.daemon`` — run the LLload telemetry daemon."""
+from repro.daemon.server import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,108 @@
+"""Remote source + client for the LLload daemon.
+
+:class:`RemoteSource` implements the :class:`~repro.monitor.source.
+MetricSource` protocol over HTTP, so a daemon on another host plugs into
+everything the telemetry layer already does: ``LLload --source remote
+--url http://host:port`` (one-shot and ``--watch``), bus registration,
+archive subscription, weekly analysis — and a daemon can itself serve a
+``RemoteSource``, fanning out over other daemons (cluster-of-clusters).
+
+Only stdlib ``urllib`` is used; the wire format is
+:mod:`repro.daemon.protocol`.
+"""
+from __future__ import annotations
+
+import urllib.error
+import urllib.parse
+import urllib.request
+from typing import Any, Dict, Optional
+
+from repro.core.metrics import ClusterSnapshot
+from repro.daemon import protocol
+
+
+class RemoteError(RuntimeError):
+    """The daemon was unreachable or answered with an error."""
+
+
+class RemoteClient:
+    """Thin typed wrapper over every daemon endpoint."""
+
+    def __init__(self, url: str, *, timeout_s: float = 10.0):
+        self.url = url.rstrip("/")
+        self.timeout_s = timeout_s
+
+    # ------------------------------------------------------------ plumbing
+    def _get(self, path: str,
+             query: Optional[Dict[str, object]] = None) -> bytes:
+        url = self.url + path
+        if query:
+            url += "?" + urllib.parse.urlencode(
+                {k: v for k, v in query.items() if v is not None})
+        try:
+            with urllib.request.urlopen(url, timeout=self.timeout_s) as rsp:
+                return rsp.read()
+        except urllib.error.HTTPError as exc:
+            detail = ""
+            try:
+                err = protocol.loads(exc.read())
+                detail = f": {err.get('error', {}).get('message', '')}"
+            except Exception:  # noqa: BLE001 — best-effort error detail
+                pass
+            raise RemoteError(
+                f"GET {url} -> HTTP {exc.code}{detail}") from exc
+        except (urllib.error.URLError, OSError) as exc:
+            raise RemoteError(f"GET {url} failed: {exc}") from exc
+
+    def _get_json(self, path: str,
+                  query: Optional[Dict[str, object]] = None) -> Any:
+        return protocol.loads(self._get(path, query))
+
+    # ------------------------------------------------------------ endpoints
+    def healthz(self) -> Dict[str, Any]:
+        return self._get_json("/healthz")
+
+    def stats(self) -> Dict[str, Any]:
+        return self._get_json("/stats")
+
+    def snapshot(self) -> ClusterSnapshot:
+        return protocol.decode_snapshot(self._get_json("/snapshot"))
+
+    def trend(self, *, window_s: Optional[float] = None,
+              tier: Optional[str] = None) -> Dict[str, Any]:
+        obj = self._get_json("/trend", {"window": window_s, "tier": tier})
+        return protocol._check_envelope(obj, "trend")
+
+    def weekly(self, *, start: Optional[float] = None,
+               end: Optional[float] = None) -> Dict[str, Any]:
+        obj = self._get_json("/weekly", {"start": start, "end": end})
+        return protocol._check_envelope(obj, "weekly")
+
+    def metrics_text(self) -> str:
+        return self._get("/metrics").decode("utf-8")
+
+    def view(self, kind: str, **query) -> str:
+        return self._get(f"/view/{kind}", query).decode("utf-8")
+
+
+class RemoteSource:
+    """A daemon as a :class:`MetricSource` — collection is a GET.
+
+    ``interval_hint`` stays ``None`` unless the caller sets it: probing
+    the daemon for its TTL would add a blocking round-trip to one-shot
+    use (and to ``MultiClusterSource`` construction, serially, before
+    its failure-isolating thread fan-out can help), while over-polling
+    is already harmless — requests inside the daemon's TTL window are
+    answered from its byte-cache.
+    """
+
+    def __init__(self, url: str, *, name: Optional[str] = None,
+                 timeout_s: float = 10.0,
+                 interval_hint: Optional[float] = None):
+        self.client = RemoteClient(url, timeout_s=timeout_s)
+        host = urllib.parse.urlsplit(self.client.url).netloc
+        self.name = name or f"remote:{host}"
+        self.interval_hint = interval_hint
+
+    def snapshot(self) -> ClusterSnapshot:
+        return self.client.snapshot()

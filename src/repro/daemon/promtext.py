@@ -1,0 +1,134 @@
+"""Prometheus text exposition (the daemon's ``/metrics`` endpoint).
+
+Renders a :class:`~repro.core.metrics.ClusterSnapshot` plus daemon
+counters in the Prometheus text format (version 0.0.4): per-node gauges
+carry ``cluster``/``host`` labels, per-user gauges carry ``user``, and
+the daemon's own request/cache/collection counters are exposed so a
+scraper can watch the cache doing its job.  No client library needed —
+the format is lines of ``name{labels} value``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.core.metrics import ClusterSnapshot
+
+CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+_NODE_GAUGES = [
+    # (metric suffix, help text, NodeSnapshot attribute)
+    ("node_cores_total", "CPU cores on the node", "cores_total"),
+    ("node_cores_used", "CPU cores allocated", "cores_used"),
+    ("node_load", "5-minute load average (absolute)", "load"),
+    ("node_norm_load", "load / cores (1.0 == fully loaded)", "norm_load"),
+    ("node_mem_total_gb", "system memory (GB)", "mem_total_gb"),
+    ("node_mem_used_gb", "system memory used (GB)", "mem_used_gb"),
+    ("node_gpus_total", "devices on the node", "gpus_total"),
+    ("node_gpus_used", "devices allocated", "gpus_used"),
+    ("node_gpu_load", "mean device duty cycle (0..1+)", "gpu_load"),
+    ("node_gpu_mem_total_gb", "device memory (GB)", "gpu_mem_total_gb"),
+    ("node_gpu_mem_used_gb", "device memory used (GB)", "gpu_mem_used_gb"),
+]
+
+
+def _escape(value: str) -> str:
+    return (value.replace("\\", r"\\").replace('"', r'\"')
+            .replace("\n", r"\n"))
+
+
+def _labels(pairs: Iterable[Tuple[str, str]]) -> str:
+    inner = ",".join(f'{k}="{_escape(v)}"' for k, v in pairs)
+    return "{" + inner + "}" if inner else ""
+
+
+def _fmt(v: float) -> str:
+    return repr(float(v))
+
+
+class _Writer:
+    def __init__(self):
+        self.lines: List[str] = []
+
+    def header(self, name: str, help_text: str, kind: str):
+        self.lines.append(f"# HELP {name} {help_text}")
+        self.lines.append(f"# TYPE {name} {kind}")
+
+    def sample(self, name: str, labels: Iterable[Tuple[str, str]],
+               value: float):
+        self.lines.append(f"{name}{_labels(labels)} {_fmt(value)}")
+
+    def text(self) -> str:
+        return "\n".join(self.lines) + "\n"
+
+
+def render_prometheus(snap: ClusterSnapshot, *,
+                      counters: Optional[Dict[str, float]] = None,
+                      prefix: str = "llload_") -> str:
+    """One scrape body: snapshot gauges + optional daemon counters.
+
+    ``counters`` maps ``name`` or ``name{label="v"}``-style keys (already
+    flattened by the caller) to monotonic values; they are emitted as
+    ``counter`` type under ``<prefix>daemon_<name>``.
+    """
+    w = _Writer()
+    cluster = snap.cluster
+
+    w.header(f"{prefix}snapshot_timestamp_seconds",
+             "snapshot time (cluster clock)", "gauge")
+    w.sample(f"{prefix}snapshot_timestamp_seconds",
+             [("cluster", cluster)], snap.timestamp)
+    w.header(f"{prefix}cluster_nodes", "nodes in the snapshot", "gauge")
+    w.sample(f"{prefix}cluster_nodes", [("cluster", cluster)],
+             len(snap.nodes))
+
+    for suffix, help_text, attr in _NODE_GAUGES:
+        name = prefix + suffix
+        w.header(name, help_text, "gauge")
+        for host, node in snap.nodes.items():
+            w.sample(name, [("cluster", cluster), ("host", host)],
+                     getattr(node, attr))
+
+    by_user = snap.nodes_by_user()
+    w.header(f"{prefix}user_nodes", "nodes owned by the user", "gauge")
+    for user in sorted(by_user):
+        w.sample(f"{prefix}user_nodes",
+                 [("cluster", cluster), ("user", user)],
+                 len(by_user[user]))
+    w.header(f"{prefix}user_gpu_duty",
+             "mean device duty cycle across the user's device nodes",
+             "gauge")
+    for user in sorted(by_user):
+        gpu_nodes = [snap.nodes[h] for h in by_user[user]
+                     if h in snap.nodes and snap.nodes[h].gpus_total > 0]
+        if gpu_nodes:
+            duty = sum(n.gpu_load for n in gpu_nodes) / len(gpu_nodes)
+            w.sample(f"{prefix}user_gpu_duty",
+                     [("cluster", cluster), ("user", user)], duty)
+
+    # counter keys may carry flattened labels: 'requests_total{endpoint="/x"}'
+    emitted = set()
+    for name in sorted(counters or {}):
+        base = f"{prefix}daemon_{name.split('{', 1)[0]}"
+        if base not in emitted:
+            w.header(base, "daemon counter", "counter")
+            emitted.add(base)
+        w.lines.append(f"{prefix}daemon_{name} {_fmt(counters[name])}")
+    return w.text()
+
+
+def parse_prometheus(text: str) -> Dict[str, Dict[str, float]]:
+    """Tiny exposition-format parser (for tests and the smoke job):
+    returns ``{metric_name: {label_string: value}}``."""
+    out: Dict[str, Dict[str, float]] = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        body, _, value = line.rpartition(" ")
+        if "{" in body:
+            name = body[:body.index("{")]
+            labels = body[body.index("{"):]
+        else:
+            name, labels = body, ""
+        out.setdefault(name, {})[labels] = float(value)
+    return out

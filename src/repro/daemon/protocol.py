@@ -1,0 +1,117 @@
+"""Versioned JSON wire schemas for the LLload daemon (DESIGN.md §6).
+
+Every payload travels inside an envelope::
+
+    {"v": <wire version>, "kind": "<payload kind>", <kind>: {...}}
+
+Version policy: the version is bumped when a decoder of the previous
+version could *misread* a payload (field removed, meaning changed).
+Purely additive fields do NOT bump the version — decoders ignore unknown
+keys, so old clients keep working against newer daemons.  A decoder
+refuses envelopes newer than :data:`WIRE_VERSION` (it cannot know what
+changed) and accepts anything older it still understands.
+
+The snapshot codec is **lossless**: ``decode_snapshot(encode_snapshot(s))``
+reproduces every node, job, email and float bit-for-bit (JSON round-trips
+Python floats exactly via ``repr``), which is what makes a remote
+``LLload`` render byte-identical views.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List
+
+from repro.core.metrics import ClusterSnapshot, JobRecord, NodeSnapshot
+
+WIRE_VERSION = 1
+
+_NODE_FIELDS = [
+    "hostname", "cores_total", "cores_used", "load",
+    "mem_total_gb", "mem_used_gb",
+    "gpus_total", "gpus_used", "gpu_load",
+    "gpu_mem_total_gb", "gpu_mem_used_gb",
+]
+
+_JOB_FIELDS = [
+    "job_id", "username", "name", "nodes", "cores_per_node", "state",
+    "job_type", "gpus_per_node", "gpu_request", "start_time", "partition",
+    "mem_per_node_gb",
+]
+
+
+class WireError(ValueError):
+    """Malformed or incompatible wire payload."""
+
+
+# ------------------------------------------------------------------ encode
+
+def envelope(kind: str, payload: Any) -> Dict[str, Any]:
+    return {"v": WIRE_VERSION, "kind": kind, kind: payload}
+
+
+def encode_snapshot(snap: ClusterSnapshot) -> Dict[str, Any]:
+    payload = {
+        "cluster": snap.cluster,
+        "timestamp": snap.timestamp,
+        # insertion order is preserved through JSON objects, so node
+        # iteration order survives the round trip
+        "nodes": [{f: getattr(n, f) for f in _NODE_FIELDS}
+                  for n in snap.nodes.values()],
+        "jobs": [{f: getattr(j, f) for f in _JOB_FIELDS}
+                 for j in snap.jobs],
+        "user_emails": dict(snap.user_emails),
+    }
+    return envelope("snapshot", payload)
+
+
+def encode_error(message: str, status: int = 500) -> Dict[str, Any]:
+    return envelope("error", {"message": message, "status": status})
+
+
+def dumps(obj: Any) -> bytes:
+    return json.dumps(obj, separators=(",", ":")).encode("utf-8")
+
+
+# ------------------------------------------------------------------ decode
+
+def _check_envelope(obj: Any, kind: str) -> Dict[str, Any]:
+    if not isinstance(obj, dict) or "v" not in obj:
+        raise WireError("not a wire envelope (missing 'v')")
+    v = obj["v"]
+    if not isinstance(v, int) or v > WIRE_VERSION:
+        raise WireError(
+            f"wire version {v!r} is newer than supported ({WIRE_VERSION}); "
+            "upgrade this client")
+    if obj.get("kind") == "error":
+        err = obj.get("error") or {}
+        raise WireError(f"remote error: {err.get('message', 'unknown')}")
+    if obj.get("kind") != kind or kind not in obj:
+        raise WireError(f"expected kind {kind!r}, got {obj.get('kind')!r}")
+    return obj[kind]
+
+
+def decode_snapshot(obj: Any) -> ClusterSnapshot:
+    payload = _check_envelope(obj, "snapshot")
+    try:
+        nodes: Dict[str, NodeSnapshot] = {}
+        for nd in payload["nodes"]:
+            node = NodeSnapshot(**{f: nd[f] for f in _NODE_FIELDS})
+            nodes[node.hostname] = node
+        jobs: List[JobRecord] = []
+        for jd in payload["jobs"]:
+            jobs.append(JobRecord(**{f: jd[f] for f in _JOB_FIELDS
+                                     if f in jd}))
+        return ClusterSnapshot(
+            cluster=payload["cluster"],
+            timestamp=payload["timestamp"],
+            nodes=nodes, jobs=jobs,
+            user_emails=dict(payload.get("user_emails", {})))
+    except (KeyError, TypeError) as exc:
+        raise WireError(f"malformed snapshot payload: {exc}") from exc
+
+
+def loads(data: bytes) -> Any:
+    try:
+        return json.loads(data.decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as exc:
+        raise WireError(f"not JSON: {exc}") from exc

@@ -1,0 +1,418 @@
+"""LLload daemon — the telemetry bus served over HTTP (DESIGN.md §6).
+
+One process collects (through a :class:`~repro.monitor.bus.TelemetryBus`
+and any :class:`~repro.monitor.source.MetricSource`), many clients read
+over the network::
+
+    python -m repro.daemon --source sim --port 8080
+    curl localhost:8080/healthz
+    LLload --source remote --url http://localhost:8080 -t 10
+
+Endpoints (all GET):
+
+    /snapshot            versioned wire JSON of the current snapshot
+    /view/user?user=U    rendered per-user view (text, ``&gpu=1`` for -g)
+    /view/top?n=N        rendered top-N loaded nodes (text)
+    /view/nodes?hosts=A,B  rendered node detail (text)
+    /trend?window=S      downsampled series from the history store
+    /weekly              weekly low/over-utilization report from tiers
+    /healthz             liveness + wire version
+    /stats               bus / store / request counters (JSON)
+    /metrics             Prometheus text exposition
+
+This is the repo's first request-serving hot path: responses for the
+cacheable endpoints are encoded **once** per TTL window and the same
+bytes are handed to every concurrent reader — N readers cost one
+collection *and* one JSON encode (`/stats` shows ``http_cache_hits``
+doing the work).
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+import urllib.parse
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, Optional, Tuple
+
+from repro.core import formatting
+from repro.core.llload import LLload
+from repro.daemon import promtext, protocol
+from repro.daemon.store import HistoryStore
+from repro.monitor import TelemetryBus, build_source
+
+JSON_CT = "application/json; charset=utf-8"
+TEXT_CT = "text/plain; charset=utf-8"
+
+# endpoints whose bytes may be reused within a TTL window (everything
+# derived purely from the current snapshot / store state)
+_CACHEABLE = ("/snapshot", "/view/", "/metrics", "/trend", "/weekly")
+
+# the fixed label vocabulary for the per-endpoint request counter:
+# arbitrary client paths must not mint new Prometheus label values (label
+# injection + unbounded counter growth), so anything else counts as other
+_KNOWN_ENDPOINTS = frozenset([
+    "/snapshot", "/view/user", "/view/top", "/view/nodes",
+    "/trend", "/weekly", "/healthz", "/stats", "/metrics",
+])
+
+
+class HTTPError(Exception):
+    def __init__(self, status: int, message: str):
+        super().__init__(message)
+        self.status = status
+        self.message = message
+
+
+class LLloadDaemon:
+    """The request-handling core, independent of the HTTP plumbing (so
+    tests and benchmarks can call :meth:`handle` directly)."""
+
+    def __init__(self, source, *, ttl_s: float = 2.0,
+                 store: Optional[HistoryStore] = None,
+                 privileged: Optional[set] = None,
+                 history: int = 64):
+        self.bus = TelemetryBus(ttl_s=ttl_s, history=history)
+        self.bus.register(source)
+        self.source = source
+        self.store = store if store is not None else HistoryStore()
+        self.bus.subscribe(self.store.subscriber(source.name))
+        self.privileged = privileged if privileged is not None else set()
+        self.ttl_s = ttl_s
+        self._started = time.monotonic()
+        self._lock = threading.Lock()
+        self._requests: Dict[str, int] = {}
+        self._cache_hits = 0
+        self._errors = 0
+        # endpoint byte-cache: key -> (expires_monotonic, status, ct, body)
+        self._cache: Dict[str, Tuple[float, int, str, bytes]] = {}
+        self._build_locks: Dict[str, threading.Lock] = {}
+
+    # ----------------------------------------------------------- lifecycle
+    def start_sampler(self, interval_s: Optional[float] = None):
+        self.bus.start(interval_s)
+
+    def close(self):
+        self.bus.stop()
+
+    # ------------------------------------------------------------ counters
+    def counters(self) -> Dict[str, float]:
+        with self._lock:
+            out = {f'requests_total{{endpoint="{ep}"}}': float(n)
+                   for ep, n in self._requests.items()}
+            out["http_cache_hits_total"] = float(self._cache_hits)
+            out["http_errors_total"] = float(self._errors)
+        st = self.bus.stats(self.source.name)
+        out["bus_collections_total"] = float(st.collections)
+        out["bus_reads_total"] = float(st.reads)
+        return out
+
+    # ------------------------------------------------------------- handle
+    def handle(self, path: str,
+               query: Optional[Dict[str, str]] = None
+               ) -> Tuple[int, str, bytes]:
+        """Serve one request; returns (status, content type, body)."""
+        query = query or {}
+        endpoint = path if path in _KNOWN_ENDPOINTS else "other"
+        with self._lock:
+            self._requests[endpoint] = self._requests.get(endpoint, 0) + 1
+
+        try:
+            if path in ("/healthz", "/stats"):     # always fresh
+                return self._dispatch(path, query)
+            if any(path == p or (p.endswith("/") and path.startswith(p))
+                   for p in _CACHEABLE):
+                return self._cached(path, query)
+            raise HTTPError(404, f"unknown endpoint {path!r}")
+        except HTTPError as exc:
+            with self._lock:
+                self._errors += 1
+            body = protocol.dumps(protocol.encode_error(exc.message,
+                                                        exc.status))
+            return exc.status, JSON_CT, body
+        except Exception as exc:  # noqa: BLE001 — never kill the server
+            with self._lock:
+                self._errors += 1
+            body = protocol.dumps(protocol.encode_error(
+                f"{type(exc).__name__}: {exc}", 500))
+            return 500, JSON_CT, body
+
+    def _cached(self, path: str, query: Dict[str, str]
+                ) -> Tuple[int, str, bytes]:
+        key = path + "?" + urllib.parse.urlencode(sorted(query.items()))
+        now = time.monotonic()
+        with self._lock:
+            hit = self._cache.get(key)
+            if hit is not None and now < hit[0]:
+                self._cache_hits += 1
+                return hit[1:]
+            build_lock = self._build_locks.setdefault(key, threading.Lock())
+        with build_lock:
+            # single-flight: whoever got here first built it already
+            now = time.monotonic()
+            with self._lock:
+                hit = self._cache.get(key)
+                if hit is not None and now < hit[0]:
+                    self._cache_hits += 1
+                    return hit[1:]
+            ok = False
+            try:
+                status, ct, body = self._dispatch(path, query)
+                ok = status == 200
+            finally:
+                if not ok:
+                    # nothing was cached (dispatch raised or errored), so
+                    # the build lock would leak one entry per distinct bad
+                    # path/query; duplicate rebuilds of an error are cheap
+                    with self._lock:
+                        self._build_locks.pop(key, None)
+            if ok:
+                with self._lock:
+                    if len(self._cache) >= 512:
+                        # bound memory against unbounded distinct query
+                        # strings: drop expired entries, then worst case
+                        # start over (rebuilding is one TTL window of work)
+                        now = time.monotonic()
+                        self._cache = {k: v for k, v in self._cache.items()
+                                       if now < v[0]}
+                        if len(self._cache) >= 512:
+                            self._cache.clear()
+                        self._build_locks = {
+                            k: v for k, v in self._build_locks.items()
+                            if k in self._cache}
+                    self._cache[key] = (time.monotonic() + self.ttl_s,
+                                        status, ct, body)
+            return status, ct, body
+
+    # ----------------------------------------------------------- endpoints
+    def _dispatch(self, path: str, query: Dict[str, str]
+                  ) -> Tuple[int, str, bytes]:
+        if path == "/healthz":
+            return 200, JSON_CT, protocol.dumps({
+                "status": "ok",
+                "source": self.source.name,
+                "wire_version": protocol.WIRE_VERSION,
+                "uptime_s": time.monotonic() - self._started,
+                "ttl_s": self.ttl_s})
+        if path == "/stats":
+            st = self.bus.stats(self.source.name)
+            return 200, JSON_CT, protocol.dumps({
+                "bus": {"reads": st.reads, "cache_hits": st.cache_hits,
+                        "collections": st.collections, "errors": st.errors},
+                "store": self.store.sizes(),
+                "http": self.counters()})
+        if path == "/snapshot":
+            snap = self.bus.read(self.source.name)
+            return 200, JSON_CT, protocol.dumps(
+                protocol.encode_snapshot(snap))
+        if path == "/metrics":
+            snap = self.bus.read(self.source.name)
+            text = promtext.render_prometheus(snap,
+                                              counters=self.counters())
+            return 200, promtext.CONTENT_TYPE, text.encode("utf-8")
+        if path == "/trend":
+            window = _float_q(query, "window")
+            tier = query.get("tier")
+            if tier is None:
+                tier = (self.store.select_tier(window)
+                        if window is not None else "raw")
+            try:
+                wire = self.store.trend_wire(tier, window)
+            except KeyError as exc:
+                raise HTTPError(400, str(exc)) from exc
+            return 200, JSON_CT, protocol.dumps(
+                protocol.envelope("trend", wire))
+        if path == "/weekly":
+            snap = self.bus.read(self.source.name)
+            try:
+                rep = self.store.weekly_report(
+                    emails=snap.user_emails,
+                    start=_float_q(query, "start"),
+                    end=_float_q(query, "end"))
+            except KeyError as exc:
+                raise HTTPError(400, str(exc)) from exc
+            payload = {"start": rep.start, "end": rep.end}
+            for cat in ("low_gpu", "low_cpu", "high_cpu"):
+                payload[cat] = [
+                    {"username": r.username, "email": r.email,
+                     "node_hours": r.node_hours}
+                    for r in getattr(rep, cat)]
+            return 200, JSON_CT, protocol.dumps(
+                protocol.envelope("weekly", payload))
+        if path.startswith("/view/"):
+            return self._view(path[len("/view/"):], query)
+        raise HTTPError(404, f"unknown endpoint {path!r}")
+
+    def _view(self, kind: str, query: Dict[str, str]
+              ) -> Tuple[int, str, bytes]:
+        snap = self.bus.read(self.source.name)
+        ll = LLload(snap, privileged_users=self.privileged)
+        if kind == "user":
+            user = query.get("user")
+            if not user:
+                raise HTTPError(400, "/view/user requires ?user=NAME")
+            gpu = query.get("gpu", "0") not in ("0", "", "false")
+            text = formatting.format_user_view(
+                snap.cluster, ll.user_view(user), gpu)
+        elif kind == "top":
+            n = _int_q(query, "n", default=10)
+            if n <= 0:
+                raise HTTPError(400, "?n must be > 0")
+            text = formatting.format_top(ll.top_loaded(n), n)
+        elif kind == "nodes":
+            hosts = [h.strip() for h in query.get("hosts", "").split(",")
+                     if h.strip()]
+            if not hosts:
+                raise HTTPError(400, "/view/nodes requires ?hosts=A,B")
+            rep = ll.node_detail_report(hosts)
+            text = formatting.format_node_detail(rep.details, rep.missing)
+        else:
+            raise HTTPError(404, f"unknown view {kind!r}")
+        return 200, TEXT_CT, (text + "\n").encode("utf-8")
+
+
+def _float_q(query: Dict[str, str], key: str) -> Optional[float]:
+    if key not in query:
+        return None
+    try:
+        return float(query[key])
+    except ValueError as exc:
+        raise HTTPError(400, f"?{key} must be a number") from exc
+
+
+def _int_q(query: Dict[str, str], key: str, default: int) -> int:
+    if key not in query:
+        return default
+    try:
+        return int(query[key])
+    except ValueError as exc:
+        raise HTTPError(400, f"?{key} must be an integer") from exc
+
+
+# --------------------------------------------------------------------------
+# HTTP plumbing
+# --------------------------------------------------------------------------
+
+
+class _Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+
+    def do_GET(self):  # noqa: N802 — http.server API
+        parsed = urllib.parse.urlsplit(self.path)
+        query = {k: v[-1] for k, v in
+                 urllib.parse.parse_qs(parsed.query).items()}
+        status, ctype, body = self.server.daemon.handle(parsed.path, query)
+        self.send_response(status)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        try:
+            self.wfile.write(body)
+        except (BrokenPipeError, ConnectionResetError):
+            pass                       # client went away mid-response
+
+    def log_message(self, fmt, *args):  # noqa: D102 — quiet by default
+        pass
+
+
+class DaemonServer(ThreadingHTTPServer):
+    daemon_threads = True
+    allow_reuse_address = True
+
+    def __init__(self, addr, daemon: LLloadDaemon):
+        super().__init__(addr, _Handler)
+        self.daemon = daemon
+
+
+def serve(daemon: LLloadDaemon, *, host: str = "127.0.0.1",
+          port: int = 0) -> DaemonServer:
+    """Bind (port 0 => ephemeral) and return the server; the caller runs
+    ``serve_forever()`` (or ``serve_background`` does it on a thread)."""
+    return DaemonServer((host, port), daemon)
+
+
+def serve_background(daemon: LLloadDaemon, *, host: str = "127.0.0.1",
+                     port: int = 0) -> Tuple[DaemonServer, threading.Thread]:
+    server = serve(daemon, host=host, port=port)
+    thread = threading.Thread(target=server.serve_forever,
+                              name="llload-daemon", daemon=True)
+    thread.start()
+    return server, thread
+
+
+# --------------------------------------------------------------------------
+# CLI (python -m repro.daemon)
+# --------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    from repro.core.cli import _positive_float
+    from repro.monitor import default_registry
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.daemon",
+        description="LLload telemetry daemon: one collector, many "
+                    "HTTP readers")
+    ap.add_argument("--source", default="sim",
+                    choices=default_registry().names())
+    ap.add_argument("--cluster", default=None, metavar="NAME[,NAME]",
+                    help="cluster selection; several names fan out and "
+                         "merge (multi-cluster daemon)")
+    ap.add_argument("--archive-dir", default=None,
+                    help="TSV archive root for --source archive")
+    ap.add_argument("--url", default=None, metavar="URL[,URL]",
+                    help="upstream daemon URL(s) for --source remote "
+                         "(cluster-of-clusters)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080,
+                    help="0 picks an ephemeral port")
+    ap.add_argument("--ttl", type=_positive_float, default=2.0,
+                    metavar="S", help="snapshot/response cache TTL")
+    ap.add_argument("--interval", type=_positive_float, default=None,
+                    metavar="S", help="background sampler period "
+                                      "(default: source hint or TTL)")
+    ap.add_argument("--backfill", default=None, metavar="DIR",
+                    help="replay a TSV archive into the history store at "
+                         "startup (the archive must share the source's "
+                         "clock: live snapshots older than the newest "
+                         "backfilled bucket are dropped from the tiers)")
+    args = ap.parse_args(argv)
+
+    from repro.core.cli import make_source_from_args
+    source = make_source_from_args(args)
+
+    daemon = LLloadDaemon(source, ttl_s=args.ttl)
+    if args.backfill:
+        from repro.core.archive import SnapshotArchive
+        import os
+        total = 0
+        root = args.backfill
+        subdirs = [os.path.join(root, d) for d in sorted(os.listdir(root))
+                   if os.path.isdir(os.path.join(root, d))]
+        for sub in (subdirs or [root]):
+            cluster = os.path.basename(sub)
+            archive = SnapshotArchive(os.path.dirname(sub) or ".", cluster)
+            total += daemon.store.backfill(archive)
+        print(f"backfilled {total} snapshots into the history store",
+              flush=True)
+    daemon.start_sampler(args.interval)
+
+    server = serve(daemon, host=args.host, port=args.port)
+    host, port = server.server_address[:2]
+    print(f"llload daemon: source={source.name} listening on "
+          f"http://{host}:{port} (ttl {args.ttl}s)", flush=True)
+
+    import signal
+
+    def _stop(signum, frame):
+        threading.Thread(target=server.shutdown, daemon=True).start()
+
+    signal.signal(signal.SIGTERM, _stop)
+    signal.signal(signal.SIGINT, _stop)
+    try:
+        server.serve_forever()
+    finally:
+        server.server_close()
+        daemon.close()
+        print("llload daemon: stopped", flush=True)
+    return 0

@@ -1,0 +1,319 @@
+"""Multi-resolution downsampling history store (DESIGN.md §6).
+
+Raw snapshots land in a bounded ring; every append also folds a
+per-snapshot *summary* into coarser tiers (15-minute, hourly by default)
+that keep min/mean/max aggregates per time bucket.  ``/trend`` and
+``/weekly`` answer from the pre-aggregated tiers instead of replaying raw
+snapshots, so the cost of a week-window query is the number of *buckets*,
+not the number of snapshots — and raw snapshots can age out of the ring
+without losing the history the coarse tiers already absorbed.
+
+Per-user utilization flags (the weekly low/over-utilization node counts,
+paper §V-A thresholds) are folded into the 15-minute tier from one
+representative snapshot per bucket — the same cadence the TSV archive
+captures — so :meth:`HistoryStore.weekly_report` reproduces the archive
+pipeline's weekly analysis from tiers alone.
+
+An existing :class:`~repro.core.archive.SnapshotArchive` can be replayed
+into the store with :meth:`HistoryStore.backfill`, so a freshly started
+daemon serves week-deep ``/trend`` and ``/weekly`` immediately.
+"""
+from __future__ import annotations
+
+import collections
+import copy
+import dataclasses
+import math
+import threading
+from typing import Deque, Dict, Iterable, List, Optional, Tuple
+
+from repro.core.analysis import (SNAPSHOT_INTERVAL_HOURS, WeeklyReport,
+                                 weekly_from_buckets)
+from repro.core.metrics import ClusterSnapshot
+
+
+@dataclasses.dataclass
+class Agg:
+    """Running min/mean/max over the values folded into one bucket."""
+    min: float = math.inf
+    mean: float = 0.0
+    max: float = -math.inf
+    n: int = 0
+
+    def fold(self, v: float):
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+        self.mean += (v - self.mean) / (self.n + 1)
+        self.n += 1
+
+    def to_wire(self) -> Dict[str, float]:
+        return {"min": self.min, "mean": self.mean, "max": self.max}
+
+
+_AGG_FIELDS = ("norm_load", "gpu_load", "nodes", "cores_used",
+               "mem_used_gb", "gpus_used")
+
+
+@dataclasses.dataclass
+class TierPoint:
+    """One downsampled bucket: aggregates over every snapshot folded in."""
+    bucket_start: float            # snapshot-time bucket boundary
+    count: int = 0                 # snapshots folded into this bucket
+    norm_load: Agg = dataclasses.field(default_factory=Agg)
+    gpu_load: Agg = dataclasses.field(default_factory=Agg)
+    nodes: Agg = dataclasses.field(default_factory=Agg)
+    cores_used: Agg = dataclasses.field(default_factory=Agg)
+    mem_used_gb: Agg = dataclasses.field(default_factory=Agg)
+    gpus_used: Agg = dataclasses.field(default_factory=Agg)
+    # user -> (low_gpu_nodes, low_cpu_nodes, high_cpu_nodes) from the
+    # bucket's representative (first) snapshot — the archive-cadence view
+    user_flags: Dict[str, Tuple[int, int, int]] = \
+        dataclasses.field(default_factory=dict)
+
+    def fold(self, summary: "_Summary", *, representative: bool):
+        for f in _AGG_FIELDS:
+            getattr(self, f).fold(getattr(summary, f))
+        if representative or not self.user_flags:
+            self.user_flags = summary.user_flags
+        self.count += 1
+
+    def to_wire(self) -> Dict[str, object]:
+        out: Dict[str, object] = {"t": self.bucket_start, "count": self.count}
+        for f in _AGG_FIELDS:
+            out[f] = getattr(self, f).to_wire()
+        return out
+
+
+@dataclasses.dataclass
+class _Summary:
+    """Cluster-level scalars of one snapshot (computed once per append)."""
+    timestamp: float
+    norm_load: float
+    gpu_load: float
+    nodes: float
+    cores_used: float
+    mem_used_gb: float
+    gpus_used: float
+    user_flags: Dict[str, Tuple[int, int, int]]
+
+
+def summarize(snap: ClusterSnapshot,
+              low_threshold: Optional[float] = None) -> _Summary:
+    from repro.core.analysis import LOW_THRESHOLD
+
+    low = LOW_THRESHOLD if low_threshold is None else low_threshold
+    high = 1.0 + (1.0 - low)
+    nodes = list(snap.nodes.values())
+    gpu_nodes = [n for n in nodes if n.gpus_total > 0]
+    mean = lambda vs: sum(vs) / len(vs) if vs else 0.0  # noqa: E731
+    # attribute each node to the first running job's owner — the same
+    # rule as ClusterSnapshot.to_tsv, so weekly_report reproduces the
+    # archive pipeline exactly (no double counting on shared nodes)
+    owner: Dict[str, str] = {}
+    for job in snap.jobs:
+        if job.state != "R":
+            continue
+        for h in job.nodes:
+            owner.setdefault(h, job.username)
+    flags: Dict[str, Tuple[int, int, int]] = {}
+    for h, user in owner.items():
+        n = snap.nodes.get(h)
+        if n is None:
+            continue
+        lg, lc, hc = flags.get(user, (0, 0, 0))
+        if n.gpus_total > 0 and n.gpu_load < low:
+            lg += 1
+        if n.norm_load < low:
+            lc += 1
+        if n.norm_load > high:
+            hc += 1
+        flags[user] = (lg, lc, hc)
+    return _Summary(
+        timestamp=snap.timestamp,
+        norm_load=mean([n.norm_load for n in nodes]),
+        gpu_load=mean([n.gpu_load for n in gpu_nodes]),
+        nodes=float(len(nodes)),
+        cores_used=float(sum(n.cores_used for n in nodes)),
+        mem_used_gb=float(sum(n.mem_used_gb for n in nodes)),
+        gpus_used=float(sum(n.gpus_used for n in nodes)),
+        user_flags=flags)
+
+
+@dataclasses.dataclass
+class TierSpec:
+    name: str
+    bucket_s: float
+    capacity: int
+
+
+DEFAULT_TIERS = (
+    TierSpec("15min", 900.0, capacity=4 * 24 * 7),      # one week
+    TierSpec("hourly", 3600.0, capacity=24 * 90),       # one quarter
+)
+
+
+class _Tier:
+    def __init__(self, spec: TierSpec):
+        self.spec = spec
+        self.points: Deque[TierPoint] = collections.deque(
+            maxlen=spec.capacity)
+        self.current: Optional[TierPoint] = None
+
+    def fold(self, summary: _Summary) -> bool:
+        """Fold one summary; returns False when the snapshot is older
+        than the bucket already being filled (mixed clocks — e.g. an
+        epoch-stamped backfill followed by a sim-clock source).  Folding
+        it anyway would corrupt the open bucket's aggregates, so it is
+        dropped from this tier (the raw ring still holds it) and the
+        caller counts it."""
+        start = math.floor(summary.timestamp / self.spec.bucket_s) \
+            * self.spec.bucket_s
+        cur = self.current
+        if cur is not None and start < cur.bucket_start:
+            return False
+        if cur is None or start > cur.bucket_start:
+            if cur is not None:
+                self.points.append(cur)
+            cur = self.current = TierPoint(bucket_start=start)
+        cur.fold(summary, representative=cur.count == 0)
+        return True
+
+    def all_points(self) -> List[TierPoint]:
+        """Finalized points plus the in-progress bucket.  Must be called
+        under the store lock; finalized points are never mutated again,
+        but ``current`` still is — hand out a copy so readers serializing
+        it outside the lock cannot see a half-folded update."""
+        pts = list(self.points)
+        if self.current is not None:
+            pts.append(copy.deepcopy(self.current))
+        return pts
+
+
+class HistoryStore:
+    """Raw ring + downsampling tiers; thread-safe (bus subscriber on one
+    thread, HTTP readers on many)."""
+
+    def __init__(self, *, raw_capacity: int = 256,
+                 tiers: Iterable[TierSpec] = DEFAULT_TIERS,
+                 low_threshold: Optional[float] = None):
+        self._raw: Deque[ClusterSnapshot] = collections.deque(
+            maxlen=raw_capacity)
+        self._tiers = [_Tier(spec) for spec in tiers]
+        self._low = low_threshold
+        self._appended = 0
+        self._out_of_order = 0
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- writes
+    def append(self, snap: ClusterSnapshot):
+        summary = summarize(snap, self._low)
+        with self._lock:
+            self._raw.append(snap)
+            self._appended += 1
+            for tier in self._tiers:
+                if not tier.fold(summary):
+                    self._out_of_order += 1
+
+    def subscriber(self, source_name: Optional[str] = None):
+        """A TelemetryBus subscriber feeding this store."""
+        def fn(name: str, snap: ClusterSnapshot):
+            if source_name is None or name == source_name:
+                self.append(snap)
+        return fn
+
+    def backfill(self, archive_or_snaps) -> int:
+        """Replay an archive (or any snapshot iterable) into the store."""
+        snaps = archive_or_snaps
+        if hasattr(snaps, "as_source"):                 # SnapshotArchive
+            snaps = snaps.as_source().frames()
+        n = 0
+        for snap in snaps:
+            self.append(snap)
+            n += 1
+        return n
+
+    # -------------------------------------------------------------- reads
+    def tier_names(self) -> List[str]:
+        return ["raw"] + [t.spec.name for t in self._tiers]
+
+    def sizes(self) -> Dict[str, int]:
+        with self._lock:
+            out = {"raw": len(self._raw), "appended": self._appended,
+                   "out_of_order_dropped": self._out_of_order}
+            for t in self._tiers:
+                out[t.spec.name] = len(t.all_points())
+            return out
+
+    def raw(self) -> List[ClusterSnapshot]:
+        with self._lock:
+            return list(self._raw)
+
+    def points(self, tier: str,
+               window_s: Optional[float] = None) -> List[TierPoint]:
+        with self._lock:
+            for t in self._tiers:
+                if t.spec.name == tier:
+                    pts = t.all_points()
+                    break
+            else:
+                raise KeyError(
+                    f"unknown tier {tier!r}; have {self.tier_names()}")
+        if window_s is not None and pts:
+            horizon = pts[-1].bucket_start - window_s
+            pts = [p for p in pts if p.bucket_start >= horizon]
+        return pts
+
+    def select_tier(self, window_s: float) -> str:
+        """Finest tier whose retained span covers ``window_s``."""
+        with self._lock:
+            raw = list(self._raw)
+            if len(raw) >= 2 and \
+                    raw[-1].timestamp - raw[0].timestamp >= window_s:
+                return "raw"
+            for t in self._tiers:
+                pts = t.all_points()
+                if pts and pts[-1].bucket_start - pts[0].bucket_start \
+                        >= window_s:
+                    return t.spec.name
+            return self._tiers[-1].spec.name if self._tiers else "raw"
+
+    def trend_wire(self, tier: str,
+                   window_s: Optional[float] = None) -> Dict[str, object]:
+        if tier == "raw":
+            with self._lock:
+                raw = list(self._raw)
+            if window_s is not None and raw:
+                horizon = raw[-1].timestamp - window_s
+                raw = [s for s in raw if s.timestamp >= horizon]
+            pts = []
+            for snap in raw:
+                s = summarize(snap, self._low)
+                pts.append({"t": s.timestamp, "count": 1,
+                            **{f: {"min": getattr(s, f),
+                                   "mean": getattr(s, f),
+                                   "max": getattr(s, f)}
+                               for f in _AGG_FIELDS}})
+            return {"tier": "raw", "points": pts}
+        return {"tier": tier,
+                "points": [p.to_wire() for p in self.points(tier, window_s)]}
+
+    def weekly_report(self, emails: Optional[Dict[str, str]] = None,
+                      start: Optional[float] = None,
+                      end: Optional[float] = None,
+                      tier: Optional[str] = None) -> WeeklyReport:
+        """The paper's weekly analysis, answered from a tier's per-user
+        utilization flags instead of replaying archive rows.  Default
+        tier: the store's finest (closest to the archive cadence)."""
+        if tier is None:
+            if not self._tiers:
+                raise KeyError("store has no downsampling tiers")
+            tier = self._tiers[0].spec.name
+        pts = self.points(tier)
+        interval_hours = next(
+            (t.spec.bucket_s / 3600.0 for t in self._tiers
+             if t.spec.name == tier), SNAPSHOT_INTERVAL_HOURS)
+        buckets = [(p.bucket_start, p.user_flags) for p in pts
+                   if (start is None or p.bucket_start >= start)
+                   and (end is None or p.bucket_start <= end)]
+        return weekly_from_buckets(buckets, emails=emails,
+                                   interval_hours=interval_hours)

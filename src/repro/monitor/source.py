@@ -10,7 +10,8 @@ point — a remote cluster, a Prometheus scrape — is one class, not a CLI
 rewrite.
 
 Sources are constructed by name through :class:`SourceRegistry`; the
-default registry knows ``sim``, ``live``, ``jobs`` and ``archive``.
+default registry knows ``sim``, ``live``, ``jobs``, ``archive`` and
+``remote`` (an LLload daemon on another host, :mod:`repro.daemon`).
 """
 from __future__ import annotations
 
@@ -438,11 +439,24 @@ def _make_archive_source(*, root: str, cluster: Optional[str] = None,
     return ArchiveSource(root, cluster=cluster, loop=loop)
 
 
+def _make_remote_source(*, url: str, cluster: Optional[str] = None,
+                        timeout_s: float = 10.0):
+    """An LLload daemon on another host (``--source remote --url ...``).
+
+    Lazy import: the daemon package depends on this module, not the
+    other way around.
+    """
+    from repro.daemon.client import RemoteSource
+
+    return RemoteSource(url, name=cluster, timeout_s=timeout_s)
+
+
 _DEFAULT_REGISTRY = SourceRegistry()
 _DEFAULT_REGISTRY.register("sim", _make_sim_source)
 _DEFAULT_REGISTRY.register("live", _make_live_source)
 _DEFAULT_REGISTRY.register("jobs", _make_jobs_source)
 _DEFAULT_REGISTRY.register("archive", _make_archive_source)
+_DEFAULT_REGISTRY.register("remote", _make_remote_source)
 
 
 def default_registry() -> SourceRegistry:

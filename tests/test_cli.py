@@ -1,4 +1,6 @@
 """The LLload CLI (paper's command surface)."""
+import sys
+
 import pytest
 
 from repro.core import cli
@@ -55,3 +57,49 @@ def test_tsv(capsys):
 
 def test_live_source(capsys):
     assert cli.main(["--source", "live", "--user", "nobody"]) == 0
+
+
+# ------------------------------------------------------- flag validation
+
+
+@pytest.mark.parametrize("argv", [
+    ["-t", "0"], ["-t", "-3"],
+    ["--interval", "0"], ["--interval", "-1.5"],
+    ["--frames", "0"], ["--frames", "-2"],
+])
+def test_nonpositive_numeric_flags_rejected(argv, capsys):
+    with pytest.raises(SystemExit) as ei:
+        cli.main(argv)
+    assert ei.value.code == 2                  # argparse usage error
+    assert "must be > 0" in capsys.readouterr().err
+
+
+def test_non_numeric_flags_rejected(capsys):
+    with pytest.raises(SystemExit) as ei:
+        cli.main(["--interval", "fast"])
+    assert ei.value.code == 2
+
+
+# -------------------------------------------------- broken pipe (one-shot)
+
+
+class _ClosedPipe:
+    """A stdout whose consumer (e.g. `| head`) already went away."""
+
+    def write(self, _):
+        raise BrokenPipeError
+
+    def flush(self):
+        raise BrokenPipeError
+
+
+@pytest.mark.parametrize("argv", [
+    [], ["--tsv"], ["-t", "3"], ["-n", "c-1-1-1"]])
+def test_one_shot_broken_pipe_exits_zero(argv, monkeypatch):
+    monkeypatch.setattr(sys, "stdout", _ClosedPipe())
+    assert cli.main(["--source", "sim"] + argv) == 0
+
+
+def test_watch_broken_pipe_exits_zero(monkeypatch):
+    monkeypatch.setattr(sys, "stdout", _ClosedPipe())
+    assert cli.main(["--watch", "--frames", "2", "--interval", "0.05"]) == 0

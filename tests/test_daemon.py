@@ -1,0 +1,269 @@
+"""LLload daemon: lifecycle, cached serving, wire round-trip, Prometheus
+exposition, remote CLI byte-identity, cluster-of-clusters."""
+import io
+import contextlib
+import json
+import socket
+import threading
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.core import cli
+from repro.daemon import (LLloadDaemon, RemoteSource, WireError,
+                          decode_snapshot, encode_snapshot,
+                          parse_prometheus, serve_background)
+from repro.daemon import protocol
+from repro.monitor import build_source
+
+
+@pytest.fixture(scope="module")
+def daemon_url():
+    daemon = LLloadDaemon(build_source("sim"), ttl_s=3600.0)
+    server, thread = serve_background(daemon)
+    host, port = server.server_address[:2]
+    yield f"http://{host}:{port}", daemon
+    server.shutdown()
+    server.server_close()
+    daemon.close()
+    thread.join(timeout=5)
+    assert not thread.is_alive()
+
+
+def _get(url, path):
+    with urllib.request.urlopen(url + path, timeout=10) as rsp:
+        return rsp.read()
+
+
+# ---------------------------------------------------------------- lifecycle
+
+
+def test_healthz(daemon_url):
+    url, _ = daemon_url
+    h = json.loads(_get(url, "/healthz"))
+    assert h["status"] == "ok"
+    assert h["wire_version"] == protocol.WIRE_VERSION
+    assert h["source"] == "txgreen"
+
+
+def test_graceful_shutdown_frees_port():
+    daemon = LLloadDaemon(build_source("sim"), ttl_s=60.0)
+    server, thread = serve_background(daemon)
+    host, port = server.server_address[:2]
+    assert json.loads(_get(f"http://{host}:{port}", "/healthz"))["status"] \
+        == "ok"
+    server.shutdown()
+    server.server_close()
+    daemon.close()
+    thread.join(timeout=5)
+    assert not thread.is_alive()
+    # the socket is really gone: a fresh bind on the same port succeeds
+    with socket.socket() as s:
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        s.bind((host, port))
+
+
+# ------------------------------------------------------------- cached reads
+
+
+def test_concurrent_readers_hit_cache(daemon_url):
+    """N concurrent /snapshot readers cost one collection and one encode:
+    the collections counter stays flat and every body is the same bytes."""
+    url, daemon = daemon_url
+    before = daemon.bus.stats("txgreen").collections
+    _get(url, "/snapshot")                      # warm the byte-cache
+    hits_before = daemon.counters()["http_cache_hits_total"]
+
+    bodies = []
+    lock = threading.Lock()
+
+    def reader():
+        body = _get(url, "/snapshot")
+        with lock:
+            bodies.append(body)
+
+    threads = [threading.Thread(target=reader) for _ in range(12)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    assert len(set(bodies)) == 1
+    after = daemon.bus.stats("txgreen").collections
+    assert after == max(before, 1), "cached reads must not re-collect"
+    assert daemon.counters()["http_cache_hits_total"] >= hits_before + 12
+
+
+# ------------------------------------------------------------- wire schema
+
+
+def test_remote_source_roundtrips_byte_identically(daemon_url):
+    """The snapshot that comes back over HTTP is indistinguishable from
+    the local one — every node, job, email and float."""
+    url, _ = daemon_url
+    remote = RemoteSource(url).snapshot()
+    local = build_source("sim").snapshot()     # deterministic sim
+    assert remote == local
+    assert remote.to_tsv() == local.to_tsv()
+
+
+def test_wire_round_trip_exact():
+    snap = build_source("sim").snapshot()
+    again = decode_snapshot(json.loads(json.dumps(encode_snapshot(snap))))
+    assert again == snap
+    assert list(again.nodes) == list(snap.nodes)   # order preserved
+
+
+def test_wire_rejects_newer_version():
+    snap = build_source("sim").snapshot()
+    wire = encode_snapshot(snap)
+    wire["v"] = protocol.WIRE_VERSION + 1
+    with pytest.raises(WireError, match="newer than supported"):
+        decode_snapshot(wire)
+
+
+def test_wire_ignores_unknown_fields():
+    wire = encode_snapshot(build_source("sim").snapshot())
+    wire["snapshot"]["future_field"] = {"x": 1}     # additive => no bump
+    assert decode_snapshot(wire) == build_source("sim").snapshot()
+
+
+# ------------------------------------------------------------- CLI remote
+
+
+def _run_cli(argv):
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        rc = cli.main(argv)
+    return rc, buf.getvalue()
+
+
+@pytest.mark.parametrize("view", [
+    ["-g", "--user", "va67890"],
+    ["-t", "5"],
+    ["--all", "-g", "--user", "admin"],
+    ["--tsv"],
+])
+def test_cli_remote_byte_identical(daemon_url, view):
+    url, _ = daemon_url
+    rc_l, local = _run_cli(["--source", "sim"] + view)
+    rc_r, remote = _run_cli(["--source", "remote", "--url", url] + view)
+    assert rc_l == rc_r == 0
+    assert remote == local
+
+
+def test_cli_remote_requires_url():
+    with pytest.raises(SystemExit):
+        cli.main(["--source", "remote"])
+
+
+def test_cli_remote_watch(daemon_url):
+    url, _ = daemon_url
+    rc, out = _run_cli(["--source", "remote", "--url", url,
+                        "--watch", "--interval", "0.05", "--frames", "2",
+                        "-t", "3"])
+    assert rc == 0
+    assert out.count("LLload watch") == 2
+
+
+# ---------------------------------------------------------------- /metrics
+
+
+def test_metrics_parses_as_prometheus(daemon_url):
+    url, daemon = daemon_url
+    text = _get(url, "/metrics").decode()
+    families = parse_prometheus(text)
+    snap = daemon.bus.read("txgreen")
+    assert len(families["llload_node_norm_load"]) == len(snap.nodes)
+    sample = next(iter(families["llload_node_norm_load"]))
+    assert 'cluster="txgreen"' in sample and 'host="' in sample
+    assert families["llload_cluster_nodes"][f'{{cluster="txgreen"}}'] \
+        == len(snap.nodes)
+    assert any(k.startswith("llload_user_nodes") for k in families)
+    assert "# TYPE llload_node_norm_load gauge" in text
+    assert "llload_daemon_bus_collections_total" in text
+
+
+# --------------------------------------------------------- views + errors
+
+
+def test_view_endpoints(daemon_url):
+    url, _ = daemon_url
+    top = _get(url, "/view/top?n=3").decode()
+    assert "sorted by descending order" in top
+    user = _get(url, "/view/user?user=va67890&gpu=1").decode()
+    assert "va67890" in user and "GPUMEM" in user
+    host = build_source("sim").snapshot().to_tsv().splitlines()[1] \
+        .split("\t")[2]
+    nodes = _get(url, f"/view/nodes?hosts={host}").decode()
+    assert host in nodes
+
+
+def test_errors_are_wire_envelopes(daemon_url):
+    url, _ = daemon_url
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _get(url, "/nope")
+    assert ei.value.code == 404
+    err = json.loads(ei.value.read())
+    assert err["kind"] == "error" and err["v"] == protocol.WIRE_VERSION
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _get(url, "/view/user")                # missing ?user
+    assert ei.value.code == 400
+
+
+def test_trend_and_weekly_endpoints(daemon_url):
+    url, _ = daemon_url
+    trend = json.loads(_get(url, "/trend"))
+    assert trend["kind"] == "trend"
+    pts = trend["trend"]["points"]
+    assert pts and {"t", "count", "norm_load"} <= set(pts[0])
+    assert pts[0]["norm_load"]["min"] <= pts[0]["norm_load"]["max"]
+    weekly = json.loads(_get(url, "/weekly"))
+    assert weekly["kind"] == "weekly"
+    assert {"low_gpu", "low_cpu", "high_cpu"} <= set(weekly["weekly"])
+
+
+# ------------------------------------------------------ cluster-of-clusters
+
+
+def test_daemon_over_daemon(daemon_url):
+    """A second daemon whose source is the first daemon serves the same
+    snapshot — any daemon can fan out over other daemons."""
+    url, _ = daemon_url
+    upstream = RemoteSource(url, name="tier0")
+    d2 = LLloadDaemon(upstream, ttl_s=3600.0)
+    server, thread = serve_background(d2)
+    try:
+        host, port = server.server_address[:2]
+        snap = RemoteSource(f"http://{host}:{port}").snapshot()
+        assert snap == build_source("sim").snapshot()
+    finally:
+        server.shutdown()
+        server.server_close()
+        d2.close()
+        thread.join(timeout=5)
+
+
+def test_error_requests_do_not_leak_build_locks(daemon_url):
+    """Distinct erroring cacheable queries must not grow the per-key
+    build-lock table (it is only retained for successfully cached
+    bodies)."""
+    url, daemon = daemon_url
+    for i in range(20):
+        with pytest.raises(urllib.error.HTTPError):
+            _get(url, f"/trend?tier=bogus{i}")
+    assert not any("bogus" in k for k in daemon._build_locks)
+    assert len(daemon._build_locks) <= len(daemon._cache) + 1
+
+
+def test_cli_remote_cluster_name_matrix(daemon_url):
+    url, _ = daemon_url
+    # one URL + one name: child is renamed, output still renders
+    rc, out = _run_cli(["--source", "remote", "--url", url,
+                        "--cluster", "edge", "-t", "3"])
+    assert rc == 0 and "sorted by descending order" in out
+    # one URL + two names would silently double every node: rejected
+    with pytest.raises(SystemExit):
+        cli.main(["--source", "remote", "--url", url,
+                  "--cluster", "a,b", "-t", "3"])

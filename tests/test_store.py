@@ -1,0 +1,191 @@
+"""HistoryStore: multi-resolution downsampling invariants (property
+test), tier-based weekly analysis vs. the archive pipeline, backfill."""
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.analysis import weekly_analysis
+from repro.core.archive import SnapshotArchive
+from repro.core.metrics import ClusterSnapshot, JobRecord, NodeSnapshot
+from repro.daemon.store import HistoryStore, TierSpec
+
+
+def _snap(ts, load_a=10.0, load_b=40.0, gpu=0.5, cluster="tx"):
+    nodes = {
+        "a": NodeSnapshot("a", cores_total=48, cores_used=48, load=load_a,
+                          mem_total_gb=192.0, mem_used_gb=50.0),
+        "b": NodeSnapshot("b", cores_total=48, cores_used=48, load=load_b,
+                          mem_total_gb=192.0, mem_used_gb=60.0,
+                          gpus_total=2, gpus_used=2, gpu_load=gpu,
+                          gpu_mem_total_gb=64.0, gpu_mem_used_gb=8.0),
+    }
+    jobs = [JobRecord(1, "ua", "ja", ["a"], cores_per_node=48),
+            JobRecord(2, "ub", "jb", ["b"], cores_per_node=48,
+                      gpus_per_node=2)]
+    return ClusterSnapshot(cluster, ts, nodes, jobs)
+
+
+# ------------------------------------------------------------- properties
+
+
+@given(st.lists(st.tuples(st.floats(0.0, 100.0), st.floats(0.0, 1.5)),
+                min_size=1, max_size=60))
+def test_downsampling_invariants(samples):
+    """For monotonically spaced snapshots folded into any tier:
+    counts conserve appends, min <= mean <= max, bucket starts are
+    aligned, and the per-bucket mean matches a direct recomputation."""
+    store = HistoryStore(raw_capacity=1024,
+                         tiers=[TierSpec("t60", 60.0, capacity=1024),
+                                TierSpec("t300", 300.0, capacity=1024)])
+    per_bucket = {}
+    for i, (load, gpu) in enumerate(samples):
+        ts = 17.0 + 13.0 * i                    # deliberately unaligned
+        snap = _snap(ts, load_a=load, load_b=load, gpu=gpu)
+        store.append(snap)
+        norm = load / 48.0
+        per_bucket.setdefault(math.floor(ts / 60.0) * 60.0,
+                              []).append(norm)
+
+    for tier, bucket_s in (("t60", 60.0), ("t300", 300.0)):
+        pts = store.points(tier)
+        assert sum(p.count for p in pts) == len(samples)
+        assert [p.bucket_start for p in pts] == \
+            sorted({math.floor((17.0 + 13.0 * i) / bucket_s) * bucket_s
+                    for i in range(len(samples))})
+        for p in pts:
+            assert p.norm_load.min <= p.norm_load.mean <= p.norm_load.max \
+                or math.isclose(p.norm_load.min, p.norm_load.max)
+            assert p.bucket_start % bucket_s == 0
+            assert p.gpu_load.min >= 0.0
+
+    for p in store.points("t60"):
+        vals = per_bucket[p.bucket_start]
+        assert p.count == len(vals)
+        assert math.isclose(p.norm_load.mean, sum(vals) / len(vals),
+                            rel_tol=1e-9, abs_tol=1e-12)
+        assert math.isclose(p.norm_load.min, min(vals), rel_tol=1e-9)
+        assert math.isclose(p.norm_load.max, max(vals), rel_tol=1e-9)
+
+
+# ------------------------------------------------------- weekly from tiers
+
+
+def test_weekly_from_tiers_matches_archive_pipeline(tmp_path):
+    """Cadence-aligned snapshots: the store's tier-based weekly report
+    reproduces weekly_analysis over the replayed TSV archive."""
+    archive = SnapshotArchive(str(tmp_path), cluster="tx")
+    store = HistoryStore()
+    for i in range(4 * 24 * 2):                 # two days, 15-min cadence
+        gpu = 0.2 if i % 3 else 0.9             # ub dips below 0.45 often
+        load = 10.0 if i % 2 else 90.0          # ua alternates low/high
+        snap = _snap(900.0 * i, load_a=load, load_b=load, gpu=gpu)
+        archive.append(snap)
+        store.append(snap)
+
+    ref = weekly_analysis(archive.rows())
+    got = store.weekly_report()
+    for cat in ("low_gpu", "low_cpu", "high_cpu"):
+        ref_rows = [(r.username, r.node_hours) for r in getattr(ref, cat)]
+        got_rows = [(r.username, r.node_hours) for r in getattr(got, cat)]
+        assert got_rows == ref_rows, cat
+
+
+def test_backfill_from_archive(tmp_path):
+    archive = SnapshotArchive(str(tmp_path), cluster="tx")
+    for i in range(10):
+        archive.append(_snap(900.0 * i))
+    store = HistoryStore()
+    assert store.backfill(archive) == 10
+    assert store.sizes()["raw"] == 10
+    assert sum(p.count for p in store.points("15min")) == 10
+
+
+# ------------------------------------------------------------ tier queries
+
+
+def test_raw_ring_ages_out_but_tiers_remember():
+    store = HistoryStore(raw_capacity=4,
+                         tiers=[TierSpec("15min", 900.0, capacity=1000)])
+    for i in range(50):
+        store.append(_snap(900.0 * i))
+    assert store.sizes()["raw"] == 4
+    assert sum(p.count for p in store.points("15min")) == 50
+
+
+def test_select_tier_prefers_finest_covering_window():
+    store = HistoryStore(raw_capacity=4,
+                         tiers=[TierSpec("15min", 900.0, capacity=1000),
+                                TierSpec("hourly", 3600.0, capacity=1000)])
+    for i in range(100):
+        store.append(_snap(900.0 * i))
+    assert store.select_tier(900.0) == "raw"        # 4 raw snaps span 45min
+    assert store.select_tier(7200.0) == "15min"
+    assert store.select_tier(100 * 900.0 * 2) == "hourly"
+
+
+def test_points_window_and_unknown_tier():
+    store = HistoryStore()
+    for i in range(20):
+        store.append(_snap(900.0 * i))
+    recent = store.points("15min", window_s=3 * 900.0)
+    assert 3 <= len(recent) <= 4
+    with pytest.raises(KeyError):
+        store.points("nope")
+
+
+def test_trend_wire_shapes():
+    store = HistoryStore()
+    for i in range(8):
+        store.append(_snap(900.0 * i, load_a=float(i)))
+    for tier in ("raw", "15min"):
+        wire = store.trend_wire(tier)
+        assert wire["tier"] == tier
+        assert len(wire["points"]) == 8
+        p = wire["points"][0]
+        assert p["norm_load"]["min"] <= p["norm_load"]["max"]
+
+
+def test_out_of_order_snapshots_drop_instead_of_corrupting():
+    """A snapshot older than the bucket being filled (mixed clocks, e.g.
+    epoch-stamped backfill then a sim-clock source) must not fold into
+    the open later bucket — it is dropped from tiers and counted."""
+    store = HistoryStore(tiers=[TierSpec("15min", 900.0, capacity=100)])
+    store.append(_snap(1.7e9, load_a=48.0))
+    store.append(_snap(3600.0, load_a=480.0))       # older clock
+    assert store.sizes()["out_of_order_dropped"] == 1
+    assert store.sizes()["raw"] == 2                 # ring keeps both
+    pts = store.points("15min")
+    assert sum(p.count for p in pts) == 1
+    assert pts[-1].norm_load.max <= 1.01             # 480-load never folded
+
+
+def test_weekly_report_defaults_to_finest_custom_tier():
+    store = HistoryStore(tiers=[TierSpec("5min", 300.0, capacity=100)])
+    for i in range(6):
+        store.append(_snap(300.0 * i, gpu=0.1))      # ub low-gpu
+    rep = store.weekly_report()
+    assert any(r.username == "ub" for r in rep.low_gpu)
+    hours = [r.node_hours for r in rep.low_gpu if r.username == "ub"][0]
+    assert hours == pytest.approx(6 * 300.0 / 3600.0)
+
+
+def test_shared_node_attribution_matches_archive_rules():
+    """Two users with running jobs on one node: to_tsv credits the first
+    job's owner only, and so must the store's weekly flags (no
+    double-counted node-hours on shared nodes)."""
+    node = NodeSnapshot("n0", cores_total=48, cores_used=48, load=1.0,
+                        mem_total_gb=192.0, mem_used_gb=10.0)
+    jobs = [JobRecord(1, "alice", "j1", ["n0"], cores_per_node=24),
+            JobRecord(2, "bob", "j2", ["n0"], cores_per_node=24)]
+    snap = ClusterSnapshot("tx", 900.0, {"n0": node}, jobs)
+
+    from repro.core.metrics import rows_from_tsv
+
+    store = HistoryStore()
+    store.append(snap)
+    rep = store.weekly_report()
+    ref = weekly_analysis(rows_from_tsv(snap.to_tsv()))
+    assert [(r.username, r.node_hours) for r in rep.low_cpu] == \
+        [(r.username, r.node_hours) for r in ref.low_cpu]
+    assert [r.username for r in rep.low_cpu] == ["alice"]
