@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows (one per benchmark).
 | snapshot_tsv_2048        | 15-min archive write format (§V-A)           |
 | bus_read_{cached,uncached} | TelemetryBus snapshot-query throughput     |
 | daemon_snapshot_*        | HTTP /snapshot requests/s, cached vs collect |
+| query_{table,json}_512n  | query engine filter+sort+render (§7)         |
 | columnarize_1wk          | vectorized archive columnarization           |
 | weekly_analysis_1wk      | Fig 6 weekly node-hours aggregation          |
 | monitor_overhead         | "light-weight" claim: train loop +hooks      |
@@ -167,6 +168,37 @@ def bench_daemon():
             "uncached_requests_per_s": round(uncached_rps, 1),
             "cache_speedup_x": round(speedup, 2),
         }, f, indent=2)
+        f.write("\n")
+
+
+def bench_query():
+    """The unified query engine at 512 simulated nodes: parse + filter +
+    sort + render, table vs json renderer (DESIGN.md §7).  Emits
+    ``BENCH_query.json`` for CI / acceptance."""
+    import json
+
+    from repro.query import Query, get_renderer, run_query
+
+    sim = _sim(512)
+    snap = sim.snapshot()
+    q = Query.from_params(table="nodes", filter="cores>0 and cpu_load>=0",
+                          sort="-norm_load",
+                          columns="host,user,cpu_load,norm_load,gpu_load")
+    n_rows = len(run_query(snap, q).rows)
+    out = {"nodes": 512, "rows": n_rows}
+    for fmt in ("table", "json"):
+        renderer = get_renderer(fmt)
+
+        def full():
+            return renderer.render(run_query(snap, q))
+
+        us = _timeit(full)
+        _row(f"query_{fmt}_512n", us,
+             f"rows={n_rows};rows_per_s={n_rows / (us / 1e6):.0f}")
+        out[f"{fmt}_us_per_query"] = round(us, 1)
+        out[f"{fmt}_rows_per_s"] = round(n_rows / (us / 1e6), 1)
+    with open("BENCH_query.json", "w") as f:
+        json.dump(out, f, indent=2)
         f.write("\n")
 
 
@@ -334,6 +366,7 @@ BENCHES = [
     bench_snapshot_tsv,
     bench_bus_reads,
     bench_daemon,
+    bench_query,
     bench_columnarize,
     bench_weekly_analysis,
     bench_monitor_overhead,

@@ -4,6 +4,9 @@ Usage (mirrors the paper's flags, plus the streaming extensions):
 
     python -m repro.core.cli [-g] [--all] [-t N] [-n HOST,HOST] [--tsv] [-q]
                              [--user USER]
+                             [--filter EXPR] [--sort SPEC] [--columns LIST]
+                             [--limit N] [--format FMT] [--table TABLE]
+                             [--group-by COL]
                              [--source sim|live|jobs|archive|remote]
                              [--cluster NAME[,NAME]] [--archive-dir DIR]
                              [--url URL[,URL]]
@@ -19,6 +22,14 @@ merge.  Sources are built by name through the
 :mod:`repro.monitor` registry — ``--cluster a,b`` fans the chosen source
 out over several clusters and merges the snapshots.  ``--watch`` streams
 the selected view through the TelemetryBus (cached reads between polls).
+
+Every view is a canned :class:`repro.query.Query` (DESIGN.md §7):
+``--filter`` ANDs onto the view's scope, ``--sort``/``--columns``/
+``--limit`` override it, and ``--format table|json|csv|tsv|prom`` swaps
+the paper's text layout for a machine-readable renderer — one-shot, in
+``--watch`` frames, and (``--source remote``) answered server-side by
+the daemon's ``/query`` endpoint.  ``--table nodes|users|jobs|history``
+skips the view scoping and queries a table directly.
 """
 from __future__ import annotations
 
@@ -27,8 +38,10 @@ import os
 import sys
 
 from repro.core import formatting
-from repro.core.llload import LLload
 from repro.monitor import TelemetryBus, build_source, default_registry, watch
+from repro.query import (Query, QueryError, apply_modifiers, get_renderer,
+                         renderer_names, resolve_format, run_query,
+                         view_query)
 
 PRIVILEGED = {"admin", "root", "hpcteam"}
 
@@ -38,22 +51,67 @@ def build_snapshot(source: str):
     return build_source(source).snapshot()
 
 
-def render_view(snap, args) -> str:
+def _hosts_from(args) -> list:
+    return [h.strip() for h in (args.n or "").split(",") if h.strip()]
+
+
+def _view_kind(args) -> str:
+    """Flag precedence, matching the legacy CLI: -t wins over -n."""
+    if args.t is not None:
+        return "top"
+    if args.n is not None:
+        return "nodes"
+    if args.all_users:
+        return "all"
+    return "user"
+
+
+def has_query_flags(args) -> bool:
+    return bool(getattr(args, "table", None) or args.filter or args.sort
+                or args.columns or args.group_by
+                or args.limit is not None or args.format != "text")
+
+
+def build_view_query(args):
+    """(query, kind, fmt) for the parsed flags; raises QueryError on any
+    malformed filter/sort/columns/table so callers can exit 1 before
+    collecting a snapshot or starting a watch stream."""
+    fmt = resolve_format(args.format, args.columns, args.group_by)
+    if getattr(args, "table", None):
+        q = Query.from_params(table=args.table, columns=args.columns,
+                              filter=args.filter, sort=args.sort,
+                              group_by=args.group_by, limit=args.limit)
+        return q, "table", ("table" if fmt == "text" else fmt)
+    kind = _view_kind(args)
+    canned = view_query(kind, user=args.user, n=args.t or 10,
+                        hosts=_hosts_from(args))
+    q = apply_modifiers(canned, columns=args.columns, filter=args.filter,
+                        sort=args.sort, group_by=args.group_by,
+                        limit=args.limit)
+    return q, kind, fmt
+
+
+def render_view(snap, args, prebuilt=None) -> str:
     """Render the view selected by the parsed flags (shared by the
-    one-shot and --watch paths)."""
-    ll = LLload(snap, privileged_users=PRIVILEGED)
+    one-shot and --watch paths).  Machine formats end with a newline;
+    the legacy text layouts do not (the caller prints them).
+    ``prebuilt`` is a ``build_view_query(args)`` result to reuse, so
+    watch frames don't re-parse the same filter/sort strings."""
     if args.tsv:
         return snap.to_tsv()
-    if args.t is not None:
-        return formatting.format_top(ll.top_loaded(args.t), args.t)
-    if args.n is not None:
-        hosts = [h.strip() for h in args.n.split(",") if h.strip()]
-        rep = ll.node_detail_report(hosts)
-        return formatting.format_node_detail(rep.details, rep.missing)
-    if args.all_users:
-        return formatting.format_all_view(ll.all_view(args.user), args.gpu)
-    blk = ll.user_view(args.user)
-    return formatting.format_user_view(snap.cluster, blk, args.gpu)
+    q, kind, fmt = prebuilt if prebuilt is not None \
+        else build_view_query(args)
+    rs = run_query(snap, q)
+    if fmt != "text":
+        return get_renderer(fmt).render(rs)
+    if kind == "top":
+        return formatting.top_view_text(rs.rows, q.limit or args.t or 10)
+    if kind == "nodes":
+        return formatting.node_detail_text(snap, rs.rows, _hosts_from(args))
+    if kind == "all":
+        return formatting.all_view_text(snap, rs.rows, args.user,
+                                        args.user in PRIVILEGED, args.gpu)
+    return formatting.user_view_text(snap, rs.rows, args.user, args.gpu)
 
 
 def make_source_from_args(args):
@@ -96,6 +154,36 @@ def make_source_from_args(args):
 _make_source = make_source_from_args       # back-compat alias
 
 
+def _forward_remote(args, url: str, kind: str) -> int:
+    """Answer one query server-side: GET the daemon's /query (table mode)
+    or /view/* with the query params passed through verbatim."""
+    from repro.daemon.client import RemoteClient, RemoteError
+    client = RemoteClient(url)
+    fmt = resolve_format(args.format, args.columns, args.group_by)
+    params = {"filter": args.filter, "sort": args.sort,
+              "columns": args.columns, "group_by": args.group_by,
+              "limit": args.limit}
+    try:
+        if kind == "table":
+            body = client.query(table=args.table,
+                                format=("table" if fmt == "text" else fmt),
+                                **params)
+        elif kind == "user":
+            body = client.view("user", user=args.user,
+                               gpu=(1 if args.gpu else None),
+                               format=fmt, **params)
+        else:                               # top
+            body = client.view("top", n=args.t, format=fmt, **params)
+        sys.stdout.write(body)
+        sys.stdout.flush()
+        return 0
+    except RemoteError as exc:
+        print(f"LLload: {exc}", file=sys.stderr)
+        return 1
+    except BrokenPipeError:
+        return 0
+
+
 def _positive_int(s: str) -> int:
     try:
         v = int(s)
@@ -131,6 +219,26 @@ def main(argv=None) -> int:
                     help="tab-separated output (archive format)")
     ap.add_argument("-q", action="store_true", help="quiet (no banner)")
     ap.add_argument("--user", default="ab12345")
+    ap.add_argument("--filter", default=None, metavar="EXPR",
+                    help="narrow the view's rows, e.g. "
+                         "\"gpu_load<0.2 and gpus>0\"")
+    ap.add_argument("--sort", default=None, metavar="COL[,COL]",
+                    help="sort keys; prefix - for descending "
+                         "(e.g. -gpu_load)")
+    ap.add_argument("--columns", default=None, metavar="COL[,COL]",
+                    help="columns for machine formats "
+                         "(e.g. host,cpu_load,gpu_load)")
+    ap.add_argument("--limit", type=_positive_int, default=None,
+                    metavar="N", help="keep the first N rows (or groups)")
+    ap.add_argument("--format", default="text", dest="format",
+                    choices=["text"] + renderer_names(),
+                    help="output renderer (text = the paper's layout)")
+    ap.add_argument("--table", default=None,
+                    choices=["nodes", "users", "jobs", "history"],
+                    help="query a table directly instead of a view")
+    ap.add_argument("--group-by", default=None, dest="group_by",
+                    metavar="COL", help="partition rows by a column "
+                                        "(machine formats)")
     ap.add_argument("--source", default="sim",
                     choices=default_registry().names())
     ap.add_argument("--cluster", default=None, metavar="NAME[,NAME]",
@@ -148,44 +256,96 @@ def main(argv=None) -> int:
     ap.add_argument("--frames", type=_positive_int, default=None,
                     metavar="N",
                     help="stop watch after N frames (default: until ^C)")
-    args = ap.parse_args(argv)
+    # argparse would reject `--sort -gpu_load` ("-g..." looks like an
+    # option); merge the value into `--sort=-gpu_load` form first
+    argv = list(sys.argv[1:] if argv is None else argv)
+    merged = []
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if (a in ("--sort", "--filter", "--columns") and i + 1 < len(argv)
+                and argv[i + 1].startswith("-")):
+            merged.append(f"{a}={argv[i + 1]}")
+            i += 2
+        else:
+            merged.append(a)
+            i += 1
+    args = ap.parse_args(merged)
+
+    prebuilt = None
+    try:
+        if args.tsv and has_query_flags(args):
+            raise QueryError(
+                "--tsv is the raw archive format and ignores query "
+                "flags; use --format tsv for filtered/sorted output")
+        if not args.tsv:
+            prebuilt = build_view_query(args)   # validate flags up front
+    except QueryError as exc:
+        print(f"LLload: {exc}", file=sys.stderr)
+        return 1
+
+    # --source remote with query flags: forward the query verbatim so the
+    # daemon answers it server-side from pre-aggregated data (one URL;
+    # fan-out and --watch still merge snapshots and render locally)
+    # "all" has no endpoint and "nodes" owes the legacy all-hosts-unknown
+    # exit-1 contract, which a forwarded body can't carry — both render
+    # locally from the fetched snapshot (byte-identical either way)
+    if (args.source == "remote" and not args.watch and not args.tsv
+            and has_query_flags(args)):
+        urls = [u.strip() for u in (args.url or "").split(",") if u.strip()]
+        kind = "table" if args.table else _view_kind(args)
+        if len(urls) == 1 and kind in ("table", "user", "top"):
+            return _forward_remote(args, urls[0], kind)
 
     source = make_source_from_args(args)
 
-    if args.watch:
-        bus = TelemetryBus(ttl_s=3.0 * args.interval)
-        bus.register(source)
-        ws = watch(bus, lambda snap: render_view(snap, args),
-                   source_name=source.name, interval_s=args.interval,
-                   max_frames=args.frames)
-        if not args.q:
-            try:
-                print(f"watch: {ws.frames} frames, {ws.reads} reads, "
-                      f"{ws.collections} collections")
-            except BrokenPipeError:
-                pass      # downstream pager closed mid-stream
-        return 0
-
-    snap = source.snapshot()
-    # one-shot output can land in a closed pager (`LLload ... | head`):
-    # a BrokenPipeError is a normal exit, not a traceback
     try:
-        if args.tsv:
-            sys.stdout.write(render_view(snap, args))
-            sys.stdout.flush()
+        if args.watch:
+            bus = TelemetryBus(ttl_s=3.0 * args.interval)
+            bus.register(source)
+            if prebuilt is not None and prebuilt[2] != "text":
+                # machine renderers end with a newline and the watch
+                # loop adds its own; drop ours so a frame's bytes match
+                # the one-shot output exactly (no blank separator line)
+                def frame(snap):
+                    return render_view(snap, args, prebuilt)[:-1]
+            else:
+                def frame(snap):
+                    return render_view(snap, args, prebuilt)
+            ws = watch(bus, frame,
+                       source_name=source.name, interval_s=args.interval,
+                       max_frames=args.frames)
+            if not args.q:
+                try:
+                    print(f"watch: {ws.frames} frames, {ws.reads} reads, "
+                          f"{ws.collections} collections")
+                except BrokenPipeError:
+                    pass      # downstream pager closed mid-stream
             return 0
-        # legacy flag precedence: -t wins over -n (matches
-        # render_view/--watch)
-        if args.n is not None and args.t is None:
-            hosts = [h.strip() for h in args.n.split(",") if h.strip()]
-            ll = LLload(snap, privileged_users=PRIVILEGED)
-            rep = ll.node_detail_report(hosts)
-            print(formatting.format_node_detail(rep.details, rep.missing))
-            sys.stdout.flush()
-            return 1 if (rep.missing and not rep.details) else 0
-        print(render_view(snap, args))
+
+        snap = source.snapshot()
+        # one-shot output can land in a closed pager (`LLload ... | head`):
+        # a BrokenPipeError is a normal exit, not a traceback
+        out = render_view(snap, args, prebuilt)
+        machine = bool(args.tsv or args.table
+                       or resolve_format(args.format, args.columns,
+                                         args.group_by) != "text")
+        if machine:
+            sys.stdout.write(out if out.endswith("\n") else out + "\n")
+        else:
+            print(out)
         sys.stdout.flush()
+        # legacy -n contract: exit 1 when every requested host is unknown
+        if (args.n is not None and args.t is None and args.table is None
+                and not args.tsv):
+            hosts = _hosts_from(args)
+            if hosts and all(h not in snap.nodes for h in hosts):
+                return 1
         return 0
+    except QueryError as exc:
+        # e.g. --table history against a storeless local source
+        print(f"LLload: {exc}", file=sys.stderr)
+        return 1
     except BrokenPipeError:
         # keep the interpreter's exit-time stdout flush from tracebacking
         try:

@@ -1,26 +1,41 @@
-"""Render LLload views in the paper's terminal formats (Figs 2–5, 10, 11)."""
+"""Render LLload views in the paper's terminal formats (Figs 2–5, 10, 11).
+
+Every view here is a *canned query* through :mod:`repro.query`: the
+query engine materializes/filters/sorts rows, and this module owns only
+the paper's text layouts.  Two entry layers coexist:
+
+  * the legacy typed API (``format_user_view(cluster, UserBlock, ...)``
+    etc.) — unchanged signatures, now rendering through the same
+    row formatters, byte-identical to the pre-engine output;
+  * the ResultSet API (``user_view_text``/``top_view_text``/
+    ``node_detail_text``/``all_view_text``) — consumed by the CLI,
+    the watch loop, and the daemon's ``/view/*`` endpoints, so
+    ``--filter/--sort/--limit`` compose with every view.
+"""
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import Dict, List, Sequence
 
 from repro.core.llload import AllView, NodeDetail, TopNode, UserBlock
-from repro.core.metrics import NodeSnapshot
+from repro.core.metrics import ClusterSnapshot, NodeSnapshot
+from repro.query import (jupyter_jobs_query, row_from_node, run_query,
+                         running_jobs_query)
 
 
 def _gb(x: float) -> str:
     return f"{x:.0f}GB"
 
 
-def _node_row(n: NodeSnapshot, gpu: bool) -> str:
-    row = (f"{n.hostname:<12} {n.cores_total:>4} - {n.cores_used:>3} = "
-           f"{n.cores_free:<4} {n.load:>7.2f}  "
-           f"{_gb(n.mem_total_gb):>7} - {_gb(n.mem_used_gb):>6} = "
-           f"{_gb(n.mem_free_gb):<7}")
+def _node_row(r: dict, gpu: bool) -> str:
+    row = (f"{r['host']:<12} {r['cores']:>4} - {r['cores_used']:>3} = "
+           f"{r['cores_free']:<4} {r['cpu_load']:>7.2f}  "
+           f"{_gb(r['mem']):>7} - {_gb(r['mem_used']):>6} = "
+           f"{_gb(r['mem_free']):<7}")
     if gpu:
-        row += (f" | {n.gpus_total:>2} - {n.gpus_used} = {n.gpus_free:<2} "
-                f"{n.gpu_load:>5.2f}  "
-                f"{_gb(n.gpu_mem_total_gb):>6} - {_gb(n.gpu_mem_used_gb):>5}"
-                f" = {_gb(n.gpu_mem_free_gb):<6}")
+        row += (f" | {r['gpus']:>2} - {r['gpus_used']} = {r['gpus_free']:<2} "
+                f"{r['gpu_load']:>5.2f}  "
+                f"{_gb(r['gpu_mem']):>6} - {_gb(r['gpu_mem_used']):>5}"
+                f" = {_gb(r['gpu_mem_free']):<6}")
     return row
 
 
@@ -33,18 +48,32 @@ def _header(gpu: bool) -> str:
     return h
 
 
-def format_user_view(cluster: str, block: UserBlock, gpu: bool = False,
-                     show_email: bool = False) -> str:
+def _user_block_text(cluster: str, username: str, email: str,
+                     rows: Sequence[dict], gpu: bool,
+                     show_email: bool) -> str:
     lines = [f"Cluster name: {cluster}"]
-    who = f"Username: {block.username}"
+    who = f"Username: {username}"
     if show_email:
-        who += f" ({block.email})"
-    who += f", Nodes used: {len(block.nodes)}"
+        who += f" ({email})"
+    who += f", Nodes used: {len(rows)}"
     lines.append(who)
     lines.append(_header(gpu))
-    for n in block.nodes:
-        lines.append(_node_row(n, gpu))
+    for r in rows:
+        lines.append(_node_row(r, gpu))
     return "\n".join(lines)
+
+
+def _rows_from_nodes(nodes: Sequence[NodeSnapshot]) -> List[dict]:
+    return [row_from_node(n) for n in nodes]
+
+
+# ------------------------------------------------------------- legacy API
+
+
+def format_user_view(cluster: str, block: UserBlock, gpu: bool = False,
+                     show_email: bool = False) -> str:
+    return _user_block_text(cluster, block.username, block.email,
+                            _rows_from_nodes(block.nodes), gpu, show_email)
 
 
 def format_all_view(view: AllView, gpu: bool = False) -> str:
@@ -65,50 +94,187 @@ def format_all_view(view: AllView, gpu: bool = False) -> str:
     return "\n".join(lines)
 
 
+def _top_row(host: str, avg_load: float, cpus: str, mem_total_mb: int,
+             mem_free_mb: int) -> str:
+    return (f"{host:<12} {avg_load:>9.5f}  {cpus:>14} "
+            f"{mem_total_mb:>18} {mem_free_mb:>9}")
+
+
+_TOP_COLUMNS = (f"{'HOSTNAMES':<12} {'AVG_LOAD':>9}  {'CPUS(A/I/O/T)':>14} "
+                f"{'MEMORY(MB, Total)':>18} {'FREE_MEM':>9}")
+
+
+def _top_header(n: int) -> List[str]:
+    return [f"List {n} of nodes with loads, sorted by descending order",
+            _TOP_COLUMNS]
+
+
 def format_top(rows: List[TopNode], n: int) -> str:
-    lines = [f"List {n} of nodes with loads, sorted by descending order",
-             f"{'HOSTNAMES':<12} {'AVG_LOAD':>9}  {'CPUS(A/I/O/T)':>14} "
-             f"{'MEMORY(MB, Total)':>18} {'FREE_MEM':>9}"]
+    lines = _top_header(n)
     for r in rows:
         cpus = f"{r.cpus_alloc}/{r.cpus_idle}/{r.cpus_other}/{r.cpus_total}"
-        lines.append(f"{r.hostname:<12} {r.avg_load:>9.5f}  {cpus:>14} "
-                     f"{r.mem_total_mb:>18} {r.mem_free_mb:>9}")
+        lines.append(_top_row(r.hostname, r.avg_load, cpus,
+                              r.mem_total_mb, r.mem_free_mb))
     return "\n".join(lines)
+
+
+_DETAIL_HEADER = ["Node Information:",
+                  f"{'HOSTNAMES':<12} {'CPU_LOAD':>9} {'CPUS(A/I/O/T)':>14} "
+                  f"{'MEMORY':>8} {'FREE_MEM':>9} {'GRES_USED':>24} "
+                  f"{'USER':>10}"]
+
+_JOB_HEADER = (f"{'JOBID':>9} {'NAME':>20} {'USER':>9} {'START_TIME':>19} "
+               f"{'EXEC_HOST':>11} {'CPUS':>5} {'MEM':>6} {'ST':>3}")
+
+
+def _detail_node_line(r: dict, user: str) -> str:
+    cpus = f"{r['cores_used']}/{r['cores_free']}/0/{r['cores']}"
+    gres = f"gpu:{r['gpus_used']}" if r['gpus'] else "none"
+    return (f"{r['host']:<12} {r['cpu_load']:>9.2f} {cpus:>14} "
+            f"{int(r['mem'] * 1000):>8} "
+            f"{int(r['mem_free'] * 1000):>9} {gres:>24} {user:>10}")
+
+
+def _detail_job_line(j: dict) -> str:
+    exec_host = ",".join(j["nodes"].split(",")[:2]) if j["nodes"] else ""
+    return (f"{j['job_id']:>9} {j['name']:>20} {j['user']:>9} "
+            f"{j['start_time']:>19.0f} {exec_host:>11} "
+            f"{j['cores']:>5} {int(j['mem'] * 1000):>5}M "
+            f"{j['state']:>3}")
+
+
+def _missing_line(missing: Sequence[str]) -> str:
+    return (f"Unknown node(s): {', '.join(missing)} "
+            "(no such host in this snapshot)")
 
 
 def format_node_detail(details: Sequence[NodeDetail],
                        missing: Sequence[str] = ()) -> str:
     if not details and missing:
-        return ("Node Information:\n"
-                f"Unknown node(s): {', '.join(missing)} "
-                "(no such host in this snapshot)")
-    lines = ["Node Information:",
-             f"{'HOSTNAMES':<12} {'CPU_LOAD':>9} {'CPUS(A/I/O/T)':>14} "
-             f"{'MEMORY':>8} {'FREE_MEM':>9} {'GRES_USED':>24} {'USER':>10}"]
+        return "Node Information:\n" + _missing_line(missing)
+    lines = list(_DETAIL_HEADER)
     for d in details:
-        n = d.node
-        cpus = f"{n.cores_used}/{n.cores_free}/0/{n.cores_total}"
-        gres = f"gpu:{n.gpus_used}" if n.gpus_total else "none"
         user = ", ".join(sorted({j.username for j in d.jobs})) or "-"
-        lines.append(f"{n.hostname:<12} {n.load:>9.2f} {cpus:>14} "
-                     f"{int(n.mem_total_gb * 1000):>8} "
-                     f"{int(n.mem_free_gb * 1000):>9} {gres:>24} {user:>10}")
+        lines.append(_detail_node_line(row_from_node(d.node), user))
     lines.append("")
-    lines.append(f"{'JOBID':>9} {'NAME':>20} {'USER':>9} {'START_TIME':>19} "
-                 f"{'EXEC_HOST':>11} {'CPUS':>5} {'MEM':>6} {'ST':>3}")
+    lines.append(_JOB_HEADER)
     seen = set()
     for d in details:
         for j in d.jobs:
             if j.job_id in seen:
                 continue
             seen.add(j.job_id)
-            lines.append(
-                f"{j.job_id:>9} {j.name:>20} {j.username:>9} "
-                f"{j.start_time:>19.0f} {','.join(j.nodes[:2]):>11} "
-                f"{j.cores_per_node:>5} {int(j.mem_per_node_gb * 1000):>5}M "
-                f"{j.state:>3}")
+            lines.append(_detail_job_line({
+                "job_id": j.job_id, "name": j.name, "user": j.username,
+                "start_time": j.start_time, "nodes": ",".join(j.nodes),
+                "cores": j.cores_per_node, "mem": j.mem_per_node_gb,
+                "state": j.state}))
     if missing:
         lines.append("")
-        lines.append(f"Unknown node(s): {', '.join(missing)} "
-                     "(no such host in this snapshot)")
+        lines.append(_missing_line(missing))
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------- ResultSet API
+
+
+def user_view_text(snap: ClusterSnapshot, rows: Sequence[dict],
+                   username: str, gpu: bool = False,
+                   show_email: bool = False) -> str:
+    """Fig 2/3 from engine rows (the user-view canned query's output)."""
+    return _user_block_text(snap.cluster, username, snap.email_of(username),
+                            rows, gpu, show_email)
+
+
+def top_view_text(rows: Sequence[dict], n: int) -> str:
+    """Fig 5/10 from engine rows (the top canned query's output)."""
+    lines = _top_header(n)
+    for r in rows:
+        cpus = f"{r['cores_used']}/{r['cores_free']}/0/{r['cores']}"
+        lines.append(_top_row(r["host"], r["norm_load"], cpus,
+                              int(r["mem"] * 1000), int(r["mem_free"] * 1000)))
+    return "\n".join(lines)
+
+
+def _jobs_by_host(job_rows: Sequence[dict]) -> Dict[str, List[dict]]:
+    by_host: Dict[str, List[dict]] = {}
+    for j in job_rows:
+        for h in j["nodes"].split(","):
+            if h:
+                by_host.setdefault(h, []).append(j)
+    return by_host
+
+
+def node_detail_text(snap: ClusterSnapshot, rows: Sequence[dict],
+                     hosts: Sequence[str]) -> str:
+    """Fig 11 from engine rows, in the *requested* host order; the job
+    table comes from the running-jobs canned query."""
+    by_host_row = {r["host"]: r for r in rows}
+    jobs = run_query(snap, running_jobs_query()).rows
+    by_host_jobs = _jobs_by_host(jobs)
+    found = [h for h in hosts if h in by_host_row]
+    # "unknown" means absent from the snapshot — a host a --filter
+    # excluded exists, so it is simply omitted, never reported missing
+    missing = [h for h in hosts if h not in snap.nodes]
+    if not found and missing:
+        return "Node Information:\n" + _missing_line(missing)
+    lines = list(_DETAIL_HEADER)
+    for h in found:
+        host_jobs = by_host_jobs.get(h, [])
+        user = ", ".join(sorted({j["user"] for j in host_jobs})) or "-"
+        lines.append(_detail_node_line(by_host_row[h], user))
+    lines.append("")
+    lines.append(_JOB_HEADER)
+    seen = set()
+    for h in found:
+        for j in by_host_jobs.get(h, []):
+            if j["job_id"] in seen:
+                continue
+            seen.add(j["job_id"])
+            lines.append(_detail_job_line(j))
+    if missing:
+        lines.append("")
+        lines.append(_missing_line(missing))
+    return "\n".join(lines)
+
+
+def all_view_text(snap: ClusterSnapshot, rows: Sequence[dict],
+                  requesting_user: str, privileged: bool,
+                  gpu: bool = False) -> str:
+    """Fig 4 from engine rows.  Non-privileged users are silently scoped
+    to their own block, exactly like the legacy all view."""
+    # split each row's comma-joined owner list once, not once per user
+    row_users = [(r, {u.strip() for u in r["users"].split(",") if u.strip()})
+                 for r in rows]
+
+    def member_rows(user: str) -> List[dict]:
+        return [r for r, owners in row_users if user in owners]
+
+    lines = [f"Cluster name: {snap.cluster}", ""]
+    if privileged:
+        jupyter: Dict[str, List[str]] = {}
+        for j in run_query(snap, jupyter_jobs_query()).rows:
+            tag = j["user"]
+            if j["gpu_request"]:
+                tag += f"({j['gpu_request']})"
+            for h in j["nodes"].split(","):
+                if h:
+                    jupyter.setdefault(h, []).append(tag)
+        if jupyter:
+            lines.append("Jupyter notebook jobs:")
+            lines.append("")
+            lines.append(f"{'NodeName':<14} Users(GPU)")
+            for h in sorted(jupyter):
+                lines.append(f"[J]-{h:<12}: " + ", ".join(sorted(jupyter[h])))
+            lines.append("")
+        users = sorted({u for _, owners in row_users for u in owners})
+    else:
+        users = [requesting_user] if member_rows(requesting_user) else []
+    lines.append("Node information for each user:")
+    lines.append("")
+    for user in users:
+        lines.append(_user_block_text(
+            snap.cluster, user, snap.email_of(user),
+            member_rows(user), gpu, show_email=True))
+        lines.append("")
     return "\n".join(lines)

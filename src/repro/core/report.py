@@ -33,9 +33,20 @@ def format_weekly_report(report: WeeklyReport, anonymize: bool = False) -> str:
 
 
 def _anonymized(report: WeeklyReport) -> WeeklyReport:
+    # one stable username->alias map across the WHOLE report: the same
+    # real user must read as the same pseudonym in every section, and a
+    # given pseudonym must never mean two different people
+    alias = {}
+
+    def name_for(username: str) -> str:
+        if username not in alias:
+            alias[username] = f"user{len(alias) + 1:02d}"
+        return alias[username]
+
     def anon(rows):
-        return [ReportRow(f"user{i+1:02d}", f"user{i+1:02d}@ll.mit.edu",
-                          r.node_hours) for i, r in enumerate(rows)]
+        return [ReportRow(name_for(r.username),
+                          f"{name_for(r.username)}@ll.mit.edu",
+                          r.node_hours) for r in rows]
     return WeeklyReport(report.start, report.end, anon(report.low_gpu),
                         anon(report.low_cpu), anon(report.high_cpu))
 

@@ -84,6 +84,11 @@ class RemoteClient:
     def view(self, kind: str, **query) -> str:
         return self._get(f"/view/{kind}", query).decode("utf-8")
 
+    def query(self, **params) -> str:
+        """GET /query with the params passed through verbatim — the
+        unified query engine (DESIGN.md §7), answered server-side."""
+        return self._get("/query", params).decode("utf-8")
+
 
 class RemoteSource:
     """A daemon as a :class:`MetricSource` — collection is a GET.

@@ -11,9 +11,14 @@ over the network::
 Endpoints (all GET):
 
     /snapshot            versioned wire JSON of the current snapshot
+    /query?table=T&...   the unified query engine (DESIGN.md §7):
+                         filter/sort/columns/group_by/limit over
+                         nodes|users|jobs|history, any registry format
     /view/user?user=U    rendered per-user view (text, ``&gpu=1`` for -g)
     /view/top?n=N        rendered top-N loaded nodes (text)
     /view/nodes?hosts=A,B  rendered node detail (text)
+      (all /view/* accept &filter=&sort=&columns=&limit=&format= —
+       the CLI's query flags pass through verbatim)
     /trend?window=S      downsampled series from the history store
     /weekly              weekly low/over-utilization report from tiers
     /healthz             liveness + wire version
@@ -36,23 +41,25 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, Optional, Tuple
 
 from repro.core import formatting
-from repro.core.llload import LLload
 from repro.daemon import promtext, protocol
 from repro.daemon.store import HistoryStore
 from repro.monitor import TelemetryBus, build_source
+from repro.query import (Query, QueryError, apply_modifiers, get_renderer,
+                         resolve_format, run_query, view_query)
 
 JSON_CT = "application/json; charset=utf-8"
 TEXT_CT = "text/plain; charset=utf-8"
 
 # endpoints whose bytes may be reused within a TTL window (everything
 # derived purely from the current snapshot / store state)
-_CACHEABLE = ("/snapshot", "/view/", "/metrics", "/trend", "/weekly")
+_CACHEABLE = ("/snapshot", "/query", "/view/", "/metrics", "/trend",
+              "/weekly")
 
 # the fixed label vocabulary for the per-endpoint request counter:
 # arbitrary client paths must not mint new Prometheus label values (label
 # injection + unbounded counter growth), so anything else counts as other
 _KNOWN_ENDPOINTS = frozenset([
-    "/snapshot", "/view/user", "/view/top", "/view/nodes",
+    "/snapshot", "/query", "/view/user", "/view/top", "/view/nodes",
     "/trend", "/weekly", "/healthz", "/stats", "/metrics",
 ])
 
@@ -239,35 +246,73 @@ class LLloadDaemon:
                     for r in getattr(rep, cat)]
             return 200, JSON_CT, protocol.dumps(
                 protocol.envelope("weekly", payload))
+        if path == "/query":
+            return self._query(query)
         if path.startswith("/view/"):
             return self._view(path[len("/view/"):], query)
         raise HTTPError(404, f"unknown endpoint {path!r}")
 
+    def _query(self, query: Dict[str, str]) -> Tuple[int, str, bytes]:
+        """The unified query engine over HTTP; same vocabulary, same
+        renderers, same JSON schema as the local CLI (DESIGN.md §7)."""
+        fmt = query.get("format") or "json"
+        try:
+            q = Query.from_params(
+                table=query.get("table"),
+                columns=query.get("columns"),
+                filter=query.get("filter"),
+                sort=query.get("sort"),
+                group_by=query.get("group_by"),
+                limit=query.get("limit"))
+            renderer = get_renderer(fmt)
+            snap = self.bus.read(self.source.name)
+            rs = run_query(snap, q, store=self.store)
+            body = renderer.render(rs)      # prom may reject dup labels
+        except QueryError as exc:
+            raise HTTPError(400, str(exc)) from exc
+        return 200, renderer.content_type, body.encode("utf-8")
+
     def _view(self, kind: str, query: Dict[str, str]
               ) -> Tuple[int, str, bytes]:
-        snap = self.bus.read(self.source.name)
-        ll = LLload(snap, privileged_users=self.privileged)
-        if kind == "user":
-            user = query.get("user")
-            if not user:
-                raise HTTPError(400, "/view/user requires ?user=NAME")
-            gpu = query.get("gpu", "0") not in ("0", "", "false")
-            text = formatting.format_user_view(
-                snap.cluster, ll.user_view(user), gpu)
-        elif kind == "top":
-            n = _int_q(query, "n", default=10)
-            if n <= 0:
-                raise HTTPError(400, "?n must be > 0")
-            text = formatting.format_top(ll.top_loaded(n), n)
-        elif kind == "nodes":
-            hosts = [h.strip() for h in query.get("hosts", "").split(",")
-                     if h.strip()]
-            if not hosts:
-                raise HTTPError(400, "/view/nodes requires ?hosts=A,B")
-            rep = ll.node_detail_report(hosts)
-            text = formatting.format_node_detail(rep.details, rep.missing)
-        else:
+        if kind not in ("user", "top", "nodes"):
             raise HTTPError(404, f"unknown view {kind!r}")
+        snap = self.bus.read(self.source.name)
+        user = query.get("user")
+        gpu = query.get("gpu", "0") not in ("0", "", "false")
+        n = _int_q(query, "n", default=10)
+        hosts = [h.strip() for h in query.get("hosts", "").split(",")
+                 if h.strip()]
+        if kind == "user" and not user:
+            raise HTTPError(400, "/view/user requires ?user=NAME")
+        if kind == "top" and n <= 0:
+            raise HTTPError(400, "?n must be > 0")
+        if kind == "nodes" and not hosts:
+            raise HTTPError(400, "/view/nodes requires ?hosts=A,B")
+        try:
+            canned = view_query(kind, user=user or "", n=n, hosts=hosts)
+            q = apply_modifiers(
+                canned,
+                columns=query.get("columns"),
+                filter=query.get("filter"),
+                sort=query.get("sort"),
+                group_by=query.get("group_by"),
+                limit=_int_q(query, "limit", default=None))
+            fmt = resolve_format(query.get("format"),
+                                 query.get("columns"),
+                                 query.get("group_by"))
+            rs = run_query(snap, q, store=self.store)
+            if fmt != "text":
+                renderer = get_renderer(fmt)
+                return (200, renderer.content_type,
+                        renderer.render(rs).encode("utf-8"))
+            if kind == "user":
+                text = formatting.user_view_text(snap, rs.rows, user, gpu)
+            elif kind == "top":
+                text = formatting.top_view_text(rs.rows, q.limit or n)
+            else:
+                text = formatting.node_detail_text(snap, rs.rows, hosts)
+        except QueryError as exc:
+            raise HTTPError(400, str(exc)) from exc
         return 200, TEXT_CT, (text + "\n").encode("utf-8")
 
 

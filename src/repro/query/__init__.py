@@ -1,0 +1,38 @@
+"""repro.query — the unified query/render engine (DESIGN.md §7).
+
+One typed :class:`Query` (select / filter / sort / group-by / limit)
+answers every surface: interactive CLI views, ``--watch`` frames, and
+the daemon's ``GET /query`` — each is a canned query through this
+package, rendered by a registry renderer (``table``/``json``/``csv``/
+``tsv``/``prom``) or the legacy byte-identical text layouts.
+"""
+from repro.query.engine import (DEFAULT_COLUMNS, TABLES, Column, Query,
+                                ResultSet, column_kinds, history_rows,
+                                job_rows, node_rows, row_from_node,
+                                run_query, user_rows, vocabulary)
+from repro.query.errors import QueryError
+from repro.query.expr import (Bool, Cmp, Expr, Not, conjoin, in_set,
+                              parse_filter)
+from repro.query.render import (QUERY_SCHEMA_VERSION, RENDERERS, Renderer,
+                                get_renderer, json_payload, parse_delimited,
+                                register_renderer, render_csv, render_json,
+                                render_prom, render_table, render_tsv,
+                                renderer_names)
+from repro.query.views import (VIEW_KINDS, all_query, apply_modifiers,
+                               jupyter_jobs_query, nodes_query,
+                               resolve_format, running_jobs_query,
+                               top_query, user_query, view_query)
+
+__all__ = [
+    "Bool", "Cmp", "Column", "DEFAULT_COLUMNS", "Expr", "Not",
+    "QUERY_SCHEMA_VERSION", "Query", "QueryError", "RENDERERS",
+    "Renderer", "ResultSet", "TABLES", "VIEW_KINDS", "all_query",
+    "apply_modifiers", "column_kinds", "conjoin", "get_renderer",
+    "history_rows", "in_set", "job_rows", "json_payload",
+    "jupyter_jobs_query", "node_rows", "nodes_query", "parse_delimited",
+    "parse_filter", "register_renderer", "render_csv", "render_json",
+    "render_prom", "render_table", "render_tsv", "renderer_names",
+    "resolve_format", "row_from_node", "run_query", "running_jobs_query",
+    "top_query",
+    "user_query", "user_rows", "view_query", "vocabulary",
+]

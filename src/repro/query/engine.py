@@ -1,0 +1,427 @@
+"""Typed query engine over LLload telemetry (DESIGN.md §7).
+
+One :class:`Query` — select / filter / sort / group-by / limit — runs
+against any :class:`~repro.core.metrics.ClusterSnapshot` (and, when a
+:class:`~repro.daemon.store.HistoryStore` is supplied, its downsampled
+tiers).  Every interactive view, watch frame, and daemon endpoint is a
+canned query through this module, so the same vocabulary works from
+Python (`Query(...)`), the CLI (``--filter/--sort/--columns/--limit``),
+and HTTP (``GET /query?...``).
+
+Tables:
+
+  * ``nodes``   — one row per node; ``user`` is the first-owner
+                  attribution (the TSV archive rule), ``users`` the
+                  comma-joined set of all running-job owners.
+  * ``users``   — one row per user with per-user aggregates (a node
+                  shared by k users counts toward each of them, matching
+                  the interactive per-user views).
+  * ``jobs``    — one row per job in the snapshot's job table.
+  * ``history`` — one row per downsampled tier bucket (daemon only:
+                  requires a HistoryStore).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.metrics import ClusterSnapshot
+from repro.query.errors import QueryError
+from repro.query.expr import Bool, Cmp, Expr, Not, parse_filter
+
+# --------------------------------------------------------------- vocabulary
+
+
+@dataclasses.dataclass(frozen=True)
+class Column:
+    name: str
+    kind: str                   # "str" | "int" | "float"
+    help: str = ""
+
+
+_NODE_COLUMNS = [
+    Column("host", "str", "hostname"),
+    Column("user", "str", "owning user (first-owner rule; '' when idle)"),
+    Column("users", "str", "all running-job owners, comma-joined"),
+    Column("email", "str", "owning user's email"),
+    Column("jobtype", "str", "owning job's type (batch/jupyter/debug)"),
+    Column("cores", "int", "CPU cores on the node"),
+    Column("cores_used", "int", "CPU cores allocated"),
+    Column("cores_free", "int", "CPU cores free"),
+    Column("cpu_load", "float", "5-minute load average (absolute)"),
+    Column("norm_load", "float", "load / cores (1.0 == fully loaded)"),
+    Column("mem", "float", "system memory total (GB)"),
+    Column("mem_used", "float", "system memory used (GB)"),
+    Column("mem_free", "float", "system memory free (GB)"),
+    Column("gpus", "int", "devices on the node"),
+    Column("gpus_used", "int", "devices allocated"),
+    Column("gpus_free", "int", "devices free"),
+    Column("gpu_load", "float", "mean device duty cycle (0..1+)"),
+    Column("gpu_mem", "float", "device memory total (GB)"),
+    Column("gpu_mem_used", "float", "device memory used (GB)"),
+    Column("gpu_mem_free", "float", "device memory free (GB)"),
+]
+
+_USER_COLUMNS = [
+    Column("user", "str", "username"),
+    Column("email", "str", "email"),
+    Column("nodes", "int", "nodes the user's running jobs occupy"),
+    Column("cores_used", "int", "allocated cores across those nodes"),
+    Column("gpus_used", "int", "allocated devices across those nodes"),
+    Column("cpu_load", "float", "mean absolute load across those nodes"),
+    Column("norm_load", "float", "mean normalized load"),
+    Column("gpu_load", "float", "mean device duty over device nodes"),
+    Column("mem_used", "float", "memory used across those nodes (GB)"),
+    Column("gpu_mem_used", "float", "device memory used (GB)"),
+]
+
+_JOB_COLUMNS = [
+    Column("job_id", "int", "job id"),
+    Column("user", "str", "submitting user"),
+    Column("name", "str", "job name"),
+    Column("state", "str", "R | PD | CG"),
+    Column("jobtype", "str", "batch | jupyter | debug"),
+    Column("nodes", "str", "assigned hostnames, comma-joined"),
+    Column("nnodes", "int", "number of assigned nodes"),
+    Column("cores", "int", "cores per node"),
+    Column("gpus", "int", "devices per node"),
+    Column("gpu_request", "str", "gres request string"),
+    Column("start_time", "float", "start time (cluster clock)"),
+    Column("partition", "str", "partition"),
+    Column("mem", "float", "memory per node (GB)"),
+]
+
+_HISTORY_AGGS = ("norm_load", "gpu_load", "nodes", "cores_used",
+                 "mem_used_gb", "gpus_used")
+
+_HISTORY_COLUMNS = [
+    Column("tier", "str", "tier name (raw or a downsampling tier)"),
+    Column("t", "float", "bucket start (cluster clock)"),
+    Column("count", "int", "snapshots folded into the bucket"),
+] + [
+    Column(f"{f}_{agg}", "float", f"bucket {agg} of {f}")
+    for f in _HISTORY_AGGS for agg in ("min", "mean", "max")
+]
+
+TABLES: Dict[str, List[Column]] = {
+    "nodes": _NODE_COLUMNS,
+    "users": _USER_COLUMNS,
+    "jobs": _JOB_COLUMNS,
+    "history": _HISTORY_COLUMNS,
+}
+
+# the default selection shown by generic renderers when no --columns given
+DEFAULT_COLUMNS: Dict[str, Tuple[str, ...]] = {
+    "nodes": ("host", "user", "cores", "cores_used", "cpu_load",
+              "norm_load", "mem", "mem_used", "gpus", "gpus_used",
+              "gpu_load"),
+    "users": ("user", "nodes", "cores_used", "gpus_used", "norm_load",
+              "gpu_load"),
+    "jobs": ("job_id", "user", "name", "state", "jobtype", "nnodes",
+             "cores", "gpus", "start_time"),
+    "history": ("tier", "t", "count", "norm_load_mean", "gpu_load_mean",
+                "nodes_mean", "cores_used_mean"),
+}
+
+
+def vocabulary(table: str) -> List[str]:
+    """Column names of ``table`` (raises QueryError for unknown tables)."""
+    if table not in TABLES:
+        raise QueryError(f"unknown table {table!r}; valid tables: "
+                         + ", ".join(sorted(TABLES)))
+    return [c.name for c in TABLES[table]]
+
+
+def column_kinds(table: str) -> Dict[str, str]:
+    return {c.name: c.kind for c in TABLES[table]}
+
+
+def _check_columns(table: str, names: Sequence[str], what: str,
+                   allow_desc: bool = False) -> None:
+    vocab = vocabulary(table)
+    for name in names:
+        base = name[1:] if allow_desc and name.startswith("-") else name
+        if base not in vocab:
+            raise QueryError(
+                f"unknown column {base!r} in {what}; valid columns for "
+                f"table {table!r}: " + ", ".join(vocab))
+
+
+def _check_expr(table: str, expr: Optional[Expr]) -> None:
+    if expr is None:
+        return
+    if isinstance(expr, Cmp):
+        _check_columns(table, [expr.column], "filter")
+    elif isinstance(expr, Not):
+        _check_expr(table, expr.child)
+    elif isinstance(expr, Bool):
+        for child in expr.children:
+            _check_expr(table, child)
+
+
+# -------------------------------------------------------------------- Query
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """One typed query; immutable so canned views can be shared."""
+    table: str = "nodes"
+    columns: Tuple[str, ...] = ()       # () selects DEFAULT_COLUMNS[table]
+    where: Optional[Expr] = None
+    sort: Tuple[str, ...] = ()          # "-col" sorts descending
+    group_by: Optional[str] = None
+    limit: Optional[int] = None         # grouped queries limit groups
+
+    def validate(self) -> "Query":
+        vocabulary(self.table)          # raises on unknown table
+        _check_columns(self.table, self.columns, "--columns")
+        _check_columns(self.table, self.sort, "--sort", allow_desc=True)
+        if self.group_by is not None:
+            _check_columns(self.table, [self.group_by], "--group-by")
+        _check_expr(self.table, self.where)
+        if self.limit is not None and self.limit <= 0:
+            raise QueryError(f"limit must be > 0, got {self.limit}")
+        return self
+
+    @classmethod
+    def from_params(cls, *, table: Optional[str] = None,
+                    columns: Optional[str] = None,
+                    filter: Optional[str] = None,   # noqa: A002 — CLI name
+                    sort: Optional[str] = None,
+                    group_by: Optional[str] = None,
+                    limit=None) -> "Query":
+        """Build from the string forms the CLI flags / query params use."""
+        table = (table or "nodes").strip()
+        vocab = vocabulary(table)
+        cols = tuple(c.strip() for c in (columns or "").split(",")
+                     if c.strip())
+        sort_keys = tuple(s.strip() for s in (sort or "").split(",")
+                          if s.strip())
+        where = parse_filter(filter, vocab) if filter else None
+        if limit is not None and not isinstance(limit, int):
+            try:
+                limit = int(str(limit).strip())
+            except ValueError:
+                raise QueryError(f"limit must be an integer, got {limit!r}")
+        return cls(table=table, columns=cols, where=where,
+                   sort=sort_keys, group_by=(group_by or None),
+                   limit=limit).validate()
+
+    # conveniences for composing canned views with user flags ------------
+    def narrowed(self, extra: Optional[Expr]) -> "Query":
+        """AND an extra condition onto this query's filter."""
+        if extra is None:
+            return self
+        from repro.query.expr import conjoin
+        return dataclasses.replace(self, where=conjoin(self.where, extra))
+
+    def with_params(self, other: "Query") -> "Query":
+        """Overlay the explicitly-set parts of ``other`` (same table)."""
+        return dataclasses.replace(
+            self,
+            columns=other.columns or self.columns,
+            where=other.where if other.where is not None else self.where,
+            sort=other.sort or self.sort,
+            group_by=other.group_by or self.group_by,
+            limit=other.limit if other.limit is not None else self.limit,
+        )
+
+
+# ---------------------------------------------------------------- ResultSet
+
+
+@dataclasses.dataclass
+class ResultSet:
+    """Rows carry the table's *full* vocabulary (renderers project onto
+    ``columns``), so canned text views can reach every field."""
+    table: str
+    columns: List[str]
+    rows: List[dict]
+    cluster: str = ""
+    timestamp: float = 0.0
+    group_by: Optional[str] = None
+    groups: Optional[List[Tuple[object, List[dict]]]] = None
+
+    def cells(self, row: dict) -> List[object]:
+        return [row.get(c) for c in self.columns]
+
+
+# ------------------------------------------------------------ materializers
+
+
+def row_from_node(n, *, user: str = "", users: str = "",
+                  email: str = "", jobtype: str = "") -> dict:
+    """One nodes-table row from a NodeSnapshot (ownership supplied by the
+    caller) — also the bridge the legacy typed formatters render through."""
+    return {
+        "host": n.hostname,
+        "user": user,
+        "users": users,
+        "email": email,
+        "jobtype": jobtype,
+        "cores": n.cores_total,
+        "cores_used": n.cores_used,
+        "cores_free": n.cores_free,
+        "cpu_load": n.load,
+        "norm_load": n.norm_load,
+        "mem": n.mem_total_gb,
+        "mem_used": n.mem_used_gb,
+        "mem_free": n.mem_free_gb,
+        "gpus": n.gpus_total,
+        "gpus_used": n.gpus_used,
+        "gpus_free": n.gpus_free,
+        "gpu_load": n.gpu_load,
+        "gpu_mem": n.gpu_mem_total_gb,
+        "gpu_mem_used": n.gpu_mem_used_gb,
+        "gpu_mem_free": n.gpu_mem_free_gb,
+    }
+
+
+def node_rows(snap: ClusterSnapshot) -> List[dict]:
+    owner: Dict[str, str] = {}
+    jobtype: Dict[str, str] = {}
+    owners: Dict[str, set] = {}
+    for job in snap.jobs:
+        if job.state != "R":
+            continue
+        for h in job.nodes:
+            owner.setdefault(h, job.username)
+            jobtype.setdefault(h, job.job_type)
+            owners.setdefault(h, set()).add(job.username)
+    rows = []
+    for host in sorted(snap.nodes):
+        n = snap.nodes[host]
+        user = owner.get(host, "")
+        rows.append(row_from_node(
+            n, user=user,
+            users=", ".join(sorted(owners.get(host, ()))),
+            email=snap.email_of(user) if user else "",
+            jobtype=jobtype.get(host, "")))
+    return rows
+
+
+def user_rows(snap: ClusterSnapshot) -> List[dict]:
+    by_user = snap.nodes_by_user()
+    rows = []
+    for user in sorted(by_user):
+        nodes = [snap.nodes[h] for h in by_user[user] if h in snap.nodes]
+        if not nodes:
+            continue
+        gpu_nodes = [n for n in nodes if n.gpus_total > 0]
+        mean = lambda vs: sum(vs) / len(vs) if vs else 0.0  # noqa: E731
+        rows.append({
+            "user": user,
+            "email": snap.email_of(user),
+            "nodes": len(nodes),
+            "cores_used": sum(n.cores_used for n in nodes),
+            "gpus_used": sum(n.gpus_used for n in nodes),
+            "cpu_load": mean([n.load for n in nodes]),
+            "norm_load": mean([n.norm_load for n in nodes]),
+            "gpu_load": mean([n.gpu_load for n in gpu_nodes]),
+            "mem_used": sum(n.mem_used_gb for n in nodes),
+            "gpu_mem_used": sum(n.gpu_mem_used_gb for n in nodes),
+        })
+    return rows
+
+
+def job_rows(snap: ClusterSnapshot) -> List[dict]:
+    return [{
+        "job_id": j.job_id,
+        "user": j.username,
+        "name": j.name,
+        "state": j.state,
+        "jobtype": j.job_type,
+        "nodes": ",".join(j.nodes),
+        "nnodes": len(j.nodes),
+        "cores": j.cores_per_node,
+        "gpus": j.gpus_per_node,
+        "gpu_request": j.gpu_request,
+        "start_time": j.start_time,
+        "partition": j.partition,
+        "mem": j.mem_per_node_gb,
+    } for j in snap.jobs]
+
+
+def history_rows(store) -> List[dict]:
+    """Flatten every tier (raw included) of a HistoryStore into rows."""
+    rows = []
+    for tier in store.tier_names():
+        wire = store.trend_wire(tier)
+        for p in wire["points"]:
+            row = {"tier": tier, "t": p["t"], "count": p["count"]}
+            for f in _HISTORY_AGGS:
+                for agg in ("min", "mean", "max"):
+                    row[f"{f}_{agg}"] = p[f][agg]
+            rows.append(row)
+    return rows
+
+
+# --------------------------------------------------------------- execution
+
+
+def _sorted_rows(rows: List[dict], sort: Sequence[str]) -> List[dict]:
+    out = list(rows)
+    # apply keys last-to-first: list.sort is stable, so the first key
+    # dominates and ties fall through to later keys (and, ultimately, to
+    # the materializer's deterministic base order)
+    for key in reversed(list(sort)):
+        desc = key.startswith("-")
+        col = key[1:] if desc else key
+        out.sort(key=lambda r: r.get(col), reverse=desc)
+    return out
+
+
+def _grouped(rows: List[dict], column: str
+             ) -> List[Tuple[object, List[dict]]]:
+    groups: Dict[object, List[dict]] = {}
+    order: List[object] = []
+    for row in rows:
+        key = row.get(column)
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append(row)
+    return [(k, groups[k]) for k in order]
+
+
+def run_query(snap: Optional[ClusterSnapshot], query: Query,
+              store=None) -> ResultSet:
+    """Execute ``query`` against a snapshot (and optional history store).
+
+    ``snap`` may be None only for the ``history`` table.
+    """
+    query.validate()
+    if query.table == "history":
+        if store is None:
+            raise QueryError(
+                "table 'history' needs a history store — query a daemon "
+                "(GET /query) or pass store=HistoryStore(...)")
+        rows = history_rows(store)
+    elif snap is None:
+        raise QueryError(f"table {query.table!r} needs a snapshot")
+    elif query.table == "nodes":
+        rows = node_rows(snap)
+    elif query.table == "users":
+        rows = user_rows(snap)
+    else:
+        rows = job_rows(snap)
+
+    if query.where is not None:
+        rows = [r for r in rows if query.where.evaluate(r)]
+    rows = _sorted_rows(rows, query.sort)
+
+    groups = None
+    if query.group_by is not None:
+        groups = _grouped(rows, query.group_by)
+        if query.limit is not None:
+            groups = groups[:query.limit]
+            rows = [r for _, g in groups for r in g]
+    elif query.limit is not None:
+        rows = rows[:query.limit]
+
+    columns = list(query.columns or DEFAULT_COLUMNS[query.table])
+    return ResultSet(
+        table=query.table, columns=columns, rows=rows,
+        cluster=snap.cluster if snap is not None else "",
+        timestamp=snap.timestamp if snap is not None else 0.0,
+        group_by=query.group_by, groups=groups)

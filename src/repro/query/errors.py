@@ -1,0 +1,11 @@
+"""The query engine's user-error type.
+
+A :class:`QueryError` always means "the query was malformed" (unknown
+table/column/renderer, bad filter syntax, non-positive limit) — callers
+map it to exit code 1 (CLI) or HTTP 400 (daemon), never to a traceback.
+"""
+from __future__ import annotations
+
+
+class QueryError(ValueError):
+    """Malformed query: bad column, table, filter, sort, or renderer."""

@@ -1,0 +1,253 @@
+"""Filter expression parser for the query engine (DESIGN.md §7).
+
+Grammar (precedence low to high)::
+
+    expr    := or
+    or      := and ("or" and)*
+    and     := unary ("and" unary)*
+    unary   := "not" unary | "(" expr ")" | cmp
+    cmp     := IDENT OP literal
+    OP      := "<=" | ">=" | "==" | "!=" | "=~" | "<" | ">" | "=" | "has"
+    literal := NUMBER | STRING | bareword
+
+``=~`` is a shell-glob match (``fnmatch``) for string columns:
+``host =~ "c-1-*"``; ``has`` tests membership in a comma-joined list
+column: ``users has ab12345``.  ``=`` is accepted as a spelling of
+``==``.
+Column names are validated against the queried table's vocabulary at
+parse time, so a typo reports the valid columns instead of matching
+nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import re
+from typing import Iterable, List, Optional, Sequence, Union
+
+from repro.query.errors import QueryError
+
+_TOKEN_RE = re.compile(r"""
+    \s*(?:
+        (?P<op><=|>=|==|!=|=~|<|>|=)
+      | (?P<lparen>\()
+      | (?P<rparen>\))
+      | (?P<string>"(?:[^"\\]|\\.)*"|'(?:[^'\\]|\\.)*')
+      | (?P<number>-?\d+(?:\.\d+)?(?:[eE][-+]?\d+)?)
+      | (?P<word>[A-Za-z_][A-Za-z0-9_.:*?\[\]-]*)
+    )""", re.VERBOSE)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Tok:
+    kind: str
+    text: str
+
+
+def _tokenize(text: str) -> List[_Tok]:
+    toks, pos = [], 0
+    while pos < len(text):
+        m = _TOKEN_RE.match(text, pos)
+        if m is None or m.end() == pos:
+            rest = text[pos:].strip()
+            if not rest:
+                break
+            raise QueryError(f"filter: cannot parse at {rest[:20]!r}")
+        pos = m.end()
+        for kind in ("op", "lparen", "rparen", "string", "number", "word"):
+            tok = m.group(kind)
+            if tok is not None:
+                toks.append(_Tok(kind, tok))
+                break
+    return toks
+
+
+# ---------------------------------------------------------------- AST nodes
+
+
+@dataclasses.dataclass(frozen=True)
+class Cmp:
+    column: str
+    op: str                       # < <= > >= == != =~ has
+    value: Union[float, str]
+    raw: Optional[str] = None     # the literal as written (string contexts)
+
+    def evaluate(self, row: dict) -> bool:
+        have = row.get(self.column)
+        if have is None:
+            return False
+        want = self.value
+        if isinstance(have, str) and isinstance(want, float):
+            # a numeric literal against a string column compares as
+            # written: `users has 42` / `host == 123` must match the
+            # text "42"/"123", not the float repr "42.0"
+            want = self.raw if self.raw is not None else str(want)
+        if self.op == "=~":
+            return fnmatch.fnmatchcase(str(have), str(want))
+        if self.op == "has":
+            parts = [p.strip() for p in str(have).split(",")]
+            return str(want) in parts
+        if isinstance(want, str) and isinstance(have, (int, float)):
+            # string literal against a numeric column: equality is
+            # False, inequality its negation (!= stays `not ==`), and
+            # orderings are unsatisfiable
+            return self.op == "!="
+        if self.op == "==":
+            return have == want
+        if self.op == "!=":
+            return have != want
+        if self.op == "<":
+            return have < want
+        if self.op == "<=":
+            return have <= want
+        if self.op == ">":
+            return have > want
+        return have >= want
+
+    def __str__(self):
+        v = self.value if isinstance(self.value, float) else f'"{self.value}"'
+        return f"{self.column} {self.op} {v}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Not:
+    child: "Expr"
+
+    def evaluate(self, row: dict) -> bool:
+        return not self.child.evaluate(row)
+
+    def __str__(self):
+        return f"not ({self.child})"
+
+
+@dataclasses.dataclass(frozen=True)
+class Bool:
+    op: str                       # and | or
+    children: tuple
+
+    def evaluate(self, row: dict) -> bool:
+        if self.op == "and":
+            return all(c.evaluate(row) for c in self.children)
+        return any(c.evaluate(row) for c in self.children)
+
+    def __str__(self):
+        return f" {self.op} ".join(f"({c})" for c in self.children)
+
+
+Expr = Union[Cmp, Not, Bool]
+
+
+def conjoin(*exprs: Optional[Expr]) -> Optional[Expr]:
+    """AND together the non-None expressions (None = match everything)."""
+    parts = tuple(e for e in exprs if e is not None)
+    if not parts:
+        return None
+    if len(parts) == 1:
+        return parts[0]
+    return Bool("and", parts)
+
+
+def in_set(column: str, values: Iterable[str]) -> Expr:
+    """``column`` equals any of ``values`` (used by canned views)."""
+    vals = list(values)
+    if len(vals) == 1:
+        return Cmp(column, "==", vals[0])
+    return Bool("or", tuple(Cmp(column, "==", v) for v in vals))
+
+
+# ------------------------------------------------------------------ parser
+
+
+class _Parser:
+    def __init__(self, toks: List[_Tok], vocabulary: Sequence[str]):
+        self.toks = toks
+        self.pos = 0
+        self.vocab = list(vocabulary)
+
+    def peek(self) -> Optional[_Tok]:
+        return self.toks[self.pos] if self.pos < len(self.toks) else None
+
+    def next(self) -> _Tok:
+        tok = self.peek()
+        if tok is None:
+            raise QueryError("filter: unexpected end of expression")
+        self.pos += 1
+        return tok
+
+    def parse(self) -> Expr:
+        expr = self.parse_or()
+        if self.peek() is not None:
+            raise QueryError(
+                f"filter: trailing input at {self.peek().text!r}")
+        return expr
+
+    def parse_or(self) -> Expr:
+        parts = [self.parse_and()]
+        while self.peek() and self.peek().text == "or":
+            self.next()
+            parts.append(self.parse_and())
+        return parts[0] if len(parts) == 1 else Bool("or", tuple(parts))
+
+    def parse_and(self) -> Expr:
+        parts = [self.parse_unary()]
+        while self.peek() and self.peek().text == "and":
+            self.next()
+            parts.append(self.parse_unary())
+        return parts[0] if len(parts) == 1 else Bool("and", tuple(parts))
+
+    def parse_unary(self) -> Expr:
+        tok = self.peek()
+        if tok is None:
+            raise QueryError("filter: unexpected end of expression")
+        if tok.kind == "word" and tok.text == "not":
+            self.next()
+            return Not(self.parse_unary())
+        if tok.kind == "lparen":
+            self.next()
+            expr = self.parse_or()
+            closing = self.next()
+            if closing.kind != "rparen":
+                raise QueryError("filter: expected ')'")
+            return expr
+        return self.parse_cmp()
+
+    def parse_cmp(self) -> Expr:
+        col = self.next()
+        if col.kind != "word":
+            raise QueryError(
+                f"filter: expected a column name, got {col.text!r}")
+        if col.text not in self.vocab:
+            raise QueryError(
+                f"unknown column {col.text!r} in filter; valid columns: "
+                + ", ".join(self.vocab))
+        op = self.next()
+        if op.kind != "op" and not (op.kind == "word" and op.text == "has"):
+            raise QueryError(
+                f"filter: expected a comparison after {col.text!r}, "
+                f"got {op.text!r}")
+        val = self.next()
+        if val.kind == "number":
+            value: Union[float, str] = float(val.text)
+        elif val.kind == "string":
+            body = val.text[1:-1]
+            value = re.sub(r"\\(.)", r"\1", body)
+        elif val.kind == "word" and val.text not in ("and", "or", "not"):
+            value = val.text            # bareword string (host == c-1-1-1)
+        else:
+            raise QueryError(
+                f"filter: expected a value after {op.text!r}, "
+                f"got {val.text!r}")
+        op_text = "==" if op.text == "=" else op.text
+        return Cmp(col.text, op_text, value,
+                   raw=val.text if val.kind == "number" else None)
+
+
+def parse_filter(text: str, vocabulary: Sequence[str]) -> Optional[Expr]:
+    """Parse ``--filter``-style text against a column vocabulary.
+
+    Empty/blank text means "match everything" (None).
+    """
+    toks = _tokenize(text)
+    if not toks:
+        return None
+    return _Parser(toks, vocabulary).parse()

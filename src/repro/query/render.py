@@ -1,0 +1,234 @@
+"""Renderer registry for query results (DESIGN.md §7).
+
+Every renderer turns a :class:`~repro.query.engine.ResultSet` into one
+string with a stable, machine-readable schema:
+
+  * ``table`` — aligned text columns (human exploration)
+  * ``json``  — versioned envelope, rows as arrays in column order
+  * ``csv``   — RFC-4180 (quoted delimiters/quotes/newlines, CRLF)
+  * ``tsv``   — tab-separated with the same quoting discipline
+  * ``prom``  — Prometheus gauges, numeric columns labelled by the
+                string columns
+
+The same renderer instance answers a local ``--format json`` and the
+daemon's ``GET /query&format=json``, which is what makes local and
+remote output byte-identical for the same snapshot.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import io
+import json
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.query.engine import ResultSet, column_kinds
+from repro.query.errors import QueryError
+
+QUERY_SCHEMA_VERSION = 1
+
+JSON_CT = "application/json; charset=utf-8"
+TEXT_CT = "text/plain; charset=utf-8"
+CSV_CT = "text/csv; charset=utf-8"
+PROM_CT = "text/plain; version=0.0.4; charset=utf-8"
+
+
+@dataclasses.dataclass(frozen=True)
+class Renderer:
+    name: str
+    content_type: str
+    fn: Callable[[ResultSet], str]
+
+    def render(self, rs: ResultSet) -> str:
+        return self.fn(rs)
+
+
+def _cell_text(v: object, kind: str) -> str:
+    if v is None:
+        return ""
+    if kind == "float":
+        return f"{float(v):.2f}"
+    return str(v)
+
+
+# -------------------------------------------------------------------- table
+
+
+def render_table(rs: ResultSet) -> str:
+    kinds = column_kinds(rs.table)
+    header = list(rs.columns)
+
+    def body(rows: List[dict]) -> List[List[str]]:
+        return [[_cell_text(r.get(c), kinds.get(c, "str"))
+                 for c in rs.columns] for r in rows]
+
+    sections: List[Tuple[Optional[str], List[List[str]]]] = []
+    if rs.groups is not None:
+        for key, rows in rs.groups:
+            sections.append((f"{rs.group_by} = {key}", body(rows)))
+    else:
+        sections.append((None, body(rs.rows)))
+
+    widths = [len(h) for h in header]
+    for _, rows in sections:
+        for row in rows:
+            for i, cell in enumerate(row):
+                widths[i] = max(widths[i], len(cell))
+
+    def fmt(cells: List[str]) -> str:
+        out = []
+        for i, cell in enumerate(cells):
+            kind = kinds.get(header[i], "str")
+            if kind in ("int", "float"):
+                out.append(cell.rjust(widths[i]))
+            else:
+                out.append(cell.ljust(widths[i]))
+        return "  ".join(out).rstrip()
+
+    lines = [fmt(header)]
+    for title, rows in sections:
+        if title is not None:
+            lines.append(f"-- {title} --")
+        lines.extend(fmt(r) for r in rows)
+    n = sum(len(rows) for _, rows in sections)
+    lines.append(f"({n} row{'' if n == 1 else 's'})")
+    # every renderer ends with a newline, so local stdout and daemon
+    # response bodies are byte-identical without caller fix-ups
+    return "\n".join(lines) + "\n"
+
+
+# --------------------------------------------------------------------- json
+
+
+def json_payload(rs: ResultSet) -> Dict[str, object]:
+    """The stable ``query_result`` schema (rows are arrays in column
+    order); shared verbatim by the CLI and the daemon's /query."""
+    payload: Dict[str, object] = {
+        "table": rs.table,
+        "cluster": rs.cluster,
+        "timestamp": rs.timestamp,
+        "columns": list(rs.columns),
+    }
+    if rs.groups is not None:
+        payload["group_by"] = rs.group_by
+        payload["groups"] = [
+            {"key": key, "rows": [rs.cells(r) for r in rows]}
+            for key, rows in rs.groups]
+    else:
+        payload["rows"] = [rs.cells(r) for r in rs.rows]
+    return payload
+
+
+def render_json(rs: ResultSet) -> str:
+    env = {"v": QUERY_SCHEMA_VERSION, "kind": "query_result",
+           "query_result": json_payload(rs)}
+    return json.dumps(env, separators=(",", ":")) + "\n"
+
+
+# ----------------------------------------------------------------- csv/tsv
+
+
+def _render_delimited(rs: ResultSet, *, delimiter: str,
+                      lineterminator: str) -> str:
+    """Header + one line per row.  Python's csv writer implements the
+    RFC-4180 discipline: any cell containing the delimiter, a quote, CR
+    or LF is quoted, internal quotes doubled.  Grouped results flatten;
+    the group column is part of the vocabulary, so no information is
+    lost (select it via --columns to keep it)."""
+    buf = io.StringIO()
+    w = csv.writer(buf, delimiter=delimiter, quotechar='"',
+                   quoting=csv.QUOTE_MINIMAL, lineterminator=lineterminator)
+    w.writerow(rs.columns)
+    for row in rs.rows:
+        w.writerow(["" if v is None else repr(v) if isinstance(v, float)
+                    else str(v) for v in rs.cells(row)])
+    return buf.getvalue()
+
+
+def render_csv(rs: ResultSet) -> str:
+    return _render_delimited(rs, delimiter=",", lineterminator="\r\n")
+
+
+def render_tsv(rs: ResultSet) -> str:
+    # CRLF here too: with a bare-\n terminator the csv writer would NOT
+    # quote a lone \r inside a cell, breaking render->parse round-trips
+    return _render_delimited(rs, delimiter="\t", lineterminator="\r\n")
+
+
+def parse_delimited(text: str, fmt: str = "csv") -> List[List[str]]:
+    """Inverse of the csv/tsv renderers (header row included) — the
+    round-trip partner the property tests exercise."""
+    delimiter = "," if fmt == "csv" else "\t"
+    return list(csv.reader(io.StringIO(text), delimiter=delimiter,
+                           quotechar='"'))
+
+
+# --------------------------------------------------------------------- prom
+
+
+def _prom_escape(value: str) -> str:
+    return (value.replace("\\", r"\\").replace('"', r'\"')
+            .replace("\n", r"\n"))
+
+
+def render_prom(rs: ResultSet, prefix: str = "llload_query_") -> str:
+    """Numeric selected columns become gauges; string selected columns
+    become labels (plus ``cluster``)."""
+    kinds = column_kinds(rs.table)
+    label_cols = [c for c in rs.columns if kinds.get(c) == "str"]
+    value_cols = [c for c in rs.columns if kinds.get(c) in ("int", "float")]
+    # two samples with identical labels are invalid exposition format —
+    # refuse up front instead of emitting metrics Prometheus rejects
+    seen = set()
+    for row in rs.rows:
+        key = tuple(str(row.get(c, "")) for c in label_cols)
+        if key in seen:
+            raise QueryError(
+                "prom format needs string columns that uniquely identify "
+                f"each row (duplicate labels {dict(zip(label_cols, key))}); "
+                "add a unique column such as 'host' to the selection")
+        seen.add(key)
+    lines: List[str] = []
+    for col in value_cols:
+        name = f"{prefix}{rs.table}_{col}"
+        lines.append(f"# TYPE {name} gauge")
+        for row in rs.rows:
+            pairs = [("cluster", rs.cluster)] if rs.cluster else []
+            pairs += [(c, str(row.get(c, ""))) for c in label_cols]
+            labels = ",".join(f'{k}="{_prom_escape(v)}"' for k, v in pairs)
+            labels = "{" + labels + "}" if labels else ""
+            v = row.get(col)
+            val = repr(float(v)) if v is not None else "NaN"
+            lines.append(f"{name}{labels} {val}")
+    return "\n".join(lines) + "\n"
+
+
+# ----------------------------------------------------------------- registry
+
+
+RENDERERS: Dict[str, Renderer] = {}
+
+
+def register_renderer(renderer: Renderer) -> None:
+    RENDERERS[renderer.name] = renderer
+
+
+def get_renderer(name: str) -> Renderer:
+    if name not in RENDERERS:
+        raise QueryError(f"unknown format {name!r}; valid formats: "
+                         + ", ".join(sorted(RENDERERS)))
+    return RENDERERS[name]
+
+
+def renderer_names() -> List[str]:
+    return sorted(RENDERERS)
+
+
+for _r in (
+    Renderer("table", TEXT_CT, render_table),
+    Renderer("json", JSON_CT, render_json),
+    Renderer("csv", CSV_CT, render_csv),
+    Renderer("tsv", CSV_CT, render_tsv),
+    Renderer("prom", PROM_CT, render_prom),
+):
+    register_renderer(_r)

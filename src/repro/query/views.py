@@ -1,0 +1,101 @@
+"""Canned queries behind the interactive LLload views (DESIGN.md §7).
+
+Each paper view is one :class:`~repro.query.engine.Query` (plus, for
+composite views, an auxiliary jobs query); the CLI, watch loop, and
+daemon all build their views here, overlay the user's
+``--filter/--sort/--columns/--limit`` modifiers with
+:func:`apply_modifiers`, and hand the result to a renderer — legacy
+text (byte-identical to the paper figures) or any registry format.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.query.engine import Query
+from repro.query.errors import QueryError
+from repro.query.expr import Cmp, conjoin, in_set
+
+VIEW_KINDS = ("user", "top", "nodes", "all")
+
+
+def user_query(username: str) -> Query:
+    """Fig 2/3: the nodes a user's running jobs occupy (shared nodes
+    included — membership in the ``users`` column, not first-owner)."""
+    return Query(table="nodes", where=Cmp("users", "has", username),
+                 sort=("host",))
+
+
+def top_query(n: int) -> Query:
+    """Fig 5/10: top-N nodes by normalized CPU load."""
+    if n <= 0:
+        raise QueryError(f"top view needs n > 0, got {n}")
+    return Query(table="nodes", sort=("-norm_load",), limit=n)
+
+
+def nodes_query(hosts: Sequence[str]) -> Query:
+    """Fig 11: detail rows for an explicit host list."""
+    hosts = [h for h in hosts if h]
+    if not hosts:
+        raise QueryError("nodes view needs at least one hostname")
+    return Query(table="nodes", where=in_set("host", list(hosts)))
+
+
+def all_query() -> Query:
+    """Fig 4: every owned node, ordered for per-user block rendering."""
+    return Query(table="nodes", where=Cmp("users", "!=", ""),
+                 sort=("host",))
+
+
+def jupyter_jobs_query() -> Query:
+    """The Fig-4 Jupyter summary's source rows."""
+    return Query(table="jobs", where=conjoin(
+        Cmp("state", "==", "R"), Cmp("jobtype", "==", "jupyter")))
+
+
+def running_jobs_query() -> Query:
+    """Running jobs (the -n job table's source rows)."""
+    return Query(table="jobs", where=Cmp("state", "==", "R"))
+
+
+def view_query(kind: str, *, user: str = "",
+               n: int = 10, hosts: Sequence[str] = ()) -> Query:
+    if kind == "user":
+        return user_query(user)
+    if kind == "top":
+        return top_query(n)
+    if kind == "nodes":
+        return nodes_query(hosts)
+    if kind == "all":
+        return all_query()
+    raise QueryError(f"unknown view {kind!r}; valid views: "
+                     + ", ".join(VIEW_KINDS))
+
+
+def apply_modifiers(canned: Query, *,
+                    columns: Optional[str] = None,
+                    filter: Optional[str] = None,  # noqa: A002 — CLI name
+                    sort: Optional[str] = None,
+                    group_by: Optional[str] = None,
+                    limit: Optional[int] = None) -> Query:
+    """Overlay string-form CLI flags / query params onto a canned view:
+    ``filter`` ANDs with the view's own scope, the others override.
+    String parsing and validation are :meth:`Query.from_params`'s — the
+    view path and the raw ``--table``//query path share one discipline."""
+    mod = Query.from_params(table=canned.table, columns=columns,
+                            filter=filter, sort=sort, group_by=group_by,
+                            limit=limit)
+    q = canned.narrowed(mod.where)
+    return q.with_params(dataclasses.replace(mod, where=None)).validate()
+
+
+def resolve_format(fmt: Optional[str], columns: Optional[str],
+                   group_by: Optional[str] = None) -> str:
+    """``text`` (the legacy view layout) has fixed columns and no group
+    sections, so an explicit ``--columns`` or ``--group-by``
+    auto-upgrades it to the generic table renderer; any registry format
+    passes through."""
+    fmt = fmt or "text"
+    if fmt == "text" and (columns or group_by):
+        return "table"
+    return fmt

@@ -200,6 +200,64 @@ def test_view_endpoints(daemon_url):
     assert host in nodes
 
 
+def test_query_endpoint_json_schema(daemon_url):
+    url, _ = daemon_url
+    obj = json.loads(_get(
+        url, "/query?table=nodes&filter=gpus%3E0&columns=host,gpu_load"
+             "&sort=-gpu_load&limit=3"))
+    assert obj["v"] == 1 and obj["kind"] == "query_result"
+    qr = obj["query_result"]
+    assert qr["columns"] == ["host", "gpu_load"]
+    assert len(qr["rows"]) == 3
+    loads = [r[1] for r in qr["rows"]]
+    assert loads == sorted(loads, reverse=True)
+
+
+def test_query_endpoint_history_table(daemon_url):
+    url, _ = daemon_url
+    _get(url, "/snapshot")         # force >= 1 collection into the store
+    obj = json.loads(_get(url, "/query?table=history&filter=tier%3D%3Draw"))
+    rows = obj["query_result"]["rows"]
+    assert rows, "raw tier should hold at least one summarized snapshot"
+
+
+def test_query_endpoint_is_cached(daemon_url):
+    url, daemon = daemon_url
+    path = "/query?table=users&format=csv"
+    first = _get(url, path)
+    hits_before = daemon.counters()["http_cache_hits_total"]
+    assert _get(url, path) == first
+    assert daemon.counters()["http_cache_hits_total"] > hits_before
+
+
+def test_query_endpoint_rejects_bad_queries(daemon_url):
+    url, _ = daemon_url
+    for path in ("/query?table=nope", "/query?columns=bogus",
+                 "/query?limit=0", "/query?sort=-bogus",
+                 "/query?format=xml", "/query?filter=cores%3E%3E1"):
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(url, path)
+        assert ei.value.code == 400, path
+        err = json.loads(ei.value.read())
+        assert err["kind"] == "error"
+    # unknown column error carries the vocabulary
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _get(url, "/query?columns=bogus")
+    msg = json.loads(ei.value.read())["error"]["message"]
+    assert "norm_load" in msg
+
+
+def test_view_passthrough_query_params(daemon_url):
+    url, _ = daemon_url
+    # format passthrough: the same canned view as machine-readable rows
+    obj = json.loads(_get(url, "/view/top?n=4&format=json"))
+    assert len(obj["query_result"]["rows"]) == 4
+    # filter passthrough narrows the text view
+    text = _get(url, "/view/user?user=va67890&filter=norm_load%3E1e9") \
+        .decode()
+    assert "Nodes used: 0" in text
+
+
 def test_errors_are_wire_envelopes(daemon_url):
     url, _ = daemon_url
     with pytest.raises(urllib.error.HTTPError) as ei:

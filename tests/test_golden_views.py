@@ -1,0 +1,173 @@
+"""Golden tests: default (flagless) view output is byte-identical to the
+pre-engine fixtures in tests/golden/, locally and via --source remote —
+the api_redesign acceptance bar — plus the CLI's query-flag surface."""
+import json
+import os
+
+import pytest
+
+from repro.core import cli
+from repro.daemon import LLloadDaemon, serve_background
+from repro.monitor import build_source
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden")
+
+CASES = [
+    ("user_default.txt", []),
+    ("user_gpu.txt", ["-g", "--user", "va67890"]),
+    ("top5.txt", ["-t", "5"]),
+    ("all_admin_gpu.txt", ["--all", "-g", "--user", "admin"]),
+    ("nodes.txt", ["-n", "c-1-1-1"]),
+]
+
+
+def _golden(name: str) -> str:
+    with open(os.path.join(GOLDEN, name)) as f:
+        return f.read()
+
+
+@pytest.fixture(scope="module")
+def daemon_url():
+    daemon = LLloadDaemon(build_source("sim"), ttl_s=3600.0)
+    server, thread = serve_background(daemon)
+    host, port = server.server_address[:2]
+    yield f"http://{host}:{port}"
+    server.shutdown()
+    server.server_close()
+    daemon.close()
+    thread.join(timeout=5)
+
+
+@pytest.mark.parametrize("fixture,argv", CASES,
+                         ids=[c[0].split(".")[0] for c in CASES])
+def test_default_views_byte_identical_local(fixture, argv, capsys):
+    assert cli.main(["--source", "sim"] + argv) == 0
+    assert capsys.readouterr().out == _golden(fixture)
+
+
+@pytest.mark.parametrize("fixture,argv",
+                         [c for c in CASES if "--all" not in c[1]],
+                         ids=[c[0].split(".")[0] for c in CASES
+                              if "--all" not in c[1]])
+def test_default_views_byte_identical_remote(fixture, argv, capsys,
+                                             daemon_url):
+    assert cli.main(["--source", "remote", "--url", daemon_url]
+                    + argv) == 0
+    assert capsys.readouterr().out == _golden(fixture)
+
+
+def test_view_flags_reproduce_top_view(capsys):
+    """The -t view is reproducible from raw query flags (acceptance)."""
+    assert cli.main(["--source", "sim", "-t", "5", "--format", "json"]) == 0
+    via_view = capsys.readouterr().out
+    assert cli.main(["--source", "sim", "--table", "nodes",
+                     "--sort", "-norm_load", "--limit", "5",
+                     "--format", "json"]) == 0
+    via_table = capsys.readouterr().out
+    a = json.loads(via_view)["query_result"]
+    b = json.loads(via_table)["query_result"]
+    assert a["rows"] == b["rows"] and a["columns"] == b["columns"]
+
+
+@pytest.mark.parametrize("fmt", ["json", "table", "csv"])
+def test_remote_output_identical_to_local(capsys, daemon_url, fmt):
+    args = ["--table", "nodes", "--filter", "gpus>0",
+            "--columns", "host,user,gpu_load", "--sort", "-gpu_load",
+            "--format", fmt]
+    assert cli.main(["--source", "sim"] + args) == 0
+    local = capsys.readouterr().out
+    assert cli.main(["--source", "remote", "--url", daemon_url]
+                    + args) == 0
+    remote = capsys.readouterr().out
+    assert local == remote
+
+
+def test_remote_nodes_view_keeps_unknown_host_exit_code(capsys,
+                                                        daemon_url):
+    """-n is never forwarded: the all-hosts-unknown exit-1 contract
+    must hold against a daemon too."""
+    assert cli.main(["--source", "remote", "--url", daemon_url,
+                     "-n", "nope", "--format", "json"]) == 1
+    assert cli.main(["--source", "remote", "--url", daemon_url,
+                     "-n", "c-1-1-1", "--filter", "gpus>=0"]) == 0
+    assert "c-1-1-1" in capsys.readouterr().out
+
+
+def test_watch_frames_accept_query_flags(capsys):
+    assert cli.main(["--watch", "--interval", "0.01", "--frames", "2",
+                     "--source", "sim", "-q", "-t", "3",
+                     "--format", "json"]) == 0
+    out = capsys.readouterr().out
+    frames = [ln for ln in out.splitlines()
+              if ln.startswith('{"v":1,"kind":"query_result"')]
+    assert len(frames) == 2
+    assert len(json.loads(frames[0])["query_result"]["rows"]) == 3
+    # a machine-format frame's bytes match one-shot output: no blank
+    # separator line from newline doubling
+    assert "" not in out.splitlines()
+
+
+def test_tsv_rejects_query_flags(capsys):
+    assert cli.main(["--source", "sim", "--tsv",
+                     "--filter", "gpus>0"]) == 1
+    assert "--tsv" in capsys.readouterr().err
+
+
+def test_watch_filter_narrows_text_view(capsys):
+    assert cli.main(["--watch", "--interval", "0.01", "--frames", "1",
+                     "--source", "sim", "-q", "--user", "cd67890",
+                     "--filter", "norm_load>100"]) == 0
+    out = capsys.readouterr().out
+    assert "Nodes used: 0" in out
+
+
+def test_filtered_out_host_is_not_reported_unknown(capsys):
+    """Regression: -n with a --filter that excludes an existing host
+    must omit it, not claim 'no such host in this snapshot'."""
+    assert cli.main(["--source", "sim", "-n", "c-1-1-1",
+                     "--filter", "cores>10000"]) == 0
+    out = capsys.readouterr().out
+    assert "Unknown node(s)" not in out
+    assert cli.main(["--source", "sim", "-n", "c-1-1-1,nope"]) == 0
+    assert "Unknown node(s): nope" in capsys.readouterr().out
+
+
+def test_group_by_upgrades_text_to_table_renderer(capsys):
+    """Regression: --group-by on a text view was computed then dropped."""
+    assert cli.main(["--source", "sim", "--all", "--user", "admin",
+                     "--group-by", "user"]) == 0
+    out = capsys.readouterr().out
+    assert "-- user = " in out and "rows)" in out
+
+
+def test_unknown_column_exits_1_with_vocabulary(capsys):
+    assert cli.main(["--source", "sim", "--columns", "host,bogus"]) == 1
+    err = capsys.readouterr().err
+    assert "bogus" in err and "norm_load" in err and "host" in err
+    assert cli.main(["--source", "sim", "--sort", "-bogus"]) == 1
+    assert "bogus" in capsys.readouterr().err
+
+
+def test_limit_zero_rejected_like_other_nonpositive_flags(capsys):
+    with pytest.raises(SystemExit) as ei:
+        cli.main(["--source", "sim", "--limit", "0"])
+    assert ei.value.code == 2
+    assert "must be > 0" in capsys.readouterr().err
+
+
+def test_bad_filter_exits_1(capsys):
+    assert cli.main(["--source", "sim", "--filter", "cores >"]) == 1
+    assert "filter" in capsys.readouterr().err
+
+
+def test_history_table_needs_daemon_locally(capsys):
+    assert cli.main(["--source", "sim", "--table", "history"]) == 1
+    assert "history" in capsys.readouterr().err
+
+
+def test_history_table_via_remote(capsys, daemon_url):
+    assert cli.main(["--source", "remote", "--url", daemon_url,
+                     "--table", "history", "--format", "json"]) == 0
+    obj = json.loads(capsys.readouterr().out)
+    tiers = {row[0] for row in obj["query_result"]["rows"]}
+    assert "raw" in tiers

@@ -1,0 +1,330 @@
+"""The unified query engine (DESIGN.md §7): expression parser, Query
+execution, renderer registry, edge cases, and CSV/TSV escaping."""
+import json
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.metrics import ClusterSnapshot, JobRecord, NodeSnapshot
+from repro.query import (Query, QueryError, ResultSet, apply_modifiers,
+                         get_renderer, parse_delimited, parse_filter,
+                         render_csv, render_tsv, run_query, top_query,
+                         user_query, view_query, vocabulary)
+
+
+def _snap():
+    nodes = {
+        "a-1": NodeSnapshot("a-1", 40, 40, 38.0, 384.0, 120.0,
+                            gpus_total=2, gpus_used=2, gpu_load=0.8,
+                            gpu_mem_total_gb=64.0, gpu_mem_used_gb=30.0),
+        "a-2": NodeSnapshot("a-2", 40, 10, 4.0, 384.0, 30.0,
+                            gpus_total=2, gpus_used=1, gpu_load=0.1,
+                            gpu_mem_total_gb=64.0, gpu_mem_used_gb=2.0),
+        "b-1": NodeSnapshot("b-1", 48, 48, 96.0, 192.0, 150.0),
+        "b-2": NodeSnapshot("b-2", 48, 0, 0.1, 192.0, 5.0),
+    }
+    jobs = [
+        JobRecord(1, "alice", "train", ["a-1"], 40, gpus_per_node=2),
+        JobRecord(2, "bob", "sweep", ["a-2", "b-1"], 10),
+        JobRecord(3, "alice", "old", ["b-1"], 4, state="PD"),
+        JobRecord(4, "carol", "nb", ["a-2"], 2, job_type="jupyter",
+                  gpu_request="gres:gpu:volta:1"),
+    ]
+    return ClusterSnapshot("test", 1000.0, nodes, jobs)
+
+
+def _empty_snap():
+    return ClusterSnapshot("empty", 0.0, {}, [])
+
+
+# ------------------------------------------------------------------- expr
+
+
+def test_filter_parses_comparisons_and_booleans():
+    vocab = vocabulary("nodes")
+    e = parse_filter("gpu_load<0.2 and gpus>0", vocab)
+    rows = run_query(_snap(), Query(table="nodes", where=e)).rows
+    assert [r["host"] for r in rows] == ["a-2"]
+
+
+def test_filter_or_not_parens():
+    vocab = vocabulary("nodes")
+    e = parse_filter("not (cores_used>0) or host == b-1", vocab)
+    rows = run_query(_snap(), Query(where=e)).rows
+    assert [r["host"] for r in rows] == ["b-1", "b-2"]
+
+
+def test_filter_glob_and_has():
+    vocab = vocabulary("nodes")
+    rows = run_query(_snap(), Query(
+        where=parse_filter('host =~ "a-*"', vocab))).rows
+    assert [r["host"] for r in rows] == ["a-1", "a-2"]
+    rows = run_query(_snap(), Query(
+        where=parse_filter("users has bob", vocab))).rows
+    assert [r["host"] for r in rows] == ["a-2", "b-1"]
+
+
+def test_filter_unknown_column_reports_vocabulary():
+    with pytest.raises(QueryError) as ei:
+        parse_filter("bogus > 1", vocabulary("nodes"))
+    msg = str(ei.value)
+    assert "bogus" in msg and "gpu_load" in msg and "host" in msg
+
+
+def test_filter_syntax_errors():
+    vocab = vocabulary("nodes")
+    for bad in ("cores >", "cores ! 3", "(cores>1", "cores>1 extra",
+                "and", "cores has"):
+        with pytest.raises(QueryError):
+            parse_filter(bad, vocab)
+
+
+def test_filter_type_mismatch_matches_nothing():
+    vocab = vocabulary("nodes")
+    e = parse_filter('cores == "forty"', vocab)
+    assert run_query(_snap(), Query(where=e)).rows == []
+
+
+def test_filter_type_mismatch_neq_is_negation_of_eq():
+    # regression: != must stay `not ==` even across a type mismatch
+    vocab = vocabulary("nodes")
+    e = parse_filter('cores != "forty"', vocab)
+    assert len(run_query(_snap(), Query(where=e)).rows) == 4
+    e = parse_filter('cores < "forty"', vocab)      # orderings: no match
+    assert run_query(_snap(), Query(where=e)).rows == []
+
+
+def test_numeric_literal_matches_string_column_as_written():
+    # regression: `users has 42` compared "42.0" against the list and
+    # could never match a numeric username; same for `host == 123`
+    vocab = vocabulary("nodes")
+    assert parse_filter("users has 42", vocab) \
+        .evaluate({"users": "42, bob"})
+    assert parse_filter("host == 123", vocab).evaluate({"host": "123"})
+    assert not parse_filter("host == 123", vocab).evaluate({"host": "12"})
+
+
+# ------------------------------------------------------------------ engine
+
+
+def test_sort_desc_and_multi_key():
+    rows = run_query(_snap(), Query(sort=("-gpus", "host"))).rows
+    assert [r["host"] for r in rows] == ["a-1", "a-2", "b-1", "b-2"]
+    rows = run_query(_snap(), Query(sort=("-norm_load",))).rows
+    assert [r["host"] for r in rows] == ["b-1", "a-1", "a-2", "b-2"]
+
+
+def test_limit_and_columns():
+    rs = run_query(_snap(), Query(columns=("host", "cpu_load"),
+                                  sort=("-cpu_load",), limit=2))
+    assert rs.columns == ["host", "cpu_load"]
+    assert [r["host"] for r in rs.rows] == ["b-1", "a-1"]
+    # rows keep the full vocabulary; renderers project onto columns
+    assert "gpu_load" in rs.rows[0]
+
+
+def test_group_by_partitions_in_first_seen_order():
+    rs = run_query(_snap(), Query(sort=("host",), group_by="user"))
+    keys = [k for k, _ in rs.groups]
+    assert keys == ["alice", "bob", ""]        # a-1, a-2/b-1, b-2 idle
+    assert [r["host"] for r in dict(rs.groups)["bob"]] == ["a-2", "b-1"]
+
+
+def test_users_table_counts_shared_nodes_for_each_owner():
+    rows = run_query(_snap(), Query(table="users")).rows
+    by_user = {r["user"]: r for r in rows}
+    # carol shares a-2 with bob; both count it
+    assert by_user["carol"]["nodes"] == 1
+    assert by_user["bob"]["nodes"] == 2
+    assert "alice" in by_user
+    assert by_user["alice"]["gpus_used"] == 2
+
+
+def test_jobs_table():
+    rows = run_query(_snap(), Query(
+        table="jobs", where=parse_filter("state == R",
+                                         vocabulary("jobs")))).rows
+    assert {r["job_id"] for r in rows} == {1, 2, 4}
+    nb = [r for r in rows if r["jobtype"] == "jupyter"][0]
+    assert nb["user"] == "carol" and nb["gpu_request"]
+
+
+def test_query_validate_rejects_bad_specs():
+    with pytest.raises(QueryError):
+        Query(table="nope").validate()
+    with pytest.raises(QueryError):
+        Query(columns=("host", "bogus")).validate()
+    with pytest.raises(QueryError):
+        Query(sort=("-bogus",)).validate()
+    with pytest.raises(QueryError):
+        Query(group_by="bogus").validate()
+    with pytest.raises(QueryError):
+        Query(limit=0).validate()
+    with pytest.raises(QueryError):
+        Query.from_params(limit="three")
+    # the descending prefix is only meaningful in --sort
+    with pytest.raises(QueryError):
+        Query.from_params(columns="-host")
+    with pytest.raises(QueryError):
+        Query.from_params(group_by="-user")
+
+
+def test_unknown_sort_column_message_lists_vocabulary():
+    with pytest.raises(QueryError) as ei:
+        Query.from_params(sort="-nope")
+    assert "norm_load" in str(ei.value) and "'nope'" in str(ei.value)
+
+
+# -------------------------------------------------------------- edge cases
+
+
+def test_empty_snapshot_every_table_and_renderer():
+    snap = _empty_snap()
+    for table in ("nodes", "users", "jobs"):
+        rs = run_query(snap, Query(table=table))
+        assert rs.rows == []
+        for fmt in ("table", "json", "csv", "tsv", "prom"):
+            out = get_renderer(fmt).render(rs)
+            assert isinstance(out, str)
+    payload = json.loads(get_renderer("json").render(
+        run_query(snap, Query())))
+    assert payload["query_result"]["rows"] == []
+
+
+def test_filter_matching_zero_rows():
+    rs = run_query(_snap(), Query(
+        where=parse_filter("cores > 1000", vocabulary("nodes"))))
+    assert rs.rows == []
+    assert "(0 rows)" in get_renderer("table").render(rs)
+
+
+def test_history_table_requires_store():
+    with pytest.raises(QueryError) as ei:
+        run_query(_snap(), Query(table="history"))
+    assert "history" in str(ei.value)
+
+
+def test_history_table_from_store():
+    from repro.daemon.store import HistoryStore
+    store = HistoryStore()
+    store.append(_snap())
+    rs = run_query(None, Query(table="history"), store=store)
+    tiers = {r["tier"] for r in rs.rows}
+    assert {"raw", "15min", "hourly"} <= tiers
+    raw = [r for r in rs.rows if r["tier"] == "raw"][0]
+    assert raw["count"] == 1 and raw["nodes_mean"] == 4.0
+
+
+# --------------------------------------------------------------- canned views
+
+
+def test_user_query_includes_shared_nodes():
+    rs = run_query(_snap(), user_query("carol"))
+    assert [r["host"] for r in rs.rows] == ["a-2"]
+    rs = run_query(_snap(), user_query("bob"))
+    assert [r["host"] for r in rs.rows] == ["a-2", "b-1"]
+
+
+def test_top_query_matches_legacy_top_loaded():
+    from repro.core.llload import LLload
+    snap = _snap()
+    legacy = LLload(snap).top_loaded(3)
+    rs = run_query(snap, top_query(3))
+    assert [r["host"] for r in rs.rows] == [t.hostname for t in legacy]
+    assert [r["norm_load"] for r in rs.rows] == \
+        [t.avg_load for t in legacy]
+
+
+def test_view_query_unknown_kind():
+    with pytest.raises(QueryError):
+        view_query("bogus")
+
+
+def test_apply_modifiers_ands_filter_and_overrides_rest():
+    q = apply_modifiers(user_query("bob"), filter="gpus > 0",
+                        sort="-cpu_load", limit=1)
+    rs = run_query(_snap(), q)
+    assert [r["host"] for r in rs.rows] == ["a-2"]   # b-1 has no gpus
+
+
+# ---------------------------------------------------- csv/tsv escaping
+
+
+def _hostile_resultset(cells):
+    rows = [{"host": h, "user": u} for h, u in cells]
+    return ResultSet(table="nodes", columns=["host", "user"], rows=rows,
+                     cluster="x", timestamp=0.0)
+
+
+def test_csv_escapes_delimiters_quotes_newlines():
+    rs = _hostile_resultset([('evil,"host"', 'a\nb'), ("plain", "u,v")])
+    out = render_csv(rs)
+    parsed = parse_delimited(out, "csv")
+    assert parsed[0] == ["host", "user"]
+    assert parsed[1] == ['evil,"host"', "a\nb"]
+    assert parsed[2] == ["plain", "u,v"]
+
+
+def test_tsv_escapes_tabs_and_newlines():
+    rs = _hostile_resultset([("h\tx", "u\r\nv")])
+    out = render_tsv(rs)
+    parsed = parse_delimited(out, "tsv")
+    assert parsed[1] == ["h\tx", "u\r\nv"]
+
+
+_cell = st.text(
+    alphabet=st.sampled_from(list('abc,"\t\n\r ;x')), max_size=8)
+
+
+@given(st.lists(st.tuples(_cell, _cell), min_size=1, max_size=6))
+def test_csv_tsv_roundtrip_property(cells):
+    for fmt, render in (("csv", render_csv), ("tsv", render_tsv)):
+        out = render(_hostile_resultset(cells))
+        parsed = parse_delimited(out, fmt)
+        assert parsed[0] == ["host", "user"]
+        assert [tuple(r) for r in parsed[1:]] == list(cells)
+
+
+def test_json_schema_is_stable():
+    rs = run_query(_snap(), Query(columns=("host", "gpus"),
+                                  sort=("host",), limit=1))
+    obj = json.loads(get_renderer("json").render(rs))
+    assert obj["v"] == 1 and obj["kind"] == "query_result"
+    qr = obj["query_result"]
+    assert qr["table"] == "nodes" and qr["cluster"] == "test"
+    assert qr["columns"] == ["host", "gpus"]
+    assert qr["rows"] == [["a-1", 2]]
+
+
+def test_prom_renderer_escapes_labels():
+    rs = _hostile_resultset([('h"x\n', "u")])
+    rs.rows[0]["cpu_load"] = 1.5
+    rs.columns = ["host", "cpu_load"]
+    out = get_renderer("prom").render(rs)
+    assert r'host="h\"x\n"' in out
+    assert "llload_query_nodes_cpu_load" in out
+
+
+def test_prom_rejects_duplicate_label_sets():
+    # two samples with identical labels are invalid exposition format
+    rs = _hostile_resultset([("h", "alice"), ("h2", "alice")])
+    rs.columns = ["user", "cpu_load"]
+    for r, load in zip(rs.rows, (1.0, 2.0)):
+        r["cpu_load"] = load
+    with pytest.raises(QueryError) as ei:
+        get_renderer("prom").render(rs)
+    assert "uniquely" in str(ei.value)
+    rs.columns = ["host", "user", "cpu_load"]     # host disambiguates
+    assert get_renderer("prom").render(rs).count("cpu_load{") == 2
+
+
+def test_every_renderer_ends_with_newline():
+    rs = run_query(_snap(), Query(limit=1))
+    for fmt in ("table", "json", "csv", "tsv", "prom"):
+        assert get_renderer(fmt).render(rs).endswith("\n"), fmt
+
+
+def test_unknown_renderer_lists_names():
+    with pytest.raises(QueryError) as ei:
+        get_renderer("xml")
+    assert "json" in str(ei.value) and "csv" in str(ei.value)

@@ -65,6 +65,38 @@ def test_report_rendering_fig6():
     assert "This report covers activity between" in text
 
 
+def test_anonymize_aliases_stable_across_sections():
+    """Regression: aliases were assigned per-section, so one real user
+    read as different pseudonyms in low_gpu vs high_cpu (and 'user01'
+    meant different people per section)."""
+    from repro.core.analysis import ReportRow, WeeklyReport
+    from repro.core.report import _anonymized
+
+    rep = WeeklyReport(
+        start=0.0, end=7 * 86400.0,
+        # alice leads low_gpu but trails high_cpu; bob only in low_cpu
+        low_gpu=[ReportRow("alice", "alice@x", 40.0),
+                 ReportRow("carol", "carol@x", 10.0)],
+        low_cpu=[ReportRow("bob", "bob@x", 30.0)],
+        high_cpu=[ReportRow("carol", "carol@x", 25.0),
+                  ReportRow("alice", "alice@x", 5.0)])
+    anon = _anonymized(rep)
+    alias = {}
+    for section in ("low_gpu", "low_cpu", "high_cpu"):
+        for real, row in zip(getattr(rep, section), getattr(anon, section)):
+            alias.setdefault(real.username, set()).add(row.username)
+            assert row.email == f"{row.username}@ll.mit.edu"
+            assert row.node_hours == real.node_hours
+    # one pseudonym per real user, one real user per pseudonym
+    assert all(len(v) == 1 for v in alias.values())
+    names = [next(iter(v)) for v in alias.values()]
+    assert len(set(names)) == len(names) == 3
+    # carol appears in two sections under one alias; alice (first seen)
+    # is user01 everywhere, even where she trails the section
+    assert anon.low_gpu[1].username == anon.high_cpu[0].username
+    assert anon.low_gpu[0].username == anon.high_cpu[1].username == "user01"
+
+
 def test_notification_email():
     rows = [_row("user01", load=30.0, cores=48, gpu_load=0.2, gpus=2)]
     rep = weekly_analysis(rows)
