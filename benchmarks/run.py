@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows (one per benchmark).
 | bus_read_{cached,uncached} | TelemetryBus snapshot-query throughput     |
 | daemon_snapshot_*        | HTTP /snapshot requests/s, cached vs collect |
 | query_{table,json}_512n  | query engine filter+sort+render (§7)         |
+| insights_{replay,incremental} | §V-B advise: streaming engine vs replay |
 | columnarize_1wk          | vectorized archive columnarization           |
 | weekly_analysis_1wk      | Fig 6 weekly node-hours aggregation          |
 | monitor_overhead         | "light-weight" claim: train loop +hooks      |
@@ -202,6 +203,52 @@ def bench_query():
         f.write("\n")
 
 
+def bench_insights():
+    """The §V-B advise surface at 512 nodes x 64 snapshots: answering
+    "what should users fix right now?" by full-history replay
+    (``characterize_snapshots``, the pre-redesign path — O(snapshots ·
+    nodes) per query) vs the incremental InsightEngine (fold the newest
+    snapshot, read the active set — O(rules · users) per query).  Emits
+    ``BENCH_insights.json`` for CI / acceptance (incremental >= 10x)."""
+    import json
+
+    from repro.core.advisor import characterize_snapshots
+    from repro.insights import InsightEngine
+
+    n_nodes, n_snaps = 512, 64
+    sim = _sim(n_nodes)
+    src = sim.as_source(name="bench", advance_s=60.0)
+    snaps = [src.snapshot() for _ in range(n_snaps)]
+
+    us_replay = _timeit(lambda: characterize_snapshots(snaps), repeat=3)
+    n_replay = len(characterize_snapshots(snaps))
+
+    engine = InsightEngine()
+    for s in snaps:
+        engine.observe(s)              # steady state: history absorbed
+
+    def incremental():
+        engine.observe(snaps[-1])
+        return engine.active()
+
+    us_inc = _timeit(incremental, repeat=3)
+    n_inc = len(incremental())
+    speedup = us_replay / max(us_inc, 1e-9)
+    _row(f"insights_replay_{n_nodes}n_{n_snaps}s", us_replay,
+         f"insights={n_replay}")
+    _row(f"insights_incremental_{n_nodes}n_{n_snaps}s", us_inc,
+         f"insights={n_inc};speedup={speedup:.1f}x")
+    with open("BENCH_insights.json", "w") as f:
+        json.dump({
+            "nodes": n_nodes,
+            "snapshots": n_snaps,
+            "replay_us_per_query": round(us_replay, 1),
+            "incremental_us_per_query": round(us_inc, 1),
+            "speedup_x": round(speedup, 2),
+        }, f, indent=2)
+        f.write("\n")
+
+
 def bench_columnarize():
     """Vectorized archive columnarization on a week-scale synthetic
     archive (the per-row loop this replaced ran ~5x slower)."""
@@ -367,6 +414,7 @@ BENCHES = [
     bench_bus_reads,
     bench_daemon,
     bench_query,
+    bench_insights,
     bench_columnarize,
     bench_weekly_analysis,
     bench_monitor_overhead,

@@ -1,31 +1,37 @@
-"""Usage characterization + remediation advice (paper §V-B).
+"""DEPRECATED shim — usage characterization moved to :mod:`repro.insights`.
 
-Reproduces the LLSC team's diagnostic playbook:
+The paper-§V-B playbook (Fig 7 low GPU duty, Fig 8 mis-submission,
+Fig 10/11 thread overload / I/O storm) now lives as registered
+:class:`~repro.insights.rules.Rule`s evaluated by the incremental
+:class:`~repro.insights.engine.InsightEngine`, and is surfaced as the
+``insights`` query table, the CLI ``--advise`` view, and the daemon's
+``GET /insights``.  This module keeps the old entry points working:
 
-  * Fig 7 — persistent low GPU duty with small GPU memory
-            -> suggest bigger batch *or* GPU overloading; recommend an NPPN
-            (tasks-per-GPU) value from load + memory headroom.
-  * Fig 8 — mis-submission: cores-per-task so large only one task fits a
-            multi-GPU node -> suggest the corrected cores request.
-  * Fig 10/11 — normalized load > high threshold: thread oversubscription;
-            extreme load (>> cores) flags the file-I/O-storm pathology the
-            paper traced to concurrent write() calls.
+  * :func:`characterize_user` / :func:`characterize_all` — single-
+    snapshot rule evaluation, returning the legacy :class:`Advice`.
+  * :func:`characterize_snapshots` — the old **full-history replay**
+    (re-characterizes every snapshot per call).  Prefer
+    :func:`repro.insights.evaluate_snapshots`, or a long-lived engine
+    for streams; ``benchmarks.run.bench_insights`` measures the gap.
+  * :func:`recommend_nppn` — re-exported from
+    :mod:`repro.insights.rules` (the canonical home).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, List, Optional, Sequence
+from typing import Iterable, List, Optional
 
-from repro.core.analysis import HIGH_THRESHOLD, LOW_THRESHOLD
-from repro.core.metrics import ClusterSnapshot, NodeSnapshot
+from repro.insights.records import Insight
+from repro.insights.rules import (IO_STORM_FACTOR, RuleContext, contexts,
+                                  default_rules, recommend_nppn)
 
-# normalized load beyond which we suspect an I/O storm rather than plain
-# thread oversubscription (Fig 11's nodes showed ~720/48 = 15x)
-IO_STORM_FACTOR = 5.0
+__all__ = ["Advice", "IO_STORM_FACTOR", "characterize_all",
+           "characterize_snapshots", "characterize_user", "recommend_nppn"]
 
 
 @dataclasses.dataclass
 class Advice:
+    """Legacy advice record (predates :class:`repro.insights.Insight`)."""
     kind: str                  # low_gpu | missubmission | overload | io_storm
     username: str
     hostnames: List[str]
@@ -35,103 +41,45 @@ class Advice:
     evidence: dict = dataclasses.field(default_factory=dict)
 
 
-def recommend_nppn(gpu_load: float, gpu_mem_used_gb: float,
-                   gpu_mem_total_gb: float, *, target_load: float = 0.9,
-                   mem_headroom: float = 0.9, max_nppn: int = 8) -> int:
-    """The paper's overloading arithmetic: pack tasks-per-GPU until either
-    the summed duty cycle reaches ~target or GPU memory would overflow."""
-    if gpu_load <= 0:
-        return 1
-    by_load = int(target_load / max(gpu_load, 1e-3))
-    per_task_mem = max(gpu_mem_used_gb, 1e-3)
-    by_mem = int((gpu_mem_total_gb * mem_headroom) / per_task_mem)
-    n = max(1, min(by_load, by_mem, max_nppn))
-    # round down to the NPPN values LLsub exposes: 1, 2, 4, 8
-    for v in (8, 4, 2, 1):
-        if n >= v:
-            return v
-    return 1
+def _advice_from(ins: Insight) -> Advice:
+    return Advice(ins.kind, ins.username, list(ins.hostnames), ins.message,
+                  suggested_nppn=ins.suggested_nppn,
+                  suggested_cores_per_task=ins.suggested_cores_per_task,
+                  evidence=dict(ins.evidence))
 
 
-def characterize_user(snap: ClusterSnapshot, username: str) -> List[Advice]:
+def characterize_user(snap, username: str) -> List[Advice]:
+    """One user's diagnoses from one snapshot, via the registered rules
+    (rule registration order, matching the legacy output order)."""
     hosts = snap.nodes_by_user().get(username, [])
-    nodes = [snap.nodes[h] for h in hosts]
-    out: List[Advice] = []
+    nodes = [snap.nodes[h] for h in hosts if h in snap.nodes]
     if not nodes:
-        return out
-
-    gpu_nodes = [n for n in nodes if n.gpus_total > 0]
-
-    # ---- Fig 7: low GPU duty -------------------------------------------
-    low_gpu = [n for n in gpu_nodes if 0 < n.gpu_load < LOW_THRESHOLD
-               and n.gpus_used > 0]
-    if low_gpu:
-        mean_load = sum(n.gpu_load for n in low_gpu) / len(low_gpu)
-        mem_used = max(n.gpu_mem_used_gb / max(n.gpus_used, 1)
-                       for n in low_gpu)
-        mem_total = low_gpu[0].gpu_mem_total_gb / max(low_gpu[0].gpus_total, 1)
-        nppn = recommend_nppn(mean_load, mem_used, mem_total)
-        msg = (f"GPU load {mean_load:.2f} < {LOW_THRESHOLD} on "
-               f"{len(low_gpu)} node(s); GPU memory {mem_used:.0f}GB of "
-               f"{mem_total:.0f}GB. Consider a larger batch size, or GPU "
-               f"overloading with NPPN={nppn} (LLsub triples mode).")
-        out.append(Advice("low_gpu", username, [n.hostname for n in low_gpu],
-                          msg, suggested_nppn=nppn,
-                          evidence={"gpu_load": mean_load,
-                                    "gpu_mem_used_gb": mem_used}))
-
-    # ---- Fig 8: mis-submission -----------------------------------------
-    missub = [n for n in gpu_nodes
-              if n.gpus_total >= 2 and n.gpus_used < n.gpus_total
-              and n.cores_free < n.cores_total // 4
-              and n.norm_load < LOW_THRESHOLD]
-    if missub:
-        n0 = missub[0]
-        fair_cores = n0.cores_total // n0.gpus_total
-        msg = (f"{len(missub)} node(s) have all cores allocated but only "
-               f"{n0.gpus_used}/{n0.gpus_total} GPUs in use with CPU load "
-               f"{n0.norm_load:.2f}. The cores-per-task request is too "
-               f"large: request {fair_cores} cores and 1 GPU per task so "
-               f"{n0.gpus_total} tasks share each node.")
-        out.append(Advice("missubmission", username,
-                          [n.hostname for n in missub], msg,
-                          suggested_cores_per_task=fair_cores,
-                          evidence={"norm_load": n0.norm_load}))
-
-    # ---- Fig 10/11: overload / IO storm --------------------------------
-    over = [n for n in nodes if n.norm_load > HIGH_THRESHOLD]
-    if over:
-        worst = max(over, key=lambda n: n.norm_load)
-        if worst.norm_load > IO_STORM_FACTOR:
-            msg = (f"Extreme CPU load {worst.load:.0f} on "
-                   f"{worst.cores_total} cores ({worst.norm_load:.1f}x). "
-                   "Beyond thread oversubscription this pattern matches a "
-                   "concurrent file-I/O storm (e.g. write() in a hot loop) "
-                   "overwhelming the filesystem client; reduce concurrent "
-                   "file I/O and cap worker threads.")
-            kind = "io_storm"
-        else:
-            msg = (f"CPU load {worst.norm_load:.2f}x cores on "
-                   f"{len(over)} node(s): tasks spawn more threads than "
-                   "cores (e.g. Python multiprocessing defaults). Set "
-                   "thread counts to cores/tasks-per-node.")
-            kind = "overload"
-        out.append(Advice(kind, username, [n.hostname for n in over], msg,
-                          evidence={"max_norm_load": worst.norm_load}))
-    return out
-
-
-def characterize_all(snap: ClusterSnapshot) -> List[Advice]:
+        return []
+    ctx = RuleContext(snap, username, nodes,
+                      [n for n in nodes if n.gpus_total > 0])
     out = []
-    for user in sorted(snap.nodes_by_user()):
-        out.extend(characterize_user(snap, user))
+    for rule in default_rules():
+        ins = rule.evaluate(ctx)
+        if ins is not None:
+            out.append(_advice_from(ins))
     return out
 
 
-def characterize_snapshots(snaps: Iterable[ClusterSnapshot],
+def characterize_all(snap) -> List[Advice]:
+    out = []
+    for ctx in contexts(snap):
+        for rule in default_rules():
+            ins = rule.evaluate(ctx)
+            if ins is not None:
+                out.append(_advice_from(ins))
+    return out
+
+
+def characterize_snapshots(snaps: Iterable,
                            username: Optional[str] = None) -> List[Advice]:
-    """Characterize from a snapshot *history* (any MetricSource replay or
-    the bus ring buffer) instead of a single point in time.
+    """Characterize from a snapshot *history* by full replay — the old
+    O(snapshots · nodes)-per-query path, kept as a shim (and as the
+    benchmark baseline the incremental engine is measured against).
 
     Advice comes from the latest snapshot; each item gains a
     ``persistence`` evidence field — the fraction of snapshots in which

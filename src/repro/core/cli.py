@@ -2,8 +2,8 @@
 
 Usage (mirrors the paper's flags, plus the streaming extensions):
 
-    python -m repro.core.cli [-g] [--all] [-t N] [-n HOST,HOST] [--tsv] [-q]
-                             [--user USER]
+    python -m repro.core.cli [-g] [--all] [-t N] [-n HOST,HOST] [--advise]
+                             [--tsv] [-q] [--user USER]
                              [--filter EXPR] [--sort SPEC] [--columns LIST]
                              [--limit N] [--format FMT] [--table TABLE]
                              [--group-by COL]
@@ -28,8 +28,15 @@ Every view is a canned :class:`repro.query.Query` (DESIGN.md §7):
 ``--limit`` override it, and ``--format table|json|csv|tsv|prom`` swaps
 the paper's text layout for a machine-readable renderer — one-shot, in
 ``--watch`` frames, and (``--source remote``) answered server-side by
-the daemon's ``/query`` endpoint.  ``--table nodes|users|jobs|history``
+the daemon's ``/query`` endpoint.  ``--table nodes|users|jobs|history|insights``
 skips the view scoping and queries a table directly.
+
+``--advise`` renders the §V-B insights view (DESIGN.md §8): every
+active diagnosis from the pluggable rule registry, one-shot or
+streaming under ``--watch`` (where the insight engine accumulates
+persistence/hysteresis across frames); against ``--source remote`` it
+is answered server-side by the daemon's ``GET /insights`` from the
+daemon's full observation history.
 """
 from __future__ import annotations
 
@@ -56,7 +63,10 @@ def _hosts_from(args) -> list:
 
 
 def _view_kind(args) -> str:
-    """Flag precedence, matching the legacy CLI: -t wins over -n."""
+    """Flag precedence, matching the legacy CLI: --advise is an explicit
+    mode switch, then -t wins over -n."""
+    if getattr(args, "advise", False):
+        return "advise"
     if args.t is not None:
         return "top"
     if args.n is not None:
@@ -64,6 +74,14 @@ def _view_kind(args) -> str:
     if args.all_users:
         return "all"
     return "user"
+
+
+def _wants_insights(args) -> bool:
+    """Does this invocation need an InsightEngine (the advise view or a
+    direct insights-table query)?"""
+    return (getattr(args, "table", None) == "insights"
+            or (not getattr(args, "table", None)
+                and _view_kind(args) == "advise"))
 
 
 def has_query_flags(args) -> bool:
@@ -91,19 +109,23 @@ def build_view_query(args):
     return q, kind, fmt
 
 
-def render_view(snap, args, prebuilt=None) -> str:
+def render_view(snap, args, prebuilt=None, insights=None) -> str:
     """Render the view selected by the parsed flags (shared by the
     one-shot and --watch paths).  Machine formats end with a newline;
     the legacy text layouts do not (the caller prints them).
     ``prebuilt`` is a ``build_view_query(args)`` result to reuse, so
-    watch frames don't re-parse the same filter/sort strings."""
+    watch frames don't re-parse the same filter/sort strings;
+    ``insights`` is the InsightEngine backing the advise view /
+    insights table."""
     if args.tsv:
         return snap.to_tsv()
     q, kind, fmt = prebuilt if prebuilt is not None \
         else build_view_query(args)
-    rs = run_query(snap, q)
+    rs = run_query(snap, q, insights=insights)
     if fmt != "text":
         return get_renderer(fmt).render(rs)
+    if kind == "advise":
+        return formatting.advise_view_text(snap, rs.rows)
     if kind == "top":
         return formatting.top_view_text(rs.rows, q.limit or args.t or 10)
     if kind == "nodes":
@@ -155,8 +177,9 @@ _make_source = make_source_from_args       # back-compat alias
 
 
 def _forward_remote(args, url: str, kind: str) -> int:
-    """Answer one query server-side: GET the daemon's /query (table mode)
-    or /view/* with the query params passed through verbatim."""
+    """Answer one query server-side: GET the daemon's /query (table
+    mode), /insights (advise view), or /view/* with the query params
+    passed through verbatim."""
     from repro.daemon.client import RemoteClient, RemoteError
     client = RemoteClient(url)
     fmt = resolve_format(args.format, args.columns, args.group_by)
@@ -168,6 +191,8 @@ def _forward_remote(args, url: str, kind: str) -> int:
             body = client.query(table=args.table,
                                 format=("table" if fmt == "text" else fmt),
                                 **params)
+        elif kind == "advise":
+            body = client.insights(format=fmt, **params)
         elif kind == "user":
             body = client.view("user", user=args.user,
                                gpu=(1 if args.gpu else None),
@@ -215,6 +240,9 @@ def main(argv=None) -> int:
                     help="top-N nodes by CPU load")
     ap.add_argument("-n", type=str, default=None, metavar="NODELIST",
                     help="comma-separated node detail")
+    ap.add_argument("--advise", action="store_true",
+                    help="show active insights (§V-B usage "
+                         "characterization) for all users")
     ap.add_argument("--tsv", action="store_true",
                     help="tab-separated output (archive format)")
     ap.add_argument("-q", action="store_true", help="quiet (no banner)")
@@ -234,7 +262,8 @@ def main(argv=None) -> int:
                     choices=["text"] + renderer_names(),
                     help="output renderer (text = the paper's layout)")
     ap.add_argument("--table", default=None,
-                    choices=["nodes", "users", "jobs", "history"],
+                    choices=["nodes", "users", "jobs", "history",
+                             "insights"],
                     help="query a table directly instead of a view")
     ap.add_argument("--group-by", default=None, dest="group_by",
                     metavar="COL", help="partition rows by a column "
@@ -274,10 +303,11 @@ def main(argv=None) -> int:
 
     prebuilt = None
     try:
-        if args.tsv and has_query_flags(args):
+        if args.tsv and (has_query_flags(args) or args.advise):
             raise QueryError(
                 "--tsv is the raw archive format and ignores query "
-                "flags; use --format tsv for filtered/sorted output")
+                "flags and --advise; use --format tsv for filtered/"
+                "sorted output")
         if not args.tsv:
             prebuilt = build_view_query(args)   # validate flags up front
     except QueryError as exc:
@@ -290,28 +320,41 @@ def main(argv=None) -> int:
     # "all" has no endpoint and "nodes" owes the legacy all-hosts-unknown
     # exit-1 contract, which a forwarded body can't carry — both render
     # locally from the fetched snapshot (byte-identical either way)
+    # "advise" forwards even flagless: the daemon's insight engine has
+    # streamed every collection, so it answers with real persistence /
+    # first-seen state a one-shot local evaluation cannot have
     if (args.source == "remote" and not args.watch and not args.tsv
-            and has_query_flags(args)):
+            and (has_query_flags(args) or _wants_insights(args))):
         urls = [u.strip() for u in (args.url or "").split(",") if u.strip()]
         kind = "table" if args.table else _view_kind(args)
-        if len(urls) == 1 and kind in ("table", "user", "top"):
+        if len(urls) == 1 and kind in ("table", "user", "top", "advise"):
             return _forward_remote(args, urls[0], kind)
 
     source = make_source_from_args(args)
+
+    # the advise view / insights table reads an InsightEngine: one-shot
+    # it observes the single snapshot; under --watch it subscribes to the
+    # bus and accumulates persistence/hysteresis across frames
+    engine = None
+    if _wants_insights(args):
+        from repro.insights import InsightEngine
+        engine = InsightEngine()
 
     try:
         if args.watch:
             bus = TelemetryBus(ttl_s=3.0 * args.interval)
             bus.register(source)
+            if engine is not None:
+                bus.subscribe(engine.subscriber(source.name))
             if prebuilt is not None and prebuilt[2] != "text":
                 # machine renderers end with a newline and the watch
                 # loop adds its own; drop ours so a frame's bytes match
                 # the one-shot output exactly (no blank separator line)
                 def frame(snap):
-                    return render_view(snap, args, prebuilt)[:-1]
+                    return render_view(snap, args, prebuilt, engine)[:-1]
             else:
                 def frame(snap):
-                    return render_view(snap, args, prebuilt)
+                    return render_view(snap, args, prebuilt, engine)
             ws = watch(bus, frame,
                        source_name=source.name, interval_s=args.interval,
                        max_frames=args.frames)
@@ -324,9 +367,11 @@ def main(argv=None) -> int:
             return 0
 
         snap = source.snapshot()
+        if engine is not None:
+            engine.observe(snap)
         # one-shot output can land in a closed pager (`LLload ... | head`):
         # a BrokenPipeError is a normal exit, not a traceback
-        out = render_view(snap, args, prebuilt)
+        out = render_view(snap, args, prebuilt, engine)
         machine = bool(args.tsv or args.table
                        or resolve_format(args.format, args.columns,
                                          args.group_by) != "text")
@@ -336,8 +381,10 @@ def main(argv=None) -> int:
             print(out)
         sys.stdout.flush()
         # legacy -n contract: exit 1 when every requested host is unknown
+        # (only when -n actually selected the view: -t, --advise and
+        # --table all take precedence and never consult the host list)
         if (args.n is not None and args.t is None and args.table is None
-                and not args.tsv):
+                and not args.advise and not args.tsv):
             hosts = _hosts_from(args)
             if hosts and all(h not in snap.nodes for h in hosts):
                 return 1

@@ -238,6 +238,32 @@ def node_detail_text(snap: ClusterSnapshot, rows: Sequence[dict],
     return "\n".join(lines)
 
 
+_SEVERITY_TAGS = {"info": "INFO", "warn": "WARN", "critical": "CRIT"}
+
+
+def advise_view_text(snap: ClusterSnapshot, rows: Sequence[dict]) -> str:
+    """§V-B advise view from engine rows (the advise canned query's
+    output): one tagged summary line plus the remediation message per
+    active insight, most severe first."""
+    lines = [f"Cluster name: {snap.cluster}",
+             f"Active insights: {len(rows)}"]
+    if rows:
+        lines.append("")
+    for r in rows:
+        tag = _SEVERITY_TAGS.get(str(r["severity"]), "????")
+        head = (f"[{tag}] {r['kind']}: user {r['user']}, "
+                f"{r['nodes']} node(s)")
+        if r.get("nppn"):
+            head += f", NPPN->{r['nppn']}"
+        if r.get("cores_per_task"):
+            head += f", cores/task->{r['cores_per_task']}"
+        head += (f", persist {r['persistence']:.0%}, "
+                 f"since t={r['first_seen']:.0f}")
+        lines.append(head)
+        lines.append(f"  {r['message']}")
+    return "\n".join(lines)
+
+
 def all_view_text(snap: ClusterSnapshot, rows: Sequence[dict],
                   requesting_user: str, privileged: bool,
                   gpu: bool = False) -> str:

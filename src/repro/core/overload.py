@@ -11,15 +11,36 @@ measured MFU-proxy from the JAX collector; packing happens either by
 co-scheduling micro-jobs on a slice (training) or by admitting more
 concurrent request streams into the batcher (serving).  The *policy* below
 is identical to the paper's.
+
+Since the Insights redesign (DESIGN.md §8) the controller is also a
+*rule consumer*: :meth:`OverloadController.consume` turns an active
+``low_gpu`` :class:`~repro.insights.records.Insight` — the Fig-7 rule's
+output — into a device observation and a next-NPPN decision, closing
+the loop from diagnosis to overloading action.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional
 
-from repro.core.advisor import recommend_nppn
+from repro.insights.rules import recommend_nppn
 
 NPPN_LEVELS = (1, 2, 4, 8)
+
+
+def nearest_level(nppn: int, *, max_nppn: int = 8) -> int:
+    """Clamp an arbitrary tasks-per-GPU count onto the LLsub levels:
+    the largest level <= ``nppn`` (and <= ``max_nppn``), floor 1.
+
+    Jobs arrive at NPPN values LLsub never minted (3 from a manual
+    launch, 16 from another site's config); ``NPPN_LEVELS.index()`` on
+    raw input raised ValueError for every one of them.
+    """
+    n = min(max(nppn, 1), max(max_nppn, 1))
+    for v in reversed(NPPN_LEVELS):
+        if v <= n:
+            return v
+    return NPPN_LEVELS[0]
 
 
 @dataclasses.dataclass
@@ -58,20 +79,42 @@ class OverloadController:
     def observe(self, obs: DeviceObservation):
         self.history.append(obs)
 
+    def consume(self, insight, current_nppn: int = 1) -> OverloadDecision:
+        """Consume an insight (rule-engine output): a ``low_gpu`` insight
+        carries measured duty and per-task memory in its evidence, which
+        becomes a device observation feeding :meth:`decide`; any other
+        kind leaves the level unchanged."""
+        if getattr(insight, "kind", None) != "low_gpu":
+            return OverloadDecision(
+                nearest_level(current_nppn, max_nppn=self.max_nppn),
+                f"insight kind {getattr(insight, 'kind', None)!r} does not "
+                "drive overloading")
+        ev = insight.evidence
+        self.observe(DeviceObservation(
+            duty_cycle=float(ev.get("gpu_load", 0.0)),
+            mem_used_gb=float(ev.get("gpu_mem_used_gb", 0.0)),
+            mem_total_gb=float(ev.get("gpu_mem_total_gb", 0.0))))
+        return self.decide(current_nppn)
+
     def decide(self, current_nppn: int) -> OverloadDecision:
+        # clamp off-ladder inputs (3, 16, ...) onto the nearest level so
+        # stepping logic never indexes NPPN_LEVELS with a foreign value
+        level = nearest_level(current_nppn, max_nppn=self.max_nppn)
         if not self.history:
-            return OverloadDecision(current_nppn, "no observations")
+            return OverloadDecision(level, "no observations")
         window = self.history[-8:]
         duty = sum(o.duty_cycle for o in window) / len(window)
         obs = window[-1]
         per_task_duty = duty / max(current_nppn, 1)
         per_task_mem = obs.mem_used_gb / max(current_nppn, 1)
 
-        if duty >= self.saturate_load and current_nppn > 1:
-            idx = NPPN_LEVELS.index(current_nppn)
+        if duty >= self.saturate_load and level > 1:
+            if level < current_nppn:
+                nxt = level        # clamping already stepped down (3 -> 2)
+            else:
+                nxt = NPPN_LEVELS[max(NPPN_LEVELS.index(level) - 1, 0)]
             return OverloadDecision(
-                NPPN_LEVELS[max(idx - 1, 0)],
-                f"device saturated (duty {duty:.2f}); backing off")
+                nxt, f"device saturated (duty {duty:.2f}); backing off")
 
         best = recommend_nppn(per_task_duty, per_task_mem, obs.mem_total_gb,
                               target_load=self.target_load,
@@ -79,14 +122,14 @@ class OverloadController:
                               max_nppn=self.max_nppn)
         if best > current_nppn:
             # step one level at a time (2 -> 4 -> 8), as deployed at LLSC
-            idx = NPPN_LEVELS.index(current_nppn)
+            idx = NPPN_LEVELS.index(level)
             nxt = NPPN_LEVELS[min(idx + 1, len(NPPN_LEVELS) - 1)]
             return OverloadDecision(
                 nxt, f"duty/task {per_task_duty:.2f}, mem/task "
                      f"{per_task_mem:.1f}GB -> headroom for NPPN={best}")
         if best < current_nppn:
             return OverloadDecision(best, "memory or load headroom shrank")
-        return OverloadDecision(current_nppn, "at recommended level")
+        return OverloadDecision(level, "at recommended level")
 
 
 def packed_throughput_model(per_task_duty: float, nppn: int,

@@ -89,6 +89,12 @@ class RemoteClient:
         unified query engine (DESIGN.md §7), answered server-side."""
         return self._get("/query", params).decode("utf-8")
 
+    def insights(self, **params) -> str:
+        """GET /insights with the params passed through verbatim — the
+        advise view (DESIGN.md §8), answered from the daemon's
+        streaming insight engine."""
+        return self._get("/insights", params).decode("utf-8")
+
 
 class RemoteSource:
     """A daemon as a :class:`MetricSource` — collection is a GET.

@@ -63,12 +63,18 @@ class _Writer:
 
 def render_prometheus(snap: ClusterSnapshot, *,
                       counters: Optional[Dict[str, float]] = None,
+                      insights: Optional[List] = None,
                       prefix: str = "llload_") -> str:
-    """One scrape body: snapshot gauges + optional daemon counters.
+    """One scrape body: snapshot gauges + optional daemon counters and
+    active-insight gauges.
 
     ``counters`` maps ``name`` or ``name{label="v"}``-style keys (already
     flattened by the caller) to monotonic values; they are emitted as
-    ``counter`` type under ``<prefix>daemon_<name>``.
+    ``counter`` type under ``<prefix>daemon_<name>``.  ``insights`` is
+    the active Insight list (DESIGN.md §8): counts are exposed per
+    (kind, severity) as ``<prefix>insights_active`` plus an
+    ``<prefix>active_insights`` total, so a scraper can alert on
+    ``llload_insights_active{severity="critical"} > 0``.
     """
     w = _Writer()
     cluster = snap.cluster
@@ -104,6 +110,23 @@ def render_prometheus(snap: ClusterSnapshot, *,
             duty = sum(n.gpu_load for n in gpu_nodes) / len(gpu_nodes)
             w.sample(f"{prefix}user_gpu_duty",
                      [("cluster", cluster), ("user", user)], duty)
+
+    if insights is not None:
+        name = f"{prefix}insights_active"
+        w.header(name, "active insights by rule kind and severity",
+                 "gauge")
+        counts: Dict[Tuple[str, str], int] = {}
+        for ins in insights:
+            key = (ins.kind, str(ins.severity))
+            counts[key] = counts.get(key, 0) + 1
+        for kind, sev in sorted(counts):
+            w.sample(name, [("cluster", cluster), ("kind", kind),
+                            ("severity", sev)], counts[(kind, sev)])
+        # no _total suffix: that is reserved for counters, and this is a
+        # gauge of the currently-active set (rate() would be meaningless)
+        total = f"{prefix}active_insights"
+        w.header(total, "active insights (all kinds)", "gauge")
+        w.sample(total, [("cluster", cluster)], sum(counts.values()))
 
     # counter keys may carry flattened labels: 'requests_total{endpoint="/x"}'
     emitted = set()

@@ -19,6 +19,10 @@ Endpoints (all GET):
     /view/nodes?hosts=A,B  rendered node detail (text)
       (all /view/* accept &filter=&sort=&columns=&limit=&format= —
        the CLI's query flags pass through verbatim)
+    /insights            the §V-B advise view (DESIGN.md §8), answered
+                         from the daemon's incremental InsightEngine —
+                         text by default, any registry format via
+                         &format=, query params pass through verbatim
     /trend?window=S      downsampled series from the history store
     /weekly              weekly low/over-utilization report from tiers
     /healthz             liveness + wire version
@@ -42,10 +46,12 @@ from typing import Dict, Optional, Tuple
 
 from repro.core import formatting
 from repro.daemon import promtext, protocol
-from repro.daemon.store import HistoryStore
+from repro.daemon.store import HistoryStore, as_snapshots
+from repro.insights import InsightEngine
 from repro.monitor import TelemetryBus, build_source
-from repro.query import (Query, QueryError, apply_modifiers, get_renderer,
-                         resolve_format, run_query, view_query)
+from repro.query import (Query, QueryError, advise_query, apply_modifiers,
+                         get_renderer, resolve_format, run_query,
+                         view_query)
 
 JSON_CT = "application/json; charset=utf-8"
 TEXT_CT = "text/plain; charset=utf-8"
@@ -53,14 +59,14 @@ TEXT_CT = "text/plain; charset=utf-8"
 # endpoints whose bytes may be reused within a TTL window (everything
 # derived purely from the current snapshot / store state)
 _CACHEABLE = ("/snapshot", "/query", "/view/", "/metrics", "/trend",
-              "/weekly")
+              "/weekly", "/insights")
 
 # the fixed label vocabulary for the per-endpoint request counter:
 # arbitrary client paths must not mint new Prometheus label values (label
 # injection + unbounded counter growth), so anything else counts as other
 _KNOWN_ENDPOINTS = frozenset([
     "/snapshot", "/query", "/view/user", "/view/top", "/view/nodes",
-    "/trend", "/weekly", "/healthz", "/stats", "/metrics",
+    "/insights", "/trend", "/weekly", "/healthz", "/stats", "/metrics",
 ])
 
 
@@ -84,6 +90,10 @@ class LLloadDaemon:
         self.source = source
         self.store = store if store is not None else HistoryStore()
         self.bus.subscribe(self.store.subscriber(source.name))
+        # the insight engine streams alongside the history store: every
+        # collection is folded once, so /insights reads are O(active)
+        self.insights = InsightEngine()
+        self.bus.subscribe(self.insights.subscriber(source.name))
         self.privileged = privileged if privileged is not None else set()
         self.ttl_s = ttl_s
         self._started = time.monotonic()
@@ -98,6 +108,18 @@ class LLloadDaemon:
     # ----------------------------------------------------------- lifecycle
     def start_sampler(self, interval_s: Optional[float] = None):
         self.bus.start(interval_s)
+
+    def backfill(self, archive_or_snaps) -> int:
+        """Replay an archive (or any snapshot iterable) into the history
+        store AND the insight engine, so a restarted daemon serves
+        /trend, /weekly and /insights with real history — persistence
+        and first-seen survive the restart instead of starting cold."""
+        n = 0
+        for snap in as_snapshots(archive_or_snaps):
+            self.store.append(snap)
+            self.insights.observe(snap)
+            n += 1
+        return n
 
     def close(self):
         self.bus.stop()
@@ -215,7 +237,9 @@ class LLloadDaemon:
         if path == "/metrics":
             snap = self.bus.read(self.source.name)
             text = promtext.render_prometheus(snap,
-                                              counters=self.counters())
+                                              counters=self.counters(),
+                                              insights=self.insights
+                                              .active())
             return 200, promtext.CONTENT_TYPE, text.encode("utf-8")
         if path == "/trend":
             window = _float_q(query, "window")
@@ -248,6 +272,8 @@ class LLloadDaemon:
                 protocol.envelope("weekly", payload))
         if path == "/query":
             return self._query(query)
+        if path == "/insights":
+            return self._insights(query)
         if path.startswith("/view/"):
             return self._view(path[len("/view/"):], query)
         raise HTTPError(404, f"unknown endpoint {path!r}")
@@ -266,11 +292,39 @@ class LLloadDaemon:
                 limit=query.get("limit"))
             renderer = get_renderer(fmt)
             snap = self.bus.read(self.source.name)
-            rs = run_query(snap, q, store=self.store)
+            rs = run_query(snap, q, store=self.store,
+                           insights=self.insights)
             body = renderer.render(rs)      # prom may reject dup labels
         except QueryError as exc:
             raise HTTPError(400, str(exc)) from exc
         return 200, renderer.content_type, body.encode("utf-8")
+
+    def _insights(self, query: Dict[str, str]) -> Tuple[int, str, bytes]:
+        """The advise view (DESIGN.md §8), answered from the streaming
+        insight engine; same canned query + modifier overlay as the
+        local CLI, so ``--source remote --advise`` is byte-identical."""
+        snap = self.bus.read(self.source.name)   # feeds the engine if stale
+        try:
+            q = apply_modifiers(
+                advise_query(),
+                columns=query.get("columns"),
+                filter=query.get("filter"),
+                sort=query.get("sort"),
+                group_by=query.get("group_by"),
+                limit=_int_q(query, "limit", default=None))
+            fmt = resolve_format(query.get("format"),
+                                 query.get("columns"),
+                                 query.get("group_by"))
+            rs = run_query(snap, q, store=self.store,
+                           insights=self.insights)
+            if fmt != "text":
+                renderer = get_renderer(fmt)
+                return (200, renderer.content_type,
+                        renderer.render(rs).encode("utf-8"))
+            text = formatting.advise_view_text(snap, rs.rows)
+        except QueryError as exc:
+            raise HTTPError(400, str(exc)) from exc
+        return 200, TEXT_CT, (text + "\n").encode("utf-8")
 
     def _view(self, kind: str, query: Dict[str, str]
               ) -> Tuple[int, str, bytes]:
@@ -437,7 +491,7 @@ def main(argv=None) -> int:
         for sub in (subdirs or [root]):
             cluster = os.path.basename(sub)
             archive = SnapshotArchive(os.path.dirname(sub) or ".", cluster)
-            total += daemon.store.backfill(archive)
+            total += daemon.backfill(archive)
         print(f"backfilled {total} snapshots into the history store",
               flush=True)
     daemon.start_sampler(args.interval)

@@ -32,6 +32,16 @@ from repro.core.analysis import (SNAPSHOT_INTERVAL_HOURS, WeeklyReport,
 from repro.core.metrics import ClusterSnapshot
 
 
+def as_snapshots(archive_or_snaps) -> Iterable[ClusterSnapshot]:
+    """Normalize a backfill input: a SnapshotArchive (anything with
+    ``as_source``) replays through its frames, any other iterable of
+    snapshots passes through (shared by HistoryStore.backfill and
+    LLloadDaemon.backfill)."""
+    if hasattr(archive_or_snaps, "as_source"):
+        return archive_or_snaps.as_source().frames()
+    return archive_or_snaps
+
+
 @dataclasses.dataclass
 class Agg:
     """Running min/mean/max over the values folded into one bucket."""
@@ -223,11 +233,8 @@ class HistoryStore:
 
     def backfill(self, archive_or_snaps) -> int:
         """Replay an archive (or any snapshot iterable) into the store."""
-        snaps = archive_or_snaps
-        if hasattr(snaps, "as_source"):                 # SnapshotArchive
-            snaps = snaps.as_source().frames()
         n = 0
-        for snap in snaps:
+        for snap in as_snapshots(archive_or_snaps):
             self.append(snap)
             n += 1
         return n

@@ -1,0 +1,29 @@
+"""repro.insights — the pluggable Insights subsystem (DESIGN.md §8).
+
+The paper's usage-characterization playbook (§V-B), redesigned from
+dead-end library functions into a first-class queryable surface: typed
+:class:`Insight` records produced by registered :class:`Rule`s,
+evaluated incrementally over the telemetry stream by an
+:class:`InsightEngine`, and surfaced through every layer — the
+``insights`` query table, the CLI ``--advise`` view (one-shot and
+``--watch``), the daemon's ``GET /insights``, and Prometheus
+active-insight gauges.  The old ``repro.core.advisor`` /
+``repro.core.overload`` entry points remain as thin shims over this
+package.
+"""
+from repro.insights.engine import InsightEngine, evaluate_snapshots
+from repro.insights.records import (CRITICAL, INFO, SEVERITIES, WARN,
+                                    Insight, Severity, severity_rank)
+from repro.insights.rules import (IO_STORM_FACTOR, IoStormRule,
+                                  LowGpuDutyRule, MissubmissionRule, Rule,
+                                  RuleContext, ThreadOverloadRule, contexts,
+                                  default_rules, get_rule, recommend_nppn,
+                                  register_rule, rule_names)
+
+__all__ = [
+    "CRITICAL", "INFO", "IO_STORM_FACTOR", "Insight", "InsightEngine",
+    "IoStormRule", "LowGpuDutyRule", "MissubmissionRule", "Rule",
+    "RuleContext", "SEVERITIES", "Severity", "ThreadOverloadRule", "WARN",
+    "contexts", "default_rules", "evaluate_snapshots", "get_rule",
+    "recommend_nppn", "register_rule", "rule_names", "severity_rank",
+]

@@ -1,0 +1,142 @@
+"""Incremental streaming insight engine (DESIGN.md §8).
+
+The legacy advisor answered "what should this user fix?" by replaying
+the whole snapshot history through the rule logic on every query —
+O(snapshots · nodes) per answer.  :class:`InsightEngine` instead
+*streams*: each snapshot is folded once into per-(rule kind, subject)
+state — hit counts, consecutive streak/miss counters, first/last-seen —
+so an answer is a read of the active set and the per-snapshot cost is
+O(rules · users).
+
+Stream semantics:
+
+  * **persistence** — hits / snapshots observed since the (kind,
+    subject) pair first fired; one noisy sample reads as 0.5 after the
+    next clean one, a chronic problem stays at 1.0.
+  * **hysteresis** — an insight activates after ``min_streak``
+    consecutive hits and deactivates (state dropped, episode over) only
+    after ``clear_after`` consecutive misses, so a flickering diagnosis
+    neither spams nor vanishes mid-look.
+  * **first_seen / last_seen** — cluster-clock timestamps of the
+    episode's first and latest hit.
+
+Wiring: ``engine.subscriber(name)`` is a TelemetryBus subscriber (the
+daemon registers one next to the HistoryStore's), ``engine.attach(bus)``
+also backfills from the bus ring buffer, and ``evaluate_snapshots`` is
+the one-call form for replaying an explicit history.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+from repro.insights.records import Insight
+from repro.insights.rules import Rule, contexts, default_rules
+
+
+@dataclasses.dataclass
+class _State:
+    """Stream state for one (rule kind, subject) pair."""
+    insight: Insight
+    hits: int = 0
+    observed: int = 0              # snapshots since (and incl.) first hit
+    streak: int = 0                # consecutive hits
+    misses: int = 0                # consecutive misses
+    first_seen: float = 0.0
+    active: bool = False
+
+
+class InsightEngine:
+    """Stateful incremental evaluator over a stream of snapshots."""
+
+    def __init__(self, rules: Optional[Iterable[Rule]] = None, *,
+                 min_streak: int = 1, clear_after: int = 2):
+        self.rules: List[Rule] = (list(rules) if rules is not None
+                                  else default_rules())
+        self.min_streak = max(int(min_streak), 1)
+        self.clear_after = max(int(clear_after), 1)
+        self.observations = 0
+        self._states: Dict[Tuple[str, str], _State] = {}
+        self._lock = threading.Lock()
+
+    # -------------------------------------------------------------- stream
+    def observe(self, snap) -> None:
+        """Fold one snapshot into the per-(kind, subject) state —
+        O(rules · users) plus one pass over the job table."""
+        found: Dict[Tuple[str, str], Insight] = {}
+        for ctx in contexts(snap):
+            for rule in self.rules:
+                ins = rule.evaluate(ctx)
+                if ins is not None:
+                    found[(ins.kind, ins.username)] = ins
+        with self._lock:
+            self.observations += 1
+            for key, ins in found.items():
+                st = self._states.get(key)
+                if st is None:
+                    st = _State(insight=ins, first_seen=snap.timestamp)
+                    self._states[key] = st
+                st.hits += 1
+                st.observed += 1
+                st.streak += 1
+                st.misses = 0
+                if st.streak >= self.min_streak:
+                    st.active = True
+                st.insight = dataclasses.replace(
+                    ins, persistence=st.hits / st.observed,
+                    streak=st.streak, first_seen=st.first_seen,
+                    last_seen=snap.timestamp)
+            for key in [k for k in self._states if k not in found]:
+                st = self._states[key]
+                st.observed += 1
+                st.streak = 0
+                st.misses += 1
+                if st.misses >= self.clear_after:
+                    del self._states[key]      # episode over
+                else:
+                    st.insight = dataclasses.replace(
+                        st.insight, persistence=st.hits / st.observed,
+                        streak=0)
+
+    # --------------------------------------------------------------- reads
+    def active(self) -> List[Insight]:
+        """The active insights, ordered (username, kind) for determinism
+        (canned views re-sort by severity on top of this)."""
+        with self._lock:
+            out = [st.insight for st in self._states.values() if st.active]
+        out.sort(key=lambda i: (i.username, i.kind))
+        return out
+
+    # -------------------------------------------------------------- wiring
+    def subscriber(self, source_name: Optional[str] = None
+                   ) -> Callable[[str, object], None]:
+        """A TelemetryBus subscriber feeding this engine (optionally only
+        from ``source_name``)."""
+        def fn(name: str, snap) -> None:
+            if source_name is None or name == source_name:
+                self.observe(snap)
+        return fn
+
+    def attach(self, bus, source_name: Optional[str] = None
+               ) -> "InsightEngine":
+        """Backfill from the bus ring buffer, then subscribe for every
+        future collection.  Returns self for chaining."""
+        for snap in bus.history_of(source_name):
+            self.observe(snap)
+        bus.subscribe(self.subscriber(source_name))
+        return self
+
+
+def evaluate_snapshots(snaps: Iterable, *,
+                       rules: Optional[Iterable[Rule]] = None,
+                       min_streak: int = 1,
+                       clear_after: int = 2) -> List[Insight]:
+    """One-call replay: stream ``snaps`` through a fresh engine and
+    return the active set (the modern replacement for the deprecated
+    ``characterize_snapshots``)."""
+    engine = InsightEngine(rules, min_streak=min_streak,
+                           clear_after=clear_after)
+    for snap in snaps:
+        engine.observe(snap)
+    return engine.active()

@@ -1,0 +1,93 @@
+"""Typed insight records (DESIGN.md §8).
+
+An :class:`Insight` is one diagnosis about one subject (a user's jobs):
+what rule fired (``kind``), how urgent it is (``severity``), which nodes
+are implicated, the human remediation message, any machine-actionable
+suggestion (NPPN / cores-per-task), and the *stream* fields the
+incremental engine maintains — persistence, streak, first/last-seen.
+
+:class:`Severity` is a ``str`` subclass whose comparisons follow the
+``info < warn < critical`` ladder instead of lexicographic order, so the
+query engine's generic filters (``severity >= warn``) and sorts
+(``-severity``) work on insight rows without any special casing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+SEVERITIES = ("info", "warn", "critical")
+_RANK = {name: rank for rank, name in enumerate(SEVERITIES)}
+
+
+def severity_rank(value: object) -> int:
+    """Rank of a severity-ish value; unknown strings rank below ``info``."""
+    return _RANK.get(str(value), -1)
+
+
+class Severity(str):
+    """A severity label ordered ``info < warn < critical`` (not lexically).
+
+    Equality and hashing stay plain-string (``Severity("warn") ==
+    "warn"``); only the orderings are rank-based, which is exactly what
+    filter comparisons and sort keys use.
+    """
+
+    __slots__ = ()
+
+    def __new__(cls, value: str = "info") -> "Severity":
+        if str(value) not in _RANK:
+            raise ValueError(f"unknown severity {value!r}; valid: "
+                             + ", ".join(SEVERITIES))
+        return super().__new__(cls, value)
+
+    @property
+    def rank(self) -> int:
+        return _RANK[str(self)]
+
+    def __lt__(self, other) -> bool:
+        return self.rank < severity_rank(other)
+
+    def __le__(self, other) -> bool:
+        return self.rank <= severity_rank(other)
+
+    def __gt__(self, other) -> bool:
+        return self.rank > severity_rank(other)
+
+    def __ge__(self, other) -> bool:
+        return self.rank >= severity_rank(other)
+
+
+INFO = Severity("info")
+WARN = Severity("warn")
+CRITICAL = Severity("critical")
+
+
+@dataclasses.dataclass
+class Insight:
+    """One active diagnosis for one (rule kind, subject) pair.
+
+    Rules fill the diagnostic fields; the :class:`~repro.insights.engine.
+    InsightEngine` maintains the stream fields (``persistence``,
+    ``streak``, ``first_seen``, ``last_seen``) across snapshots.
+    """
+    kind: str                       # low_gpu | missubmission | overload | io_storm
+    severity: Severity
+    username: str                   # the subject
+    hostnames: List[str]
+    message: str                    # diagnosis + suggested remediation
+    suggested_nppn: Optional[int] = None
+    suggested_cores_per_task: Optional[int] = None
+    evidence: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # ---- stream state (engine-maintained) ------------------------------
+    persistence: float = 1.0        # hits / snapshots since first seen
+    streak: int = 1                 # consecutive snapshots the rule fired
+    first_seen: float = 0.0         # cluster-clock time of the first hit
+    last_seen: float = 0.0          # cluster-clock time of the latest hit
+
+    def __post_init__(self):
+        # fail at the rule that minted the record, not deep in a render:
+        # a custom rule passing severity="notice" gets the vocabulary
+        # error here instead of a daemon 500 on the first /insights read
+        if not isinstance(self.severity, Severity):
+            self.severity = Severity(self.severity)

@@ -1,0 +1,231 @@
+"""Pluggable insight rules — the paper's diagnostic playbook (§V-B).
+
+Each :class:`Rule` looks at one subject's nodes in one snapshot and
+returns an :class:`~repro.insights.records.Insight` (or ``None``).  The
+four paper rules are registered at import:
+
+  * ``low_gpu``       — Fig 7: persistent low GPU duty with small GPU
+                        memory -> bigger batch or GPU overloading; an
+                        NPPN value is recommended from load + memory
+                        headroom (:func:`recommend_nppn`).
+  * ``missubmission`` — Fig 8: cores-per-task so large only one task
+                        fits a multi-GPU node -> corrected cores request.
+  * ``overload``      — Fig 10: normalized load > high threshold:
+                        thread oversubscription.
+  * ``io_storm``      — Fig 11: extreme load (>> cores) matching the
+                        concurrent-write() file-I/O-storm pathology.
+
+``register_rule`` admits new rules; the
+:class:`~repro.insights.engine.InsightEngine` evaluates every registered
+rule (or an explicit subset) per subject per snapshot.
+
+This module deliberately imports nothing from :mod:`repro.core` at
+module scope (the deprecated advisor/overload shims there import *us*);
+the shared utilization thresholds are resolved lazily from
+:mod:`repro.core.analysis`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Protocol, Tuple
+
+from repro.insights.records import CRITICAL, INFO, WARN, Insight
+
+# normalized load beyond which we suspect an I/O storm rather than plain
+# thread oversubscription (Fig 11's nodes showed ~720/48 = 15x)
+IO_STORM_FACTOR = 5.0
+
+
+def _thresholds() -> Tuple[float, float]:
+    # lazy: repro.core.analysis owns the paper's §V-A thresholds, but the
+    # core package's deprecation shims import this module
+    from repro.core.analysis import HIGH_THRESHOLD, LOW_THRESHOLD
+    return LOW_THRESHOLD, HIGH_THRESHOLD
+
+
+def recommend_nppn(gpu_load: float, gpu_mem_used_gb: float,
+                   gpu_mem_total_gb: float, *, target_load: float = 0.9,
+                   mem_headroom: float = 0.9, max_nppn: int = 8) -> int:
+    """The paper's overloading arithmetic: pack tasks-per-GPU until either
+    the summed duty cycle reaches ~target or GPU memory would overflow."""
+    if gpu_load <= 0:
+        return 1
+    by_load = int(target_load / max(gpu_load, 1e-3))
+    per_task_mem = max(gpu_mem_used_gb, 1e-3)
+    by_mem = int((gpu_mem_total_gb * mem_headroom) / per_task_mem)
+    n = max(1, min(by_load, by_mem, max_nppn))
+    # round down to the NPPN values LLsub exposes: 1, 2, 4, 8
+    for v in (8, 4, 2, 1):
+        if n >= v:
+            return v
+    return 1
+
+
+@dataclasses.dataclass
+class RuleContext:
+    """One subject's view of one snapshot (what every rule consumes)."""
+    snap: object                     # ClusterSnapshot
+    username: str
+    nodes: List[object]              # the user's NodeSnapshots
+    gpu_nodes: List[object]          # subset with devices
+
+
+def contexts(snap) -> Iterator[RuleContext]:
+    """Yield one :class:`RuleContext` per user with nodes, sorted by
+    username — the engine's O(users) iteration for one snapshot."""
+    by_user = snap.nodes_by_user()
+    for user in sorted(by_user):
+        nodes = [snap.nodes[h] for h in by_user[user] if h in snap.nodes]
+        if not nodes:
+            continue
+        yield RuleContext(snap, user, nodes,
+                          [n for n in nodes if n.gpus_total > 0])
+
+
+class Rule(Protocol):
+    """One diagnostic: ``evaluate`` returns an Insight or None."""
+    name: str
+    kind: str
+
+    def evaluate(self, ctx: RuleContext) -> Optional[Insight]: ...
+
+
+class LowGpuDutyRule:
+    """Fig 7: persistent low GPU duty -> larger batch or overloading."""
+    name = "low_gpu"
+    kind = "low_gpu"
+
+    def evaluate(self, ctx: RuleContext) -> Optional[Insight]:
+        low_threshold, _ = _thresholds()
+        low_gpu = [n for n in ctx.gpu_nodes
+                   if 0 < n.gpu_load < low_threshold and n.gpus_used > 0]
+        if not low_gpu:
+            return None
+        mean_load = sum(n.gpu_load for n in low_gpu) / len(low_gpu)
+        # NPPN numerator and denominator must come from the SAME node:
+        # taking max(used) across nodes but total from low_gpu[0] computed
+        # a nonsense ratio on heterogeneous nodes
+        ref = max(low_gpu,
+                  key=lambda n: n.gpu_mem_used_gb / max(n.gpus_used, 1))
+        mem_used = ref.gpu_mem_used_gb / max(ref.gpus_used, 1)
+        mem_total = ref.gpu_mem_total_gb / max(ref.gpus_total, 1)
+        nppn = recommend_nppn(mean_load, mem_used, mem_total)
+        msg = (f"GPU load {mean_load:.2f} < {low_threshold} on "
+               f"{len(low_gpu)} node(s); GPU memory {mem_used:.0f}GB of "
+               f"{mem_total:.0f}GB. Consider a larger batch size, or GPU "
+               f"overloading with NPPN={nppn} (LLsub triples mode).")
+        return Insight(self.kind, INFO, ctx.username,
+                       [n.hostname for n in low_gpu], msg,
+                       suggested_nppn=nppn,
+                       evidence={"gpu_load": mean_load,
+                                 "gpu_mem_used_gb": mem_used,
+                                 "gpu_mem_total_gb": mem_total})
+
+
+class MissubmissionRule:
+    """Fig 8: cores request so large only one task fits a GPU node."""
+    name = "missubmission"
+    kind = "missubmission"
+
+    def evaluate(self, ctx: RuleContext) -> Optional[Insight]:
+        low_threshold, _ = _thresholds()
+        missub = [n for n in ctx.gpu_nodes
+                  if n.gpus_total >= 2 and n.gpus_used < n.gpus_total
+                  and n.cores_free < n.cores_total // 4
+                  and n.norm_load < low_threshold]
+        if not missub:
+            return None
+        n0 = missub[0]
+        fair_cores = n0.cores_total // n0.gpus_total
+        msg = (f"{len(missub)} node(s) have all cores allocated but only "
+               f"{n0.gpus_used}/{n0.gpus_total} GPUs in use with CPU load "
+               f"{n0.norm_load:.2f}. The cores-per-task request is too "
+               f"large: request {fair_cores} cores and 1 GPU per task so "
+               f"{n0.gpus_total} tasks share each node.")
+        return Insight(self.kind, WARN, ctx.username,
+                       [n.hostname for n in missub], msg,
+                       suggested_cores_per_task=fair_cores,
+                       evidence={"norm_load": n0.norm_load})
+
+
+def _overloaded(ctx: RuleContext):
+    """(over nodes, worst node) for the two load-pathology rules."""
+    _, high_threshold = _thresholds()
+    over = [n for n in ctx.nodes if n.norm_load > high_threshold]
+    if not over:
+        return [], None
+    return over, max(over, key=lambda n: n.norm_load)
+
+
+class ThreadOverloadRule:
+    """Fig 10: load moderately above cores -> thread oversubscription."""
+    name = "overload"
+    kind = "overload"
+
+    def evaluate(self, ctx: RuleContext) -> Optional[Insight]:
+        over, worst = _overloaded(ctx)
+        if worst is None or worst.norm_load > IO_STORM_FACTOR:
+            return None                  # nothing, or the storm rule owns it
+        msg = (f"CPU load {worst.norm_load:.2f}x cores on "
+               f"{len(over)} node(s): tasks spawn more threads than "
+               "cores (e.g. Python multiprocessing defaults). Set "
+               "thread counts to cores/tasks-per-node.")
+        return Insight(self.kind, WARN, ctx.username,
+                       [n.hostname for n in over], msg,
+                       evidence={"max_norm_load": worst.norm_load})
+
+
+class IoStormRule:
+    """Fig 11: extreme load (>> cores) -> concurrent file-I/O storm."""
+    name = "io_storm"
+    kind = "io_storm"
+
+    def evaluate(self, ctx: RuleContext) -> Optional[Insight]:
+        over, worst = _overloaded(ctx)
+        if worst is None or worst.norm_load <= IO_STORM_FACTOR:
+            return None
+        msg = (f"Extreme CPU load {worst.load:.0f} on "
+               f"{worst.cores_total} cores ({worst.norm_load:.1f}x). "
+               "Beyond thread oversubscription this pattern matches a "
+               "concurrent file-I/O storm (e.g. write() in a hot loop) "
+               "overwhelming the filesystem client; reduce concurrent "
+               "file I/O and cap worker threads.")
+        return Insight(self.kind, CRITICAL, ctx.username,
+                       [n.hostname for n in over], msg,
+                       evidence={"max_norm_load": worst.norm_load})
+
+
+# ------------------------------------------------------------------ registry
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register_rule(rule: Rule) -> Rule:
+    """Admit a rule; evaluation order is registration order."""
+    if rule.name in _REGISTRY:
+        raise ValueError(f"rule {rule.name!r} already registered")
+    _REGISTRY[rule.name] = rule
+    return rule
+
+
+def get_rule(name: str) -> Rule:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown rule {name!r}; registered: "
+                       + ", ".join(rule_names()))
+    return _REGISTRY[name]
+
+
+def rule_names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def default_rules() -> List[Rule]:
+    """Every registered rule, in registration order (paper order for the
+    built-ins, so per-subject insight order matches the legacy advisor)."""
+    return list(_REGISTRY.values())
+
+
+for _rule in (LowGpuDutyRule(), MissubmissionRule(), ThreadOverloadRule(),
+              IoStormRule()):
+    register_rule(_rule)

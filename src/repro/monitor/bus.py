@@ -15,7 +15,9 @@ every consumer (CLI/watch, archiver, analysis) — DESIGN.md §5:
     ``interval_hint`` (or the bus default) on a daemon thread, so watch
     mode and subscribers stream without any consumer driving collection.
   * **subscribers** — callables invoked as ``fn(source_name, snapshot)``
-    on every *new* collection (the 15-minute archiver is one).
+    on every *new* collection (the 15-minute archiver, the daemon's
+    HistoryStore, and the insight engine's streaming evaluator —
+    DESIGN.md §8 — are all subscribers).
 
 Job-side publishing (``publish_step_utilization``) also lives here: the
 trainer/server call this monitor-layer hook, which feeds the in-process

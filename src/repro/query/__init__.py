@@ -8,8 +8,9 @@ package, rendered by a registry renderer (``table``/``json``/``csv``/
 """
 from repro.query.engine import (DEFAULT_COLUMNS, TABLES, Column, Query,
                                 ResultSet, column_kinds, history_rows,
-                                job_rows, node_rows, row_from_node,
-                                run_query, user_rows, vocabulary)
+                                insight_rows, job_rows, node_rows,
+                                row_from_node, run_query, user_rows,
+                                vocabulary)
 from repro.query.errors import QueryError
 from repro.query.expr import (Bool, Cmp, Expr, Not, conjoin, in_set,
                               parse_filter)
@@ -18,17 +19,19 @@ from repro.query.render import (QUERY_SCHEMA_VERSION, RENDERERS, Renderer,
                                 register_renderer, render_csv, render_json,
                                 render_prom, render_table, render_tsv,
                                 renderer_names)
-from repro.query.views import (VIEW_KINDS, all_query, apply_modifiers,
-                               jupyter_jobs_query, nodes_query,
-                               resolve_format, running_jobs_query,
-                               top_query, user_query, view_query)
+from repro.query.views import (VIEW_KINDS, advise_query, all_query,
+                               apply_modifiers, jupyter_jobs_query,
+                               nodes_query, resolve_format,
+                               running_jobs_query, top_query, user_query,
+                               view_query)
 
 __all__ = [
     "Bool", "Cmp", "Column", "DEFAULT_COLUMNS", "Expr", "Not",
     "QUERY_SCHEMA_VERSION", "Query", "QueryError", "RENDERERS",
-    "Renderer", "ResultSet", "TABLES", "VIEW_KINDS", "all_query",
+    "Renderer", "ResultSet", "TABLES", "VIEW_KINDS", "advise_query",
+    "all_query",
     "apply_modifiers", "column_kinds", "conjoin", "get_renderer",
-    "history_rows", "in_set", "job_rows", "json_payload",
+    "history_rows", "in_set", "insight_rows", "job_rows", "json_payload",
     "jupyter_jobs_query", "node_rows", "nodes_query", "parse_delimited",
     "parse_filter", "register_renderer", "render_csv", "render_json",
     "render_prom", "render_table", "render_tsv", "renderer_names",

@@ -19,6 +19,10 @@ Tables:
   * ``jobs``    — one row per job in the snapshot's job table.
   * ``history`` — one row per downsampled tier bucket (daemon only:
                   requires a HistoryStore).
+  * ``insights`` — one row per active §V-B insight (requires an
+                  InsightEngine; the CLI builds one for ``--advise`` /
+                  ``--table insights``, the daemon streams its own —
+                  DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -26,6 +30,7 @@ import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.metrics import ClusterSnapshot
+from repro.insights.records import SEVERITIES, Severity
 from repro.query.errors import QueryError
 from repro.query.expr import Bool, Cmp, Expr, Not, parse_filter
 
@@ -103,11 +108,32 @@ _HISTORY_COLUMNS = [
     for f in _HISTORY_AGGS for agg in ("min", "mean", "max")
 ]
 
+_INSIGHT_COLUMNS = [
+    Column("severity", "str", "info | warn | critical (ordered: "
+                              "severity>=warn keeps warn and critical)"),
+    Column("kind", "str", "rule kind (low_gpu | missubmission | overload "
+                          "| io_storm | any registered rule)"),
+    Column("user", "str", "subject username"),
+    Column("email", "str", "subject's email"),
+    Column("hosts", "str", "implicated hostnames, comma-joined"),
+    Column("nodes", "int", "number of implicated nodes"),
+    Column("nppn", "int", "suggested tasks-per-GPU (low_gpu rule)"),
+    Column("cores_per_task", "int",
+           "suggested cores-per-task (missubmission rule)"),
+    Column("persistence", "float",
+           "fraction of snapshots the diagnosis held since first seen"),
+    Column("streak", "int", "consecutive snapshots the rule fired"),
+    Column("first_seen", "float", "first diagnosed (cluster clock)"),
+    Column("last_seen", "float", "last confirmed (cluster clock)"),
+    Column("message", "str", "diagnosis + suggested remediation"),
+]
+
 TABLES: Dict[str, List[Column]] = {
     "nodes": _NODE_COLUMNS,
     "users": _USER_COLUMNS,
     "jobs": _JOB_COLUMNS,
     "history": _HISTORY_COLUMNS,
+    "insights": _INSIGHT_COLUMNS,
 }
 
 # the default selection shown by generic renderers when no --columns given
@@ -121,6 +147,8 @@ DEFAULT_COLUMNS: Dict[str, Tuple[str, ...]] = {
              "cores", "gpus", "start_time"),
     "history": ("tier", "t", "count", "norm_load_mean", "gpu_load_mean",
                 "nodes_mean", "cores_used_mean"),
+    "insights": ("severity", "kind", "user", "nodes", "nppn",
+                 "persistence", "message"),
 }
 
 
@@ -152,6 +180,14 @@ def _check_expr(table: str, expr: Optional[Expr]) -> None:
         return
     if isinstance(expr, Cmp):
         _check_columns(table, [expr.column], "filter")
+        if (expr.column == "severity" and table == "insights"
+                and expr.op not in ("=~", "has")
+                and str(expr.value) not in SEVERITIES):
+            # severity compares by rank (info < warn < critical); an
+            # unknown level would silently rank below everything
+            raise QueryError(
+                f"unknown severity {expr.value!r} in filter; valid "
+                "levels (ascending): " + ", ".join(SEVERITIES))
     elif isinstance(expr, Not):
         _check_expr(table, expr.child)
     elif isinstance(expr, Bool):
@@ -342,6 +378,33 @@ def job_rows(snap: ClusterSnapshot) -> List[dict]:
     } for j in snap.jobs]
 
 
+def insight_rows(insights, snap: Optional[ClusterSnapshot] = None
+                 ) -> List[dict]:
+    """One row per active insight.  ``insights`` is an
+    :class:`~repro.insights.engine.InsightEngine` (its ``active()`` set
+    is materialized) or any iterable of Insight records; ``snap``
+    supplies the subject's email when available."""
+    items = insights.active() if hasattr(insights, "active") else insights
+    rows = []
+    for i in items:
+        rows.append({
+            "severity": Severity(i.severity),
+            "kind": i.kind,
+            "user": i.username,
+            "email": snap.email_of(i.username) if snap is not None else "",
+            "hosts": ",".join(i.hostnames),
+            "nodes": len(i.hostnames),
+            "nppn": i.suggested_nppn,
+            "cores_per_task": i.suggested_cores_per_task,
+            "persistence": i.persistence,
+            "streak": i.streak,
+            "first_seen": i.first_seen,
+            "last_seen": i.last_seen,
+            "message": i.message,
+        })
+    return rows
+
+
 def history_rows(store) -> List[dict]:
     """Flatten every tier (raw included) of a HistoryStore into rows."""
     rows = []
@@ -367,7 +430,18 @@ def _sorted_rows(rows: List[dict], sort: Sequence[str]) -> List[dict]:
     for key in reversed(list(sort)):
         desc = key.startswith("-")
         col = key[1:] if desc else key
-        out.sort(key=lambda r: r.get(col), reverse=desc)
+
+        def sort_key(r, col=col, desc=desc):
+            # None cells (e.g. insights.nppn outside the low_gpu rule)
+            # are not comparable with values; group them after all
+            # values in BOTH directions (the marker flips with desc so
+            # reverse=True cannot float Nones to the top)
+            v = r.get(col)
+            if v is None:
+                return (0, 0) if desc else (1, 0)
+            return (1, v) if desc else (0, v)
+
+        out.sort(key=sort_key, reverse=desc)
     return out
 
 
@@ -385,10 +459,12 @@ def _grouped(rows: List[dict], column: str
 
 
 def run_query(snap: Optional[ClusterSnapshot], query: Query,
-              store=None) -> ResultSet:
-    """Execute ``query`` against a snapshot (and optional history store).
+              store=None, insights=None) -> ResultSet:
+    """Execute ``query`` against a snapshot (and optional history store
+    / insight engine).
 
-    ``snap`` may be None only for the ``history`` table.
+    ``snap`` may be None only for the ``history`` and ``insights``
+    tables; ``insights`` is an InsightEngine or an iterable of Insights.
     """
     query.validate()
     if query.table == "history":
@@ -397,6 +473,13 @@ def run_query(snap: Optional[ClusterSnapshot], query: Query,
                 "table 'history' needs a history store — query a daemon "
                 "(GET /query) or pass store=HistoryStore(...)")
         rows = history_rows(store)
+    elif query.table == "insights":
+        if insights is None:
+            raise QueryError(
+                "table 'insights' needs an insight engine — query a "
+                "daemon (GET /insights or GET /query) or pass "
+                "insights=InsightEngine(...)")
+        rows = insight_rows(insights, snap)
     elif snap is None:
         raise QueryError(f"table {query.table!r} needs a snapshot")
     elif query.table == "nodes":

@@ -16,7 +16,7 @@ from repro.query.engine import Query
 from repro.query.errors import QueryError
 from repro.query.expr import Cmp, conjoin, in_set
 
-VIEW_KINDS = ("user", "top", "nodes", "all")
+VIEW_KINDS = ("user", "top", "nodes", "all", "advise")
 
 
 def user_query(username: str) -> Query:
@@ -47,6 +47,13 @@ def all_query() -> Query:
                  sort=("host",))
 
 
+def advise_query() -> Query:
+    """§V-B: every active insight, most severe first (ties: the insight
+    engine's deterministic (user, kind) order).  Covers all subjects —
+    narrow with ``--filter "user == NAME"`` or ``"severity >= warn"``."""
+    return Query(table="insights", sort=("-severity", "user", "kind"))
+
+
 def jupyter_jobs_query() -> Query:
     """The Fig-4 Jupyter summary's source rows."""
     return Query(table="jobs", where=conjoin(
@@ -68,6 +75,8 @@ def view_query(kind: str, *, user: str = "",
         return nodes_query(hosts)
     if kind == "all":
         return all_query()
+    if kind == "advise":
+        return advise_query()
     raise QueryError(f"unknown view {kind!r}; valid views: "
                      + ", ".join(VIEW_KINDS))
 

@@ -18,6 +18,7 @@ CASES = [
     ("top5.txt", ["-t", "5"]),
     ("all_admin_gpu.txt", ["--all", "-g", "--user", "admin"]),
     ("nodes.txt", ["-n", "c-1-1-1"]),
+    ("advise.txt", ["--advise"]),
 ]
 
 
@@ -80,6 +81,19 @@ def test_remote_output_identical_to_local(capsys, daemon_url, fmt):
                     + args) == 0
     remote = capsys.readouterr().out
     assert local == remote
+
+
+def test_advise_forwarded_identical_to_local(capsys, daemon_url):
+    """--advise against one daemon URL is answered by GET /insights;
+    the body must be byte-identical to the local render (acceptance)."""
+    for extra in ([], ["--format", "json"],
+                  ["--filter", "severity>=warn"],
+                  ["--columns", "severity,kind,user,persistence"]):
+        assert cli.main(["--source", "sim", "--advise"] + extra) == 0
+        local = capsys.readouterr().out
+        assert cli.main(["--source", "remote", "--url", daemon_url,
+                         "--advise"] + extra) == 0
+        assert capsys.readouterr().out == local
 
 
 def test_remote_nodes_view_keeps_unknown_host_exit_code(capsys,

@@ -1,0 +1,341 @@
+"""Insights subsystem (DESIGN.md §8): rules, incremental engine
+(persistence / hysteresis / first-seen), the insights query table, the
+daemon's /insights endpoint, Prometheus gauges, and the overload
+controller as a rule consumer."""
+import json
+
+import pytest
+
+from repro.core.metrics import ClusterSnapshot, JobRecord, NodeSnapshot
+from repro.core.overload import (DeviceObservation, OverloadController,
+                                 nearest_level)
+from hypothesis import given, strategies as st
+from repro.insights import (SEVERITIES, Insight, InsightEngine, Severity,
+                            evaluate_snapshots, get_rule, recommend_nppn,
+                            rule_names)
+from repro.query import Query, QueryError, run_query
+
+
+# ------------------------------------------------------------- fixtures ----
+
+
+def _gpu_node(host="g-1", gpu_load=0.3, mem_used=2.0, mem_total=32.0,
+              gpus=1, load=20.0, cores=40):
+    return NodeSnapshot(host, cores_total=cores, cores_used=cores,
+                        load=load, mem_total_gb=192.0, mem_used_gb=50.0,
+                        gpus_total=gpus, gpus_used=gpus, gpu_load=gpu_load,
+                        gpu_mem_total_gb=mem_total, gpu_mem_used_gb=mem_used)
+
+
+def _snap(nodes, user="u1", ts=0.0):
+    return ClusterSnapshot(
+        cluster="t", timestamp=ts,
+        nodes={n.hostname: n for n in nodes},
+        jobs=[JobRecord(1, user, "job", [n.hostname for n in nodes], 40)])
+
+
+def _low_gpu_snap(ts=0.0, firing=True):
+    return _snap([_gpu_node(gpu_load=0.3 if firing else 0.9)], ts=ts)
+
+
+# ----------------------------------------------------------------- rules ----
+
+
+def test_registry_has_the_four_paper_rules():
+    assert rule_names() == ["io_storm", "low_gpu", "missubmission",
+                            "overload"]
+    assert get_rule("low_gpu").kind == "low_gpu"
+    with pytest.raises(KeyError):
+        get_rule("bogus")
+
+
+def test_cli_advise_flag_interactions(capsys):
+    """--advise never consults -n (no unknown-host exit 1), and --tsv
+    rejects it loudly like every other query-shaping flag."""
+    from repro.core import cli
+    assert cli.main(["--source", "sim", "--advise", "-n", "bogus"]) == 0
+    assert "Active insights:" in capsys.readouterr().out
+    assert cli.main(["--source", "sim", "--advise", "--tsv"]) == 1
+    assert "--advise" in capsys.readouterr().err
+
+
+def test_custom_rule_bad_severity_fails_at_the_rule():
+    """A custom rule minting an unknown severity errors where the record
+    is built, not as a daemon 500 on the first /insights read."""
+    with pytest.raises(ValueError) as ei:
+        Insight(kind="x", severity="notice", username="u", hostnames=[],
+                message="")
+    assert "info, warn, critical" in str(ei.value)
+
+
+def test_severity_orders_by_rank_not_lexically():
+    assert Severity("critical") > "warn" > Severity("info")
+    assert not (Severity("critical") < "info")
+    assert Severity("warn") == "warn"
+    assert sorted([Severity("warn"), Severity("critical"),
+                   Severity("info")]) == ["info", "warn", "critical"]
+    with pytest.raises(ValueError):
+        Severity("bogus")
+
+
+def test_fig7_heterogeneous_nodes_use_one_node_for_nppn():
+    """Satellite fix: NPPN memory numerator/denominator must come from
+    the same node.  Node a: 2GB used of 16GB; node b: 10GB used of
+    64GB.  The old code paired b's 10GB with a's 16GB total -> NPPN 1;
+    pairing 10GB with b's own 64GB leaves room for NPPN 4."""
+    a = _gpu_node("g-a", gpu_load=0.2, mem_used=2.0, mem_total=16.0)
+    b = _gpu_node("g-b", gpu_load=0.2, mem_used=10.0, mem_total=64.0)
+    engine = InsightEngine()
+    engine.observe(_snap([a, b]))
+    (ins,) = engine.active()
+    assert ins.kind == "low_gpu"
+    assert ins.suggested_nppn == 4
+    assert ins.evidence["gpu_mem_used_gb"] == 10.0
+    assert ins.evidence["gpu_mem_total_gb"] == 64.0
+
+
+# ---------------------------------------------------------------- engine ----
+
+
+def test_engine_persistence_is_hit_fraction_since_first_seen():
+    engine = InsightEngine(clear_after=3)
+    for ts, firing in enumerate([True, True, False, True]):
+        engine.observe(_low_gpu_snap(ts=float(ts), firing=firing))
+    (ins,) = [i for i in engine.active() if i.kind == "low_gpu"]
+    assert ins.persistence == pytest.approx(3 / 4)
+    assert ins.first_seen == 0.0 and ins.last_seen == 3.0
+    assert ins.streak == 1                   # reset by the miss at ts=2
+
+
+def test_engine_min_streak_gates_activation():
+    engine = InsightEngine(min_streak=2)
+    engine.observe(_low_gpu_snap(ts=0.0))
+    assert engine.active() == []             # one hit is not enough
+    engine.observe(_low_gpu_snap(ts=1.0))
+    (ins,) = engine.active()
+    assert ins.streak == 2 and ins.first_seen == 0.0
+
+
+def test_engine_clear_after_hysteresis():
+    engine = InsightEngine(clear_after=2)
+    engine.observe(_low_gpu_snap(ts=0.0))
+    engine.observe(_low_gpu_snap(ts=1.0, firing=False))
+    assert len(engine.active()) == 1         # lingers through one miss
+    (ins,) = engine.active()
+    assert ins.streak == 0 and ins.persistence == pytest.approx(0.5)
+    engine.observe(_low_gpu_snap(ts=2.0, firing=False))
+    assert engine.active() == []             # second miss clears it
+
+
+def test_engine_new_episode_resets_first_seen():
+    engine = InsightEngine(clear_after=1)
+    engine.observe(_low_gpu_snap(ts=0.0))
+    engine.observe(_low_gpu_snap(ts=1.0, firing=False))   # episode over
+    engine.observe(_low_gpu_snap(ts=2.0))
+    (ins,) = engine.active()
+    assert ins.first_seen == 2.0 and ins.persistence == 1.0
+
+
+def test_evaluate_snapshots_matches_streaming():
+    snaps = [_low_gpu_snap(ts=float(t)) for t in range(4)]
+    engine = InsightEngine()
+    for s in snaps:
+        engine.observe(s)
+    assert evaluate_snapshots(snaps) == engine.active()
+
+
+def test_engine_subscriber_filters_by_source_name():
+    engine = InsightEngine()
+    fn = engine.subscriber("a")
+    fn("b", _low_gpu_snap())
+    assert engine.active() == [] and engine.observations == 0
+    fn("a", _low_gpu_snap())
+    assert len(engine.active()) == 1
+
+
+# ----------------------------------------------------------- query table ----
+
+
+def test_insights_table_filters_by_severity_rank():
+    crit = _snap([_gpu_node("c-1", gpu_load=0.0, load=720.0, cores=48)],
+                 user="u2")
+    info = _low_gpu_snap()
+    engine = InsightEngine()
+    engine.observe(_snap(list(info.nodes.values())
+                         + list(crit.nodes.values())))
+    # one user owning both nodes: low_gpu (info) + io_storm (critical)
+    q = Query.from_params(table="insights", filter="severity>=warn")
+    rs = run_query(info, q, insights=engine)
+    assert [r["kind"] for r in rs.rows] == ["io_storm"]
+    q2 = Query.from_params(table="insights", filter="severity<warn")
+    assert [r["kind"] for r in run_query(info, q2, insights=engine).rows] \
+        == ["low_gpu"]
+
+
+def test_unknown_severity_literal_is_a_query_error():
+    with pytest.raises(QueryError) as ei:
+        Query.from_params(table="insights", filter="severity>=wrn")
+    assert "info, warn, critical" in str(ei.value)
+
+
+def test_insights_table_requires_engine():
+    with pytest.raises(QueryError) as ei:
+        run_query(_low_gpu_snap(), Query(table="insights"))
+    assert "insights" in str(ei.value)
+
+
+def test_sort_tolerates_none_cells():
+    """nppn is None outside the low_gpu rule; sorting on it must not
+    TypeError (Nones group after values)."""
+    engine = InsightEngine()
+    snap = _snap([_gpu_node(), _gpu_node("c-1", gpu_load=0.0,
+                                         load=720.0, cores=48)])
+    engine.observe(snap)
+    q = Query.from_params(table="insights", sort="nppn")
+    rows = run_query(snap, q, insights=engine).rows
+    assert rows[0]["nppn"] is not None and rows[-1]["nppn"] is None
+    # Nones stay last on DESCENDING sorts too (reverse=True must not
+    # float the None marker to the top)
+    q_desc = Query.from_params(table="insights", sort="-nppn")
+    rows = run_query(snap, q_desc, insights=engine).rows
+    assert rows[0]["nppn"] is not None and rows[-1]["nppn"] is None
+
+
+# --------------------------------------------------- overload controller ----
+
+
+def test_nearest_level_clamps_off_ladder_values():
+    assert nearest_level(3) == 2
+    assert nearest_level(16) == 8
+    assert nearest_level(0) == 1
+    assert nearest_level(16, max_nppn=4) == 4
+
+
+def test_decide_accepts_off_ladder_nppn():
+    """Satellite fix: decide(3) used to raise ValueError from
+    NPPN_LEVELS.index(3)."""
+    c = OverloadController()
+    for _ in range(4):
+        c.observe(DeviceObservation(0.3, 2.0, 32.0))
+    assert c.decide(3).nppn == 4             # clamp to 2, step up one level
+    sat = OverloadController()
+    for _ in range(8):
+        sat.observe(DeviceObservation(0.99, 2.0, 32.0))
+    d = sat.decide(3)
+    assert d.nppn == 2 and "saturated" in d.reason
+    # clamping an over-max value to the ladder IS the back-off step
+    assert sat.decide(16).nppn == 8
+    assert sat.decide(8).nppn == 4           # on-ladder: step down one
+
+
+def test_controller_consumes_low_gpu_insight():
+    engine = InsightEngine()
+    engine.observe(_snap([_gpu_node(gpu_load=0.35, mem_used=2.0)]))
+    (ins,) = engine.active()
+    c = OverloadController()
+    d = c.consume(ins, current_nppn=1)
+    assert d.nppn == 2                       # the paper's Fig-7 step
+    other = OverloadController()
+    kept = other.consume(Insight(
+        kind="io_storm", severity=Severity("critical"), username="u",
+        hostnames=[], message=""), current_nppn=2)
+    assert kept.nppn == 2 and other.history == []
+
+
+# ----------------------------------------------------- recommend_nppn ------
+
+
+@given(st.floats(0.0, 2.0), st.floats(0.001, 100.0),
+       st.floats(0.5, 100.0))
+def test_recommend_nppn_always_an_llsub_level(load, mem_used, mem_total):
+    assert recommend_nppn(load, mem_used, mem_total) in (1, 2, 4, 8)
+
+
+@given(st.floats(0.0, 2.0), st.floats(0.001, 100.0),
+       st.floats(0.5, 100.0))
+def test_recommend_nppn_respects_memory_headroom(load, mem_used, mem_total):
+    n = recommend_nppn(load, mem_used, mem_total)
+    assert n == 1 or n * mem_used <= mem_total * 0.9 + 1e-6
+
+
+@given(st.integers(2, 32))
+def test_recommend_nppn_honors_max_cap(max_nppn):
+    n = recommend_nppn(0.01, 0.01, 100.0, max_nppn=max_nppn)
+    assert n <= max_nppn and n in (1, 2, 4, 8)
+
+
+# ------------------------------------------------------- daemon surface ----
+
+
+@pytest.fixture()
+def daemon():
+    from repro.daemon import LLloadDaemon
+    from repro.monitor import build_source
+    d = LLloadDaemon(build_source("sim"), ttl_s=3600.0)
+    yield d
+    d.close()
+
+
+def test_daemon_insights_endpoint_text_and_json(daemon):
+    status, ct, body = daemon.handle("/insights")
+    assert status == 200 and "text/plain" in ct
+    assert b"Active insights:" in body
+    status, ct, body = daemon.handle("/insights", {"format": "json"})
+    assert status == 200
+    obj = json.loads(body)
+    assert obj["kind"] == "query_result"
+    assert obj["query_result"]["table"] == "insights"
+    # the canned advise sort: most severe first
+    sev = [r[0] for r in obj["query_result"]["rows"]]
+    ranks = [SEVERITIES.index(s) for s in sev]
+    assert ranks == sorted(ranks, reverse=True)
+
+
+def test_daemon_insights_bad_filter_is_400(daemon):
+    status, _, body = daemon.handle("/insights",
+                                    {"filter": "severity>=bogus"})
+    assert status == 400 and b"severity" in body
+
+
+def test_daemon_query_table_insights(daemon):
+    status, _, body = daemon.handle(
+        "/query", {"table": "insights", "format": "json",
+                   "filter": "severity>=warn"})
+    assert status == 200
+    rows = json.loads(body)["query_result"]["rows"]
+    assert rows and all(r[0] in ("warn", "critical") for r in rows)
+
+
+def test_daemon_metrics_exposes_insight_gauges(daemon):
+    from repro.daemon.promtext import parse_prometheus
+    status, _, body = daemon.handle("/metrics")
+    assert status == 200
+    metrics = parse_prometheus(body.decode("utf-8"))
+    assert "llload_active_insights" in metrics
+    per_kind = metrics["llload_insights_active"]
+    total = sum(per_kind.values())
+    (total_val,) = metrics["llload_active_insights"].values()
+    assert total == total_val > 0
+    assert any('kind="low_gpu"' in labels for labels in per_kind)
+
+
+def test_daemon_backfill_feeds_insight_engine(daemon):
+    """Restart recovery: backfilled snapshots reach the insight engine,
+    so /insights wakes up with persistence/first-seen history instead
+    of starting cold."""
+    snaps = [_low_gpu_snap(ts=float(t)) for t in range(3)]
+    assert daemon.backfill(snaps) == 3
+    assert daemon.insights.observations == 3
+    (ins,) = [i for i in daemon.insights.active() if i.kind == "low_gpu"
+              and i.username == "u1"]
+    assert ins.first_seen == 0.0 and ins.streak == 3
+
+
+def test_daemon_insights_persistence_across_collections(daemon):
+    """The daemon engine streams: repeated collections of the frozen sim
+    keep persistence at 1.0 (which is what makes remote byte-identical
+    to a one-shot local evaluation)."""
+    daemon.handle("/insights")
+    daemon.bus.poll(daemon.source.name)      # force a second collection
+    assert daemon.insights.observations >= 2
+    assert all(i.persistence == 1.0 for i in daemon.insights.active())
