@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV rows (one per benchmark).
 | daemon_snapshot_*        | HTTP /snapshot requests/s, cached vs collect |
 | query_{table,json}_512n  | query engine filter+sort+render (§7)         |
 | insights_{replay,incremental} | §V-B advise: streaming engine vs replay |
+| experiments_low_duty_8g  | §V-B campaign: fixed vs closed-loop NPPN     |
 | columnarize_1wk          | vectorized archive columnarization           |
 | weekly_analysis_1wk      | Fig 6 weekly node-hours aggregation          |
 | monitor_overhead         | "light-weight" claim: train loop +hooks      |
@@ -249,6 +250,48 @@ def bench_insights():
         f.write("\n")
 
 
+def bench_experiments():
+    """The §V-B campaign harness on the example sweep (DESIGN.md §9):
+    fixed NPPN=1 vs the controller-closed-loop cell on the low-duty mix,
+    8-node fleet.  Emits ``BENCH_experiments.json`` for CI / acceptance
+    (closed loop >= 1.2x the fixed NPPN=1 throughput)."""
+    import json
+    import os
+
+    from repro.experiments import load_campaign, run_campaign
+
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "examples", "overload_campaign.toml")
+    campaign = load_campaign(path)
+
+    t0 = time.perf_counter()
+    result = run_campaign(campaign, cells="low_duty/8g/*")
+    us_total = (time.perf_counter() - t0) * 1e6
+
+    fixed = result.cell_row("low_duty/8g/nppn1")
+    ctl = result.cell_row("low_duty/8g/controller")
+    speedup = ctl["throughput"] / max(fixed["throughput"], 1e-9)
+    _row("experiments_low_duty_8g", us_total / len(result.results),
+         f"cells={len(result.results)};"
+         f"fixed1_tasks_per_hr={fixed['throughput']:.1f};"
+         f"controller_tasks_per_hr={ctl['throughput']:.1f};"
+         f"closed_loop_speedup={speedup:.2f}x;"
+         f"converged_nppn={ctl['nppn']}")
+    with open("BENCH_experiments.json", "w") as f:
+        json.dump({
+            "campaign": campaign.name,
+            "mix": "low_duty",
+            "fleet": 8,
+            "cells": len(result.results),
+            "fixed_nppn1_tasks_per_hr": round(fixed["throughput"], 2),
+            "controller_tasks_per_hr": round(ctl["throughput"], 2),
+            "converged_nppn": ctl["nppn"],
+            "closed_loop_speedup_x": round(speedup, 2),
+            "us_per_cell": round(us_total / len(result.results), 1),
+        }, f, indent=2)
+        f.write("\n")
+
+
 def bench_columnarize():
     """Vectorized archive columnarization on a week-scale synthetic
     archive (the per-row loop this replaced ran ~5x slower)."""
@@ -415,6 +458,7 @@ BENCHES = [
     bench_daemon,
     bench_query,
     bench_insights,
+    bench_experiments,
     bench_columnarize,
     bench_weekly_analysis,
     bench_monitor_overhead,

@@ -3,39 +3,43 @@ NPPN mechanism) improves aggregate throughput for low-utilization jobs.
 
     PYTHONPATH=src python examples/overloading_throughput.py
 
-Three views:
-  1. scheduler-level: tasks_per_gpu sweep on the simulated cluster shows
-     node-count shrinking while aggregate GPU duty rises (Figs 8->9),
-  2. measured: a real JAX decode workload at 1/2/4/8 concurrent streams,
-  3. closed loop: the OverloadController stepping NPPN from live duty.
+Two views:
+  1. campaign: the declarative experiment harness (repro.experiments,
+     DESIGN.md §9) sweeps the fixed NPPN ladder AND the closed loop
+     (InsightEngine -> OverloadController.consume -> resubmission) over
+     the simulated LLSC fleet — the same sweep `LLload --experiment
+     examples/overload_campaign.toml` runs, here driven from Python,
+  2. measured: a real JAX decode workload at 1/2/4/8 concurrent streams
+     next to the analytic packing model.
 """
+import os
+
 import jax
 import numpy as np
 
-from repro.cluster.workloads import make_llsc_sim, overloaded_gpu_job
 from repro.configs import reduced_config
-from repro.core.overload import (DeviceObservation, OverloadController,
-                                 packed_throughput_model)
+from repro.core.overload import packed_throughput_model
+from repro.experiments import load_campaign, render_result, run_campaign
 from repro.models import init_params
 from repro.serve.engine import EngineConfig, Request, ServeEngine
 
+CAMPAIGN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "overload_campaign.toml")
 
-def scheduler_view():
+
+def campaign_view():
     print("=" * 70)
-    print("1) Scheduler view: same 8 low-duty tasks, rising NPPN")
+    print("1) Campaign: fixed NPPN ladder vs the closed loop (8-node fleet)")
     print("=" * 70)
-    print(f"{'NPPN':>5} {'nodes used':>11} {'mean GPU duty':>14}")
-    for nppn in (1, 2, 4, 8):
-        sim = make_llsc_sim()
-        sim.submit(overloaded_gpu_job("u", tasks=8, tasks_per_gpu=nppn))
-        sim.run_until(600.0)
-        snap = sim.snapshot()
-        hosts = snap.nodes_by_user().get("u", [])
-        duties = [snap.nodes[h].gpu_load for h in hosts
-                  if snap.nodes[h].gpus_total]
-        print(f"{nppn:>5} {len(hosts):>11} {np.mean(duties):>14.2f}")
-    print("-> fewer nodes, higher duty: freed nodes serve other users "
-          "(paper Fig 9)")
+    campaign = load_campaign(CAMPAIGN)
+    result = run_campaign(campaign, cells="low_duty/8g/*")
+    print(render_result(result,
+                        columns="cell,mode,nppn,tasks_done,throughput,"
+                                "speedup,gpu_duty,queue_wait_s"), end="")
+    controller = result.cell_row("low_duty/8g/controller")
+    print(f"-> the controller converged on NPPN={controller['nppn']} and "
+          f"delivered {controller['speedup']:.2f}x the fixed NPPN=1 "
+          "throughput (paper Figs 5-7): freed capacity, shorter queue")
 
 
 def measured_view():
@@ -62,25 +66,6 @@ def measured_view():
         print(f"{slots:>8} {tps:>9.1f} {tps / base:>8.2f}   {pred:.2f}x")
 
 
-def closed_loop_view():
-    print()
-    print("=" * 70)
-    print("3) Closed loop: OverloadController steps NPPN 1 -> 2 -> 4")
-    print("=" * 70)
-    ctl = OverloadController()
-    nppn, per_task = 1, 0.22
-    for it in range(5):
-        duty = min(1.0, per_task * nppn)
-        for _ in range(4):
-            ctl.observe(DeviceObservation(duty_cycle=duty, mem_used_gb=2.0,
-                                          mem_total_gb=32.0))
-        d = ctl.decide(nppn)
-        print(f"  iter {it}: duty={duty:.2f} NPPN {nppn} -> {d.nppn} "
-              f"({d.reason})")
-        nppn = d.nppn
-
-
 if __name__ == "__main__":
-    scheduler_view()
+    campaign_view()
     measured_view()
-    closed_loop_view()

@@ -140,6 +140,32 @@ class Scheduler:
         self.running.append(job)
         return True
 
+    # ------------------------------------------------------------- cancel
+    def cancel(self, job_id: int) -> Optional[Job]:
+        """Cancel a pending or running job (state ``CA``), freeing any
+        node slots it holds.  Returns the job, or ``None`` if ``job_id``
+        is not pending/running (already completed, or unknown).
+
+        This is the resubmission primitive the §V-B overloading loop
+        uses: the experiment runner cancels a user's jobs and resubmits
+        their specs at the controller's next NPPN level — work done so
+        far is lost, exactly like a real re-submission.
+        """
+        for i, job in enumerate(self.pending):
+            if job.job_id == job_id:
+                job.state = "CA"
+                return self.pending.pop(i)
+        for i, job in enumerate(self.running):
+            if job.job_id == job_id:
+                job.state = "CA"
+                self.running.pop(i)
+                for ns in self.nodes.values():
+                    ns.tasks = [t for t in ns.tasks if t.job_id != job_id]
+                    if ns.exclusive_job == job_id:
+                        ns.exclusive_job = None
+                return job
+        return None
+
     # ---------------------------------------------------------------- tick
     def tick(self, now: float):
         # completions

@@ -22,10 +22,14 @@ class ClusterSim:
         self.user_emails: Dict[str, str] = {}
 
     # ------------------------------------------------------------ control
-    def submit(self, spec: JobSpec) -> int:
+    def submit(self, spec: JobSpec, *, now: Optional[float] = None) -> int:
+        """Queue a job and return its id.  ``now`` overrides the recorded
+        submit time (default: the current sim clock) so arrival-driven
+        experiments can stamp a job with its nominal arrival time even
+        when submissions are batched between steps."""
         self.user_emails.setdefault(spec.username,
                                     f"{spec.username}@ll.mit.edu")
-        return self.sched.submit(spec, self.t).job_id
+        return self.sched.submit(spec, self.t if now is None else now).job_id
 
     def step(self, dt: float = 60.0):
         self.t += dt

@@ -7,6 +7,7 @@ Usage (mirrors the paper's flags, plus the streaming extensions):
                              [--filter EXPR] [--sort SPEC] [--columns LIST]
                              [--limit N] [--format FMT] [--table TABLE]
                              [--group-by COL]
+                             [--experiment FILE] [--cells PATTERNS]
                              [--source sim|live|jobs|archive|remote]
                              [--cluster NAME[,NAME]] [--archive-dir DIR]
                              [--url URL[,URL]]
@@ -37,6 +38,15 @@ streaming under ``--watch`` (where the insight engine accumulates
 persistence/hysteresis across frames); against ``--source remote`` it
 is answered server-side by the daemon's ``GET /insights`` from the
 daemon's full observation history.
+
+``--experiment FILE`` runs a declarative §V-B overloading campaign
+(DESIGN.md §9) — a fixed-NPPN × workload-mix × fleet sweep plus
+closed-loop controller cells — and renders the ``experiments`` results
+table through the same query flags.  ``--cells`` selects a subset of
+the grid by glob, ``--watch`` streams one progress frame per completed
+cell, and ``--source remote`` forwards the campaign to the daemon's
+``GET /experiments`` so the sweep runs (and caches) server-side with
+byte-identical output.
 """
 from __future__ import annotations
 
@@ -209,6 +219,96 @@ def _forward_remote(args, url: str, kind: str) -> int:
         return 0
 
 
+def _squelch_broken_pipe() -> None:
+    """Point stdout at /dev/null after a BrokenPipeError so the
+    interpreter's exit-time flush of the broken stream cannot print an
+    'Exception ignored' traceback."""
+    try:
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+    except (OSError, ValueError, AttributeError):
+        pass      # stdout is not a real fd (tests, embedding)
+
+
+def _run_experiment(args) -> int:
+    """The ``--experiment`` verb: load the campaign, validate the query
+    flags up front, then run locally (one progress frame per cell under
+    ``--watch``) or forward the canonical spec to a daemon's
+    ``GET /experiments`` (``--source remote``) and print its bytes."""
+    from repro.experiments import (CampaignError, CampaignRunner,
+                                   load_campaign, render_result)
+    from repro.query import Query
+
+    fmt = "table" if args.format == "text" else args.format
+    try:
+        campaign = load_campaign(args.experiment)
+        cells = campaign.select_cells(args.cells)
+        # fail on bad query flags before the (expensive) sweep runs
+        Query.from_params(table="experiments", columns=args.columns,
+                          filter=args.filter, sort=args.sort,
+                          group_by=args.group_by, limit=args.limit)
+    except (CampaignError, QueryError) as exc:
+        print(f"LLload: {exc}", file=sys.stderr)
+        return 1
+    except OSError as exc:
+        print(f"LLload: cannot read campaign {args.experiment!r}: {exc}",
+              file=sys.stderr)
+        return 1
+
+    if args.source == "remote":
+        from repro.daemon.client import RemoteClient, RemoteError
+        urls = [u.strip() for u in (args.url or "").split(",")
+                if u.strip()]
+        if len(urls) != 1:
+            print("LLload: --experiment --source remote needs exactly "
+                  "one --url (the campaign runs on that daemon)",
+                  file=sys.stderr)
+            return 1
+        try:
+            body = RemoteClient(urls[0]).experiments(
+                spec=campaign.spec_json(), cells=args.cells, format=fmt,
+                filter=args.filter, sort=args.sort, columns=args.columns,
+                group_by=args.group_by, limit=args.limit)
+            sys.stdout.write(body)
+            sys.stdout.flush()
+            return 0
+        except RemoteError as exc:
+            print(f"LLload: {exc}", file=sys.stderr)
+            return 1
+        except BrokenPipeError:
+            _squelch_broken_pipe()
+            return 0
+
+    runner = CampaignRunner(campaign, cells=cells)
+
+    def render(partial) -> str:
+        return render_result(partial, columns=args.columns,
+                             filter=args.filter, sort=args.sort,
+                             group_by=args.group_by, limit=args.limit,
+                             fmt=fmt)
+
+    try:
+        if args.watch:
+            done = []
+            for res in runner.run_iter():
+                done.append(res)
+                if not args.q:
+                    print(f"=== LLload campaign {campaign.name} | cell "
+                          f"{len(done)}/{len(runner.cells)} | "
+                          f"{res.cell} ===")
+                sys.stdout.write(render(runner.result(done)))
+                sys.stdout.flush()
+            return 0
+        sys.stdout.write(render(runner.run()))
+        sys.stdout.flush()
+        return 0
+    except QueryError as exc:
+        print(f"LLload: {exc}", file=sys.stderr)
+        return 1
+    except BrokenPipeError:
+        _squelch_broken_pipe()
+        return 0
+
+
 def _positive_int(s: str) -> int:
     try:
         v = int(s)
@@ -268,6 +368,12 @@ def main(argv=None) -> int:
     ap.add_argument("--group-by", default=None, dest="group_by",
                     metavar="COL", help="partition rows by a column "
                                         "(machine formats)")
+    ap.add_argument("--experiment", default=None, metavar="FILE",
+                    help="run a declarative overloading campaign (TOML) "
+                         "and render the experiments table")
+    ap.add_argument("--cells", default=None, metavar="GLOB[,GLOB]",
+                    help="with --experiment: run only matching cells "
+                         "(e.g. 'low_duty/*,mixed/8g/controller')")
     ap.add_argument("--source", default="sim",
                     choices=default_registry().names())
     ap.add_argument("--cluster", default=None, metavar="NAME[,NAME]",
@@ -303,6 +409,24 @@ def main(argv=None) -> int:
 
     prebuilt = None
     try:
+        if args.cells and not args.experiment:
+            raise QueryError("--cells selects campaign cells and needs "
+                             "--experiment FILE")
+        if args.experiment and (args.tsv or args.advise or args.table
+                                or args.t is not None
+                                or args.n is not None):
+            raise QueryError(
+                "--experiment renders the campaign's experiments table "
+                "and cannot combine with --tsv/--advise/--table/-t/-n "
+                "(query flags --filter/--sort/--columns/--limit/"
+                "--format/--group-by all apply)")
+        if args.experiment and args.watch and args.source == "remote":
+            raise QueryError(
+                "--experiment --watch streams local progress frames; a "
+                "remote campaign (GET /experiments) answers in one shot "
+                "— drop --watch or run without --source remote")
+        if args.experiment:
+            return _run_experiment(args)
         if args.tsv and (has_query_flags(args) or args.advise):
             raise QueryError(
                 "--tsv is the raw archive format and ignores query "
@@ -395,10 +519,7 @@ def main(argv=None) -> int:
         return 1
     except BrokenPipeError:
         # keep the interpreter's exit-time stdout flush from tracebacking
-        try:
-            os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
-        except (OSError, ValueError, AttributeError):
-            pass      # stdout is not a real fd (tests, embedding)
+        _squelch_broken_pipe()
         return 0
 
 

@@ -60,28 +60,38 @@ class RemoteClient:
 
     # ------------------------------------------------------------ endpoints
     def healthz(self) -> Dict[str, Any]:
+        """GET /healthz — liveness, source name, wire version, TTL."""
         return self._get_json("/healthz")
 
     def stats(self) -> Dict[str, Any]:
+        """GET /stats — bus / store / HTTP counters."""
         return self._get_json("/stats")
 
     def snapshot(self) -> ClusterSnapshot:
+        """GET /snapshot, decoded to a typed :class:`ClusterSnapshot`
+        (lossless: floats round-trip bit-for-bit)."""
         return protocol.decode_snapshot(self._get_json("/snapshot"))
 
     def trend(self, *, window_s: Optional[float] = None,
               tier: Optional[str] = None) -> Dict[str, Any]:
+        """GET /trend — downsampled min/mean/max series; ``window_s``
+        auto-selects the finest covering tier unless ``tier`` is set."""
         obj = self._get_json("/trend", {"window": window_s, "tier": tier})
         return protocol._check_envelope(obj, "trend")
 
     def weekly(self, *, start: Optional[float] = None,
                end: Optional[float] = None) -> Dict[str, Any]:
+        """GET /weekly — the §V-A weekly report from the store tiers."""
         obj = self._get_json("/weekly", {"start": start, "end": end})
         return protocol._check_envelope(obj, "weekly")
 
     def metrics_text(self) -> str:
+        """GET /metrics — the Prometheus text exposition, verbatim."""
         return self._get("/metrics").decode("utf-8")
 
     def view(self, kind: str, **query) -> str:
+        """GET /view/{kind} (user/top/nodes) with the query params
+        passed through verbatim; returns the rendered body."""
         return self._get(f"/view/{kind}", query).decode("utf-8")
 
     def query(self, **params) -> str:
@@ -94,6 +104,14 @@ class RemoteClient:
         advise view (DESIGN.md §8), answered from the daemon's
         streaming insight engine."""
         return self._get("/insights", params).decode("utf-8")
+
+    def experiments(self, **params) -> str:
+        """GET /experiments with the params passed through verbatim —
+        a §V-B overloading campaign run (and memoized) server-side
+        (DESIGN.md §9).  ``spec`` carries the canonical campaign JSON
+        (:meth:`repro.experiments.Campaign.spec_json`); ``cells`` and
+        the §7 query params shape the rendered table."""
+        return self._get("/experiments", params).decode("utf-8")
 
 
 class RemoteSource:
@@ -116,4 +134,5 @@ class RemoteSource:
         self.interval_hint = interval_hint
 
     def snapshot(self) -> ClusterSnapshot:
+        """One collection == one GET /snapshot round trip."""
         return self.client.snapshot()

@@ -46,10 +46,14 @@ class WireError(ValueError):
 # ------------------------------------------------------------------ encode
 
 def envelope(kind: str, payload: Any) -> Dict[str, Any]:
+    """Wrap ``payload`` in the versioned ``{"v", "kind", kind: ...}``
+    envelope every daemon response travels in."""
     return {"v": WIRE_VERSION, "kind": kind, kind: payload}
 
 
 def encode_snapshot(snap: ClusterSnapshot) -> Dict[str, Any]:
+    """A snapshot as its wire envelope (losslessly: every node, job,
+    email and float survives the round trip)."""
     payload = {
         "cluster": snap.cluster,
         "timestamp": snap.timestamp,
@@ -65,10 +69,12 @@ def encode_snapshot(snap: ClusterSnapshot) -> Dict[str, Any]:
 
 
 def encode_error(message: str, status: int = 500) -> Dict[str, Any]:
+    """An error payload in its wire envelope (HTTP error bodies)."""
     return envelope("error", {"message": message, "status": status})
 
 
 def dumps(obj: Any) -> bytes:
+    """Compact UTF-8 JSON bytes (the daemon's response encoding)."""
     return json.dumps(obj, separators=(",", ":")).encode("utf-8")
 
 
@@ -91,6 +97,8 @@ def _check_envelope(obj: Any, kind: str) -> Dict[str, Any]:
 
 
 def decode_snapshot(obj: Any) -> ClusterSnapshot:
+    """Decode a snapshot envelope back to a typed ClusterSnapshot;
+    unknown fields are ignored, malformed payloads raise WireError."""
     payload = _check_envelope(obj, "snapshot")
     try:
         nodes: Dict[str, NodeSnapshot] = {}
@@ -111,6 +119,7 @@ def decode_snapshot(obj: Any) -> ClusterSnapshot:
 
 
 def loads(data: bytes) -> Any:
+    """Parse response bytes as JSON; raises WireError when not JSON."""
     try:
         return json.loads(data.decode("utf-8"))
     except (UnicodeDecodeError, json.JSONDecodeError) as exc:

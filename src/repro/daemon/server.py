@@ -23,6 +23,9 @@ Endpoints (all GET):
                          from the daemon's incremental InsightEngine —
                          text by default, any registry format via
                          &format=, query params pass through verbatim
+    /experiments?spec=J  run a §V-B overloading campaign server-side
+                         (DESIGN.md §9) and render its experiments
+                         table; deterministic per spec, memoized
     /trend?window=S      downsampled series from the history store
     /weekly              weekly low/over-utilization report from tiers
     /healthz             liveness + wire version
@@ -57,16 +60,18 @@ JSON_CT = "application/json; charset=utf-8"
 TEXT_CT = "text/plain; charset=utf-8"
 
 # endpoints whose bytes may be reused within a TTL window (everything
-# derived purely from the current snapshot / store state)
+# derived purely from the current snapshot / store state; /experiments
+# is deterministic per spec and additionally memoized across windows)
 _CACHEABLE = ("/snapshot", "/query", "/view/", "/metrics", "/trend",
-              "/weekly", "/insights")
+              "/weekly", "/insights", "/experiments")
 
 # the fixed label vocabulary for the per-endpoint request counter:
 # arbitrary client paths must not mint new Prometheus label values (label
 # injection + unbounded counter growth), so anything else counts as other
 _KNOWN_ENDPOINTS = frozenset([
     "/snapshot", "/query", "/view/user", "/view/top", "/view/nodes",
-    "/insights", "/trend", "/weekly", "/healthz", "/stats", "/metrics",
+    "/insights", "/experiments", "/trend", "/weekly", "/healthz",
+    "/stats", "/metrics",
 ])
 
 
@@ -104,9 +109,19 @@ class LLloadDaemon:
         # endpoint byte-cache: key -> (expires_monotonic, status, ct, body)
         self._cache: Dict[str, Tuple[float, int, str, bytes]] = {}
         self._build_locks: Dict[str, threading.Lock] = {}
+        # campaign results survive TTL expiry: a campaign is seeded and
+        # deterministic, so re-running one on every cache window would be
+        # pure waste — keyed by (spec JSON, cells), small FIFO, with a
+        # per-key run lock (the byte-cache's single-flight keys on the
+        # full query string, so format=table and format=csv of the same
+        # campaign would otherwise run the sweep twice)
+        self._experiment_memo: Dict[Tuple[str, str], object] = {}
+        self._experiment_locks: Dict[Tuple[str, str], threading.Lock] = {}
 
     # ----------------------------------------------------------- lifecycle
     def start_sampler(self, interval_s: Optional[float] = None):
+        """Start the bus's background sampler (default period: the
+        source's interval hint, else the TTL)."""
         self.bus.start(interval_s)
 
     def backfill(self, archive_or_snaps) -> int:
@@ -122,10 +137,13 @@ class LLloadDaemon:
         return n
 
     def close(self):
+        """Stop the background sampler (idempotent)."""
         self.bus.stop()
 
     # ------------------------------------------------------------ counters
     def counters(self) -> Dict[str, float]:
+        """HTTP + bus counters in Prometheus sample-name form (the
+        ``/stats`` payload and ``/metrics`` counter section)."""
         with self._lock:
             out = {f'requests_total{{endpoint="{ep}"}}': float(n)
                    for ep, n in self._requests.items()}
@@ -274,6 +292,8 @@ class LLloadDaemon:
             return self._query(query)
         if path == "/insights":
             return self._insights(query)
+        if path == "/experiments":
+            return self._experiments(query)
         if path.startswith("/view/"):
             return self._view(path[len("/view/"):], query)
         raise HTTPError(404, f"unknown endpoint {path!r}")
@@ -325,6 +345,63 @@ class LLloadDaemon:
         except QueryError as exc:
             raise HTTPError(400, str(exc)) from exc
         return 200, TEXT_CT, (text + "\n").encode("utf-8")
+
+    def _experiments(self, query: Dict[str, str]
+                     ) -> Tuple[int, str, bytes]:
+        """Run (or recall) a §V-B overloading campaign server-side
+        (DESIGN.md §9): ``?spec=`` carries the canonical campaign JSON
+        the CLI's ``--experiment --source remote`` forwards, ``?cells=``
+        the grid subset, and the §7 query params shape the rendered
+        ``experiments`` table.  Results are memoized per (spec, cells) —
+        campaigns are deterministic — so only the first reader pays for
+        the sweep."""
+        import json
+
+        from repro.experiments import (CampaignError, CampaignRunner,
+                                       campaign_from_dict, render_result)
+
+        spec = query.get("spec")
+        if not spec:
+            raise HTTPError(400, "/experiments requires ?spec=JSON (the "
+                            "canonical campaign the CLI forwards; see "
+                            "Campaign.spec_json)")
+        cells = query.get("cells") or ""
+        key = (spec, cells)
+        with self._lock:
+            run_lock = self._experiment_locks.setdefault(
+                key, threading.Lock())
+        with run_lock:
+            # single-flight per campaign: whoever got here first ran it
+            with self._lock:
+                result = self._experiment_memo.get(key)
+            if result is None:
+                try:
+                    campaign = campaign_from_dict(json.loads(spec))
+                    selected = campaign.select_cells(cells or None)
+                except (CampaignError, json.JSONDecodeError) as exc:
+                    with self._lock:
+                        self._experiment_locks.pop(key, None)
+                    raise HTTPError(400,
+                                    f"bad campaign spec: {exc}") from exc
+                result = CampaignRunner(campaign, cells=selected).run()
+                with self._lock:
+                    while len(self._experiment_memo) >= 8:
+                        evicted = next(iter(self._experiment_memo))
+                        self._experiment_memo.pop(evicted)
+                        self._experiment_locks.pop(evicted, None)
+                    self._experiment_memo[key] = result
+        fmt = query.get("format") or "table"
+        try:
+            renderer = get_renderer("table" if fmt == "text" else fmt)
+            body = render_result(
+                result, columns=query.get("columns"),
+                filter=query.get("filter"), sort=query.get("sort"),
+                group_by=query.get("group_by"),
+                limit=_int_q(query, "limit", default=None),
+                fmt=renderer.name)
+        except QueryError as exc:
+            raise HTTPError(400, str(exc)) from exc
+        return 200, renderer.content_type, body.encode("utf-8")
 
     def _view(self, kind: str, query: Dict[str, str]
               ) -> Tuple[int, str, bytes]:
@@ -432,6 +509,8 @@ def serve(daemon: LLloadDaemon, *, host: str = "127.0.0.1",
 
 def serve_background(daemon: LLloadDaemon, *, host: str = "127.0.0.1",
                      port: int = 0) -> Tuple[DaemonServer, threading.Thread]:
+    """Bind and serve on a daemon thread; returns (server, thread) so
+    tests/benchmarks can shut it down deterministically."""
     server = serve(daemon, host=host, port=port)
     thread = threading.Thread(target=server.serve_forever,
                               name="llload-daemon", daemon=True)
@@ -445,6 +524,9 @@ def serve_background(daemon: LLloadDaemon, *, host: str = "127.0.0.1",
 
 
 def main(argv=None) -> int:
+    """``python -m repro.daemon``: build the selected source, optionally
+    backfill the history store from a TSV archive, start the sampler,
+    and serve until SIGTERM/SIGINT."""
     from repro.core.cli import _positive_float
     from repro.monitor import default_registry
 

@@ -51,12 +51,14 @@ class Agg:
     n: int = 0
 
     def fold(self, v: float):
+        """Absorb one value (incremental mean, running min/max)."""
         self.min = min(self.min, v)
         self.max = max(self.max, v)
         self.mean += (v - self.mean) / (self.n + 1)
         self.n += 1
 
     def to_wire(self) -> Dict[str, float]:
+        """The aggregate as its ``/trend`` wire dict."""
         return {"min": self.min, "mean": self.mean, "max": self.max}
 
 
@@ -81,6 +83,8 @@ class TierPoint:
         dataclasses.field(default_factory=dict)
 
     def fold(self, summary: "_Summary", *, representative: bool):
+        """Absorb one snapshot summary; ``representative`` marks the
+        bucket's flag-carrying snapshot (the archive-cadence view)."""
         for f in _AGG_FIELDS:
             getattr(self, f).fold(getattr(summary, f))
         if representative or not self.user_flags:
@@ -88,6 +92,8 @@ class TierPoint:
         self.count += 1
 
     def to_wire(self) -> Dict[str, object]:
+        """The bucket as one ``/trend`` point (``t``, ``count``, plus
+        min/mean/max per aggregated field)."""
         out: Dict[str, object] = {"t": self.bucket_start, "count": self.count}
         for f in _AGG_FIELDS:
             out[f] = getattr(self, f).to_wire()
@@ -109,6 +115,8 @@ class _Summary:
 
 def summarize(snap: ClusterSnapshot,
               low_threshold: Optional[float] = None) -> _Summary:
+    """Reduce one snapshot to the cluster-level scalars + per-user
+    utilization flags the tiers fold (computed once per append)."""
     from repro.core.analysis import LOW_THRESHOLD
 
     low = LOW_THRESHOLD if low_threshold is None else low_threshold
@@ -216,6 +224,9 @@ class HistoryStore:
 
     # ------------------------------------------------------------- writes
     def append(self, snap: ClusterSnapshot):
+        """Absorb one snapshot: raw ring + every downsampling tier
+        (out-of-order snapshots are dropped from tiers, counted in
+        :meth:`sizes`)."""
         summary = summarize(snap, self._low)
         with self._lock:
             self._raw.append(snap)
@@ -241,9 +252,12 @@ class HistoryStore:
 
     # -------------------------------------------------------------- reads
     def tier_names(self) -> List[str]:
+        """``raw`` plus every downsampling tier name, finest first."""
         return ["raw"] + [t.spec.name for t in self._tiers]
 
     def sizes(self) -> Dict[str, int]:
+        """Occupancy per tier plus append / out-of-order-drop counters
+        (the ``/stats`` store section)."""
         with self._lock:
             out = {"raw": len(self._raw), "appended": self._appended,
                    "out_of_order_dropped": self._out_of_order}
@@ -252,11 +266,14 @@ class HistoryStore:
             return out
 
     def raw(self) -> List[ClusterSnapshot]:
+        """The raw snapshot ring, oldest first."""
         with self._lock:
             return list(self._raw)
 
     def points(self, tier: str,
                window_s: Optional[float] = None) -> List[TierPoint]:
+        """``tier``'s buckets (optionally only the trailing
+        ``window_s``); raises KeyError for unknown tier names."""
         with self._lock:
             for t in self._tiers:
                 if t.spec.name == tier:
@@ -286,6 +303,8 @@ class HistoryStore:
 
     def trend_wire(self, tier: str,
                    window_s: Optional[float] = None) -> Dict[str, object]:
+        """The ``/trend`` payload for ``tier``: ``{"tier", "points"}``
+        (raw snapshots summarize on the fly into one-count points)."""
         if tier == "raw":
             with self._lock:
                 raw = list(self._raw)

@@ -1,0 +1,25 @@
+"""repro.experiments — declarative §V-B overloading campaigns (DESIGN.md §9).
+
+A typed :class:`Scenario` + :class:`Campaign` sweep grid (NPPN ladder ×
+workload mix × fleet size, plus closed-loop controller cells) runs the
+paper's GPU-overloading experiment end to end: the
+:class:`CampaignRunner` drives a fresh cluster sim through the
+TelemetryBus, streams snapshots to the insight engine, closes the
+diagnose→act loop via ``OverloadController.consume`` + scheduler
+resubmission, and folds the window into one ``experiments``-table row
+per cell — queryable through every §7 surface (CLI ``--experiment``,
+``GET /experiments``, any renderer).
+"""
+from repro.experiments.runner import (CampaignResult, CampaignRunner,
+                                      CellResult, render_result, run_campaign,
+                                      run_cell)
+from repro.experiments.spec import (MIXES, Campaign, CampaignError, Cell,
+                                    MixJob, Scenario, campaign_from_dict,
+                                    load_campaign, loads_toml, mix_names)
+
+__all__ = [
+    "Campaign", "CampaignError", "CampaignResult", "CampaignRunner",
+    "Cell", "CellResult", "MIXES", "MixJob", "Scenario",
+    "campaign_from_dict", "load_campaign", "loads_toml", "mix_names",
+    "render_result", "run_campaign", "run_cell",
+]

@@ -1,0 +1,287 @@
+"""Campaign runner — reproduces the paper's §V-B overloading experiment.
+
+Each cell builds a fresh :class:`~repro.cluster.simulator.ClusterSim`
+fleet, registers it on a :class:`~repro.monitor.bus.TelemetryBus`, and
+steps simulated time; every step one snapshot flows through the bus to
+a streaming :class:`~repro.insights.engine.InsightEngine`.  In
+``fixed`` mode the cell's NPPN is applied to every overloadable
+arrival; in ``controller`` mode the loop closes live — a firing
+``low_gpu`` insight feeds :meth:`~repro.core.overload.
+OverloadController.consume`, and a level change cancels + resubmits
+that user's jobs at the new NPPN (the paper's ladder, 1 → 2 → 4 → 8,
+driven by diagnosis instead of by hand).
+
+Snapshots fold into one :class:`CellResult` per cell (throughput in
+tasks/hr, mean GPU duty, device-memory headroom, queue wait, active-
+insight observations); :class:`CampaignResult.rows` adds the per-cell
+speedup against the matching fixed ``nppn1`` baseline and feeds the §7
+``experiments`` query table, so every renderer / filter / sort works on
+campaign output — locally, in ``--watch`` progress frames, and
+server-side via the daemon's ``GET /experiments``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence
+
+from repro.experiments.spec import (MIXES, Campaign, Cell, MixJob,
+                                    Scenario)
+
+
+@dataclasses.dataclass(frozen=True)
+class CellResult:
+    """Folded measurements for one completed cell (one table row)."""
+    cell: str                   # cell name (mix/<fleet>g/nppnN|controller)
+    mode: str                   # fixed | controller
+    mix: str
+    fleet: int                  # GPU nodes
+    nppn: int                   # fixed level, or the converged level
+    tasks_done: int             # tasks of jobs completed in the window
+    throughput: float           # tasks_done per hour
+    gpu_duty: float             # mean device duty over in-use GPU nodes
+    mem_headroom: float         # mean free device-memory fraction
+    queue_wait_s: float         # mean submit->start wait
+    insights: int               # active insights summed over snapshots
+    seed: int
+
+    def row(self) -> dict:
+        """This result as an ``experiments``-table row (``speedup`` is
+        filled in by :meth:`CampaignResult.rows`)."""
+        return {
+            "cell": self.cell, "mode": self.mode, "mix": self.mix,
+            "fleet": self.fleet, "nppn": self.nppn,
+            "tasks_done": self.tasks_done, "throughput": self.throughput,
+            "speedup": None, "gpu_duty": self.gpu_duty,
+            "mem_headroom": self.mem_headroom,
+            "queue_wait_s": self.queue_wait_s, "insights": self.insights,
+            "seed": self.seed,
+        }
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    """Results for the cells run so far (possibly a partial campaign
+    while ``--watch`` streams progress frames)."""
+    campaign: Campaign
+    results: List[CellResult]
+
+    def rows(self) -> List[dict]:
+        """Table rows in cell order, with ``speedup`` computed against
+        the same (mix, fleet) fixed ``nppn1`` cell — ``None`` when that
+        baseline is absent (not selected, or not yet run)."""
+        base: Dict[tuple, float] = {}
+        for r in self.results:
+            if r.mode == "fixed" and r.nppn == 1 and r.throughput > 0:
+                base[(r.mix, r.fleet)] = r.throughput
+        rows = []
+        for r in self.results:
+            row = r.row()
+            b = base.get((r.mix, r.fleet))
+            row["speedup"] = (r.throughput / b) if b else None
+            rows.append(row)
+        return rows
+
+    def cell_row(self, name: str) -> Optional[dict]:
+        """The row for one cell name, or ``None`` if it was not run."""
+        for row in self.rows():
+            if row["cell"] == name:
+                return row
+        return None
+
+
+class CampaignRunner:
+    """Run a campaign's cells in grid order, one fresh sim per cell."""
+
+    def __init__(self, campaign: Campaign,
+                 cells: Optional[Sequence[Cell]] = None):
+        """Args:
+            campaign: the validated sweep definition.
+            cells: subset to run (e.g. from
+                :meth:`Campaign.select_cells`); default: every cell.
+        """
+        self.campaign = campaign
+        self.cells = list(cells) if cells is not None else campaign.cells()
+
+    def run_iter(self) -> Iterator[CellResult]:
+        """Yield each cell's result as it completes (powers ``--watch``
+        progress frames)."""
+        for cell in self.cells:
+            yield run_cell(cell)
+
+    def run(self) -> CampaignResult:
+        """Run every selected cell and return the full result."""
+        return CampaignResult(self.campaign, list(self.run_iter()))
+
+    def result(self, done: Sequence[CellResult]) -> CampaignResult:
+        """A (partial) :class:`CampaignResult` over ``done`` cells."""
+        return CampaignResult(self.campaign, list(done))
+
+
+# ----------------------------------------------------------------- one cell
+
+
+def _build_spec(mj: MixJob, sc: Scenario, nppn: int):
+    """One arrival's JobSpec: the mix factory's job with the scenario's
+    task count/duration, at ``nppn`` tasks-per-GPU when overloadable."""
+    from repro.cluster import workloads
+
+    spec = getattr(workloads, mj.factory)(mj.username,
+                                          tasks=sc.tasks_per_job)
+    return dataclasses.replace(
+        spec, duration_s=sc.task_duration_s,
+        tasks_per_gpu=(nppn if mj.overloadable else spec.tasks_per_gpu))
+
+
+def _resubmit_user(sim, username: str, nppn: int) -> int:
+    """The closed loop's actuator: cancel every pending/running job of
+    ``username`` and resubmit its spec at ``nppn`` tasks-per-GPU (work
+    done so far is lost, like a real resubmission).  Returns the number
+    of jobs requeued."""
+    sched = sim.sched
+    requeue = [j for j in list(sched.pending) + list(sched.running)
+               if j.spec.username == username]
+    for job in requeue:
+        sched.cancel(job.job_id)
+    for job in requeue:
+        sim.submit(dataclasses.replace(job.spec, tasks_per_gpu=nppn))
+    return len(requeue)
+
+
+def run_cell(cell: Cell) -> CellResult:
+    """Run one cell start to finish and fold its measurements.
+
+    The sim is driven *through the bus*: every ``dt_s`` step is one
+    ``bus.poll`` (advancing simulated time and ticking the scheduler),
+    whose snapshot streams to the insight engine exactly as the daemon's
+    sampler would.  Deterministic: same cell + seed ⇒ identical result.
+    """
+    from repro.cluster.node import make_nodes
+    from repro.cluster.simulator import ClusterSim
+    from repro.core.overload import OverloadController
+    from repro.insights import InsightEngine
+    from repro.monitor import TelemetryBus
+
+    sc = cell.scenario
+    nodes = (make_nodes("d", sc.n_cpu, cores=48, mem_gb=192.0)
+             + make_nodes("c", sc.n_gpu, cores=40, mem_gb=384.0, gpus=2,
+                          gpu_mem_gb=32.0))
+    sim = ClusterSim(nodes, cluster="exp", seed=sc.seed)
+    source = sim.as_source(advance_s=sc.dt_s, name="exp")
+    bus = TelemetryBus(ttl_s=0.0, history=8)
+    bus.register(source)
+    engine = InsightEngine()
+    bus.subscribe(engine.subscriber(source.name))
+
+    mix = MIXES[sc.mix]
+    levels = {mj.username: (cell.nppn if mj.overloadable else 1)
+              for mj in mix}
+    controllers = {}
+    if cell.mode == "controller":
+        controllers = {mj.username: OverloadController()
+                       for mj in mix if mj.overloadable}
+
+    duty_sum = head_sum = 0.0
+    duty_polls = 0
+    insight_obs = 0
+    submitted = 0
+    while True:
+        while (submitted < sc.n_jobs
+               and submitted * sc.arrival_s <= sim.t + 1e-9):
+            mj = mix[submitted % len(mix)]
+            sim.submit(_build_spec(mj, sc, levels[mj.username]),
+                       now=submitted * sc.arrival_s)
+            submitted += 1
+        if sim.t >= sc.duration_s - 1e-9:
+            break
+        snap = bus.poll(source.name)
+        gpu_nodes = [n for n in snap.nodes.values()
+                     if n.gpus_total > 0 and n.gpus_used > 0]
+        if gpu_nodes:
+            duty_sum += (sum(n.gpu_load for n in gpu_nodes)
+                         / len(gpu_nodes))
+            head_sum += (sum(n.gpu_mem_free_gb / n.gpu_mem_total_gb
+                             for n in gpu_nodes) / len(gpu_nodes))
+            duty_polls += 1
+        active = engine.active()
+        insight_obs += len(active)
+        for ins in active:
+            ctl = controllers.get(ins.username)
+            if ctl is None or ins.kind != "low_gpu":
+                continue
+            if ins.last_seen < snap.timestamp:
+                # hysteresis keeps a clearing insight active for a few
+                # frames; only a *firing* diagnosis drives the ladder
+                continue
+            cur = levels[ins.username]
+            decision = ctl.consume(ins, cur)
+            if decision.nppn != cur:
+                levels[ins.username] = decision.nppn
+                _resubmit_user(sim, ins.username, decision.nppn)
+
+    completed = sim.sched.completed
+    tasks_done = sum(j.spec.n_tasks for j in completed)
+    started = [j for j in list(completed) + list(sim.sched.running)
+               if j.start_time is not None]
+    queue_wait = (sum(j.start_time - j.submit_time for j in started)
+                  / len(started)) if started else 0.0
+    over_levels = [levels[mj.username] for mj in mix if mj.overloadable]
+    return CellResult(
+        cell=cell.name, mode=cell.mode, mix=sc.mix, fleet=sc.n_gpu,
+        nppn=(max(over_levels) if over_levels else cell.nppn),
+        tasks_done=tasks_done,
+        throughput=tasks_done / (sc.duration_s / 3600.0),
+        gpu_duty=(duty_sum / duty_polls) if duty_polls else 0.0,
+        mem_headroom=(head_sum / duty_polls) if duty_polls else 0.0,
+        queue_wait_s=queue_wait, insights=insight_obs, seed=sc.seed)
+
+
+def run_campaign(campaign: Campaign,
+                 cells: Optional[str] = None) -> CampaignResult:
+    """One-call convenience: select cells by pattern and run them.
+
+    Args:
+        campaign: the sweep definition.
+        cells: optional comma-separated cell globs (``--cells`` form).
+
+    Returns:
+        The full :class:`CampaignResult`.
+    """
+    return CampaignRunner(campaign,
+                          campaign.select_cells(cells)).run()
+
+
+def render_result(result: CampaignResult, *,
+                  columns: Optional[str] = None,
+                  filter: Optional[str] = None,  # noqa: A002 — CLI name
+                  sort: Optional[str] = None,
+                  group_by: Optional[str] = None,
+                  limit: Optional[int] = None,
+                  fmt: str = "table") -> str:
+    """Render a campaign result through the §7 query engine.
+
+    The one rendering path shared by the CLI and the daemon's
+    ``GET /experiments`` — which is what makes ``--source remote``
+    output byte-identical to a local run of the same campaign.
+
+    Args:
+        result: the (possibly partial) campaign result.
+        columns/filter/sort/group_by/limit: the generic query modifiers
+            in their CLI string forms.
+        fmt: a registry renderer name (``text`` aliases ``table``: the
+            experiments table has no legacy paper layout).
+
+    Returns:
+        The rendered table, newline-terminated.
+
+    Raises:
+        QueryError: on unknown columns/filters/formats.
+    """
+    from repro.query import Query, get_renderer, run_query
+
+    q = Query.from_params(table="experiments", columns=columns,
+                          filter=filter, sort=sort, group_by=group_by,
+                          limit=limit)
+    renderer = get_renderer("table" if fmt in (None, "", "text") else fmt)
+    rs = run_query(None, q, experiments=result)
+    rs.cluster = result.campaign.name
+    return renderer.render(rs)

@@ -1,0 +1,485 @@
+"""Declarative experiment campaigns — the §V-B overloading sweep, typed.
+
+A :class:`Scenario` describes one simulated experiment: the node fleet,
+a named workload mix (factories from :mod:`repro.cluster.workloads`),
+the arrival pattern, the window, and the seed.  A :class:`Campaign`
+sweeps a grid of cells over that scenario — the NPPN ladder × workload
+mix × fleet size, plus an optional ``controller`` cell per (mix, fleet)
+where the closed loop (InsightEngine → OverloadController → scheduler
+resubmission) picks the level live instead of a fixed NPPN.
+
+Campaigns load from a TOML file (``load_campaign``) or a plain dict
+(``campaign_from_dict``); :meth:`Campaign.spec_json` is the canonical
+JSON form the CLI forwards to a daemon's ``GET /experiments`` so remote
+runs are byte-identical to local ones.
+
+Only a small, fully documented TOML subset is parsed (this repo is
+dependency-free and the interpreter predates :mod:`tomllib`):
+``[section]`` headers and ``key = value`` lines where a value is a
+double-quoted string (no escapes), an integer, a float, ``true`` /
+``false``, or a one-line array of those scalars.  ``#`` comments are
+allowed anywhere outside a string.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class CampaignError(ValueError):
+    """A campaign file / spec is malformed (bad TOML, unknown mix, ...)."""
+
+
+# Upper bounds a validated campaign may not exceed.  Campaign specs are
+# client-controlled input to the daemon's GET /experiments: without
+# ceilings, one request (duration_s=1e12, or fleets=[10**6]) would pin a
+# request thread's CPU/memory indefinitely.  The caps are far above any
+# sensible experiment (the reference campaign uses 36 steps, 8 nodes,
+# 16 cells) yet keep the worst accepted spec bounded.
+MAX_STEPS_PER_CELL = 10_000          # duration_s / dt_s
+MAX_FLEET_NODES = 4_096              # n_cpu + n_gpu per cell
+MAX_JOBS = 10_000                    # n_jobs per cell
+MAX_TASKS_PER_JOB = 1_024
+MAX_NPPN = 64
+MAX_CELLS = 256                      # grid size
+
+
+# ------------------------------------------------------------- workload mixes
+
+
+@dataclasses.dataclass(frozen=True)
+class MixJob:
+    """One arrival stream inside a workload mix.
+
+    ``factory`` names a job factory in :mod:`repro.cluster.workloads`
+    (called as ``factory(username, tasks=N)``); ``overloadable`` marks
+    the stream whose ``tasks_per_gpu`` the sweep / controller drives —
+    high-duty streams keep their own NPPN (overloading a saturated job
+    is exactly what the paper warns against).
+    """
+    factory: str
+    username: str
+    overloadable: bool = False
+
+
+#: Named workload mixes a scenario can reference.  Arrivals round-robin
+#: over the mix's streams in order.
+MIXES: Dict[str, Tuple[MixJob, ...]] = {
+    # Fig 7's remediation target: low GPU duty (0.35), tiny GPU memory.
+    "low_duty": (MixJob("overloaded_gpu_job", "exp00", overloadable=True),),
+    # Low-duty stream interleaved with a well-utilized training stream
+    # (whole-node policy keeps the two users on disjoint nodes).
+    "mixed": (MixJob("overloaded_gpu_job", "exp00", overloadable=True),
+              MixJob("ml_training_job", "exp01")),
+    # Control: high-duty training only — overloading has nothing to win.
+    "high_duty": (MixJob("ml_training_job", "exp01"),),
+}
+
+
+def mix_names() -> List[str]:
+    """Names of the registered workload mixes, sorted."""
+    return sorted(MIXES)
+
+
+# ------------------------------------------------------------------ scenario
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One experiment setup: fleet, workload, arrivals, window, seed.
+
+    ``n_jobs`` jobs of ``tasks_per_job`` tasks arrive one every
+    ``arrival_s`` seconds starting at t=0, each task running
+    ``task_duration_s``; the sim advances in ``dt_s`` steps for
+    ``duration_s`` seconds, snapshotting (through the TelemetryBus)
+    once per step.
+    """
+    mix: str = "low_duty"
+    n_cpu: int = 0                  # CPU-only nodes in the fleet
+    n_gpu: int = 8                  # GPU nodes (2 devices each)
+    duration_s: float = 10800.0     # simulated window
+    dt_s: float = 300.0             # sim step == snapshot cadence
+    n_jobs: int = 24
+    tasks_per_job: int = 8
+    arrival_s: float = 300.0        # one job arrives every arrival_s
+    task_duration_s: float = 1800.0
+    seed: int = 0
+
+    def validate(self) -> "Scenario":
+        """Check field ranges and the mix name; returns self.
+
+        Raises:
+            CampaignError: on any out-of-range field or unknown mix.
+        """
+        if self.mix not in MIXES:
+            raise CampaignError(f"unknown workload mix {self.mix!r}; "
+                                "valid mixes: " + ", ".join(mix_names()))
+        for field in ("duration_s", "dt_s", "arrival_s", "task_duration_s"):
+            if getattr(self, field) <= 0:
+                raise CampaignError(f"scenario.{field} must be > 0, got "
+                                    f"{getattr(self, field)}")
+        for field in ("n_gpu", "n_jobs", "tasks_per_job"):
+            if getattr(self, field) < 1:
+                raise CampaignError(f"scenario.{field} must be >= 1, got "
+                                    f"{getattr(self, field)}")
+        if self.n_cpu < 0:
+            raise CampaignError(f"scenario.n_cpu must be >= 0, got "
+                                f"{self.n_cpu}")
+        if self.dt_s > self.duration_s:
+            raise CampaignError("scenario.dt_s exceeds duration_s: the "
+                                "window would contain no snapshots")
+        if self.duration_s / self.dt_s > MAX_STEPS_PER_CELL:
+            raise CampaignError(
+                f"scenario window is {self.duration_s / self.dt_s:.0f} "
+                f"steps; the cap is {MAX_STEPS_PER_CELL} (raise dt_s or "
+                "shrink duration_s)")
+        if self.n_cpu + self.n_gpu > MAX_FLEET_NODES:
+            raise CampaignError(
+                f"fleet of {self.n_cpu + self.n_gpu} nodes exceeds the "
+                f"{MAX_FLEET_NODES}-node cap")
+        if self.n_jobs > MAX_JOBS:
+            raise CampaignError(
+                f"scenario.n_jobs {self.n_jobs} exceeds the cap "
+                f"{MAX_JOBS}")
+        if self.tasks_per_job > MAX_TASKS_PER_JOB:
+            raise CampaignError(
+                f"scenario.tasks_per_job {self.tasks_per_job} exceeds "
+                f"the cap {MAX_TASKS_PER_JOB}")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One point of the sweep grid.
+
+    ``mode`` is ``fixed`` (every overloadable arrival uses ``nppn``
+    tasks-per-GPU for the whole window) or ``controller`` (arrivals
+    start at NPPN=1 and the closed loop steps the level from live
+    insights).  ``name`` is ``mix/<fleet>g/nppn<N>`` or
+    ``mix/<fleet>g/controller``.
+    """
+    name: str
+    scenario: Scenario
+    mode: str = "fixed"             # "fixed" | "controller"
+    nppn: int = 1                   # fixed level (controller starts at 1)
+
+
+# ------------------------------------------------------------------ campaign
+
+
+@dataclasses.dataclass(frozen=True)
+class Campaign:
+    """A sweep grid over one scenario: NPPN ladder × mixes × fleets.
+
+    ``controller=True`` adds one closed-loop cell per (mix, fleet) next
+    to the fixed-NPPN ladder — the fixed ``nppn=1`` cell is the speedup
+    baseline the results table reports against.
+    """
+    name: str = "campaign"
+    scenario: Scenario = Scenario()
+    mixes: Tuple[str, ...] = ("low_duty",)
+    nppn: Tuple[int, ...] = (1, 2, 4)
+    fleets: Tuple[int, ...] = (8,)
+    controller: bool = True
+    seed: int = 0
+
+    def validate(self) -> "Campaign":
+        """Check the sweep axes and every cell's scenario; returns self.
+
+        Raises:
+            CampaignError: on empty axes, bad ladder values, or any
+                scenario validation failure.
+        """
+        if not self.name:
+            raise CampaignError("campaign.name must be non-empty")
+        if not self.mixes:
+            raise CampaignError("sweep.mixes must name >= 1 mix")
+        if not self.nppn and not self.controller:
+            raise CampaignError("sweep needs an nppn ladder and/or "
+                                "controller = true")
+        for n in self.nppn:
+            if not 1 <= n <= MAX_NPPN:
+                raise CampaignError(f"sweep.nppn values must be in "
+                                    f"1..{MAX_NPPN}, got {n}")
+        if not self.fleets:
+            raise CampaignError("sweep.fleets must name >= 1 fleet size")
+        cells = self.cells()
+        if len(cells) > MAX_CELLS:
+            raise CampaignError(
+                f"sweep grid has {len(cells)} cells; the cap is "
+                f"{MAX_CELLS} (select fewer mixes/fleets/nppn levels)")
+        for cell in cells:
+            cell.scenario.validate()
+        return self
+
+    # -------------------------------------------------------------- grid
+    def cells(self) -> List[Cell]:
+        """Materialize the grid, in deterministic sweep order: for each
+        mix, for each fleet, the fixed ladder then the controller cell."""
+        out: List[Cell] = []
+        for mix in self.mixes:
+            for fleet in self.fleets:
+                sc = dataclasses.replace(self.scenario, mix=mix,
+                                         n_gpu=fleet, seed=self.seed)
+                for n in self.nppn:
+                    out.append(Cell(f"{mix}/{fleet}g/nppn{n}", sc,
+                                    mode="fixed", nppn=n))
+                if self.controller:
+                    out.append(Cell(f"{mix}/{fleet}g/controller", sc,
+                                    mode="controller", nppn=1))
+        return out
+
+    def select_cells(self, patterns: Optional[str]) -> List[Cell]:
+        """Cells matching a comma-separated glob list (``--cells``).
+
+        Args:
+            patterns: e.g. ``"low_duty/*,mixed/8g/controller"``;
+                ``None``/empty selects every cell.
+
+        Returns:
+            Matching cells in grid order.
+
+        Raises:
+            CampaignError: when a pattern matches no cell (the message
+                lists the valid cell names).
+        """
+        cells = self.cells()
+        if not patterns or not patterns.strip():
+            return cells
+        globs = [p.strip() for p in patterns.split(",") if p.strip()]
+        selected: List[Cell] = []
+        for g in globs:
+            hits = [c for c in cells if fnmatch.fnmatchcase(c.name, g)]
+            if not hits:
+                raise CampaignError(
+                    f"--cells pattern {g!r} matches no cell; cells: "
+                    + ", ".join(c.name for c in cells))
+            for c in hits:
+                if c not in selected:
+                    selected.append(c)
+        selected.sort(key=lambda c: cells.index(c))
+        return selected
+
+    # ------------------------------------------------------------- codec
+    def to_dict(self) -> dict:
+        """The campaign as the same three-section dict the TOML file
+        uses (``campaign`` / ``scenario`` / ``sweep``)."""
+        sc = dataclasses.asdict(self.scenario)
+        sc.pop("mix")               # swept axes live in [sweep]
+        sc.pop("n_gpu")
+        sc.pop("seed")
+        return {
+            "campaign": {"name": self.name, "seed": self.seed},
+            "scenario": sc,
+            "sweep": {"mixes": list(self.mixes), "nppn": list(self.nppn),
+                      "fleets": list(self.fleets),
+                      "controller": self.controller},
+        }
+
+    def spec_json(self) -> str:
+        """Canonical JSON of :meth:`to_dict` — sorted keys, no spaces —
+        the wire form ``--source remote`` forwards to /experiments."""
+        return json.dumps(self.to_dict(), sort_keys=True,
+                          separators=(",", ":"))
+
+
+def campaign_from_dict(data: dict) -> Campaign:
+    """Build and validate a :class:`Campaign` from the three-section
+    dict form (the TOML file's shape, or a decoded :meth:`spec_json`).
+
+    Raises:
+        CampaignError: on unknown sections/keys, wrong value types, or
+            any validation failure.
+    """
+    if not isinstance(data, dict):
+        raise CampaignError(f"campaign spec must be a table, got "
+                            f"{type(data).__name__}")
+    unknown = set(data) - {"campaign", "scenario", "sweep"}
+    if unknown:
+        raise CampaignError("unknown campaign section(s): "
+                            + ", ".join(sorted(map(str, unknown)))
+                            + " (valid: campaign, scenario, sweep)")
+
+    def section(name: str) -> dict:
+        sec = data.get(name, {})
+        if not isinstance(sec, dict):
+            raise CampaignError(f"[{name}] must be a table")
+        return dict(sec)
+
+    def take(sec: dict, secname: str, key: str, kind, default):
+        if key not in sec:
+            return default
+        v = sec.pop(key)
+        if kind is float and isinstance(v, int) \
+                and not isinstance(v, bool):
+            v = float(v)
+        if kind is not None and (not isinstance(v, kind)
+                                 or isinstance(v, bool) is not
+                                 (kind is bool)):
+            raise CampaignError(
+                f"{secname}.{key} must be {kind.__name__}, got {v!r}")
+        return v
+
+    camp = section("campaign")
+    name = take(camp, "campaign", "name", str, "campaign")
+    seed = take(camp, "campaign", "seed", int, 0)
+    if camp:
+        raise CampaignError("unknown campaign key(s): "
+                            + ", ".join(sorted(camp)))
+
+    scen = section("scenario")
+    fields = {}
+    for f in dataclasses.fields(Scenario):
+        if f.name in ("mix", "n_gpu", "seed"):
+            scen.pop(f.name, None)   # swept axes are [sweep]'s business
+            continue
+        kind = float if f.type == "float" else int
+        fields[f.name] = take(scen, "scenario", f.name, kind,
+                              f.default)
+    if scen:
+        raise CampaignError("unknown scenario key(s): "
+                            + ", ".join(sorted(scen)) + " (valid: "
+                            + ", ".join(f.name for f in
+                                        dataclasses.fields(Scenario)
+                                        if f.name not in
+                                        ("mix", "n_gpu", "seed")) + ")")
+
+    sweep = section("sweep")
+    mixes = take(sweep, "sweep", "mixes", list, ["low_duty"])
+    nppn = take(sweep, "sweep", "nppn", list, [1, 2, 4])
+    fleets = take(sweep, "sweep", "fleets", list, [8])
+    controller = take(sweep, "sweep", "controller", bool, True)
+    if sweep:
+        raise CampaignError("unknown sweep key(s): "
+                            + ", ".join(sorted(sweep))
+                            + " (valid: mixes, nppn, fleets, controller)")
+    for label, vals, kind in (("mixes", mixes, str), ("nppn", nppn, int),
+                              ("fleets", fleets, int)):
+        for v in vals:
+            if not isinstance(v, kind) or isinstance(v, bool):
+                raise CampaignError(f"sweep.{label} entries must be "
+                                    f"{kind.__name__}, got {v!r}")
+
+    return Campaign(name=name, scenario=Scenario(**fields),
+                    mixes=tuple(mixes), nppn=tuple(nppn),
+                    fleets=tuple(fleets), controller=controller,
+                    seed=seed).validate()
+
+
+def load_campaign(path: str) -> Campaign:
+    """Load and validate a campaign from a TOML file.
+
+    Args:
+        path: the campaign file (see module docstring for the supported
+            TOML subset; ``examples/overload_campaign.toml`` is the
+            reference).
+
+    Returns:
+        The validated :class:`Campaign`.
+
+    Raises:
+        CampaignError: on parse or validation failure.
+        OSError: when the file cannot be read.
+    """
+    with open(path) as f:
+        return campaign_from_dict(loads_toml(f.read()))
+
+
+# --------------------------------------------------------------- TOML subset
+
+
+def _strip_comment(line: str) -> str:
+    out = []
+    in_str = False
+    for ch in line:
+        if ch == '"':
+            in_str = not in_str
+        if ch == "#" and not in_str:
+            break
+        out.append(ch)
+    return "".join(out)
+
+
+def _parse_scalar(s: str, lineno: int):
+    if s.startswith('"') and s.endswith('"') and len(s) >= 2:
+        body = s[1:-1]
+        if '"' in body or "\\" in body:
+            raise CampaignError(
+                f"TOML line {lineno}: escapes are outside the supported "
+                f"subset: {s!r}")
+        return body
+    if s == "true":
+        return True
+    if s == "false":
+        return False
+    try:
+        return int(s)
+    except ValueError:
+        pass
+    try:
+        return float(s)
+    except ValueError:
+        pass
+    raise CampaignError(
+        f"TOML line {lineno}: cannot parse value {s!r} (supported: "
+        '"string", integer, float, true/false, [array of those])')
+
+
+def _parse_value(s: str, lineno: int):
+    if s.startswith("[") and s.endswith("]"):
+        body = s[1:-1].strip()
+        if not body:
+            return []
+        return [_parse_scalar(p.strip(), lineno)
+                for p in body.split(",") if p.strip()]
+    return _parse_scalar(s, lineno)
+
+
+def loads_toml(text: str) -> dict:
+    """Parse the documented TOML subset into nested dicts.
+
+    Args:
+        text: TOML source (``[section]`` + ``key = value`` lines).
+
+    Returns:
+        ``{section: {key: value}}`` plus any top-level keys.
+
+    Raises:
+        CampaignError: on any line outside the subset.
+    """
+    root: Dict[str, object] = {}
+    section: Optional[Dict[str, object]] = None
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        line = _strip_comment(raw).strip()
+        if not line:
+            continue
+        if line.startswith("["):
+            if not line.endswith("]"):
+                raise CampaignError(
+                    f"TOML line {lineno}: malformed section {raw!r}")
+            name = line[1:-1].strip()
+            if not name or "[" in name or "]" in name or "." in name:
+                raise CampaignError(
+                    f"TOML line {lineno}: section names must be plain "
+                    f"(no nesting), got {raw!r}")
+            existing = root.setdefault(name, {})
+            if not isinstance(existing, dict):
+                raise CampaignError(
+                    f"TOML line {lineno}: {name!r} is both a key and a "
+                    "section")
+            section = existing
+            continue
+        if "=" not in line:
+            raise CampaignError(
+                f"TOML line {lineno}: expected key = value, got {raw!r}")
+        key, _, val = line.partition("=")
+        key = key.strip()
+        val = val.strip()
+        if not key or not val:
+            raise CampaignError(
+                f"TOML line {lineno}: expected key = value, got {raw!r}")
+        target = root if section is None else section
+        target[key] = _parse_value(val, lineno)
+    return root

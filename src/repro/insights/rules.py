@@ -87,7 +87,10 @@ class Rule(Protocol):
     name: str
     kind: str
 
-    def evaluate(self, ctx: RuleContext) -> Optional[Insight]: ...
+    def evaluate(self, ctx: RuleContext) -> Optional[Insight]:
+        """Diagnose one subject in one snapshot; None when the rule does
+        not apply (the engine folds the miss into its stream state)."""
+        ...
 
 
 class LowGpuDutyRule:
@@ -96,6 +99,9 @@ class LowGpuDutyRule:
     kind = "low_gpu"
 
     def evaluate(self, ctx: RuleContext) -> Optional[Insight]:
+        """INFO when any of the subject's GPU nodes sit below the low
+        duty threshold; evidence carries the measured duty + per-device
+        memory the overloading controller consumes."""
         low_threshold, _ = _thresholds()
         low_gpu = [n for n in ctx.gpu_nodes
                    if 0 < n.gpu_load < low_threshold and n.gpus_used > 0]
@@ -128,6 +134,8 @@ class MissubmissionRule:
     kind = "missubmission"
 
     def evaluate(self, ctx: RuleContext) -> Optional[Insight]:
+        """WARN when cores are exhausted but devices idle on multi-GPU
+        nodes — suggests the corrected cores-per-task request."""
         low_threshold, _ = _thresholds()
         missub = [n for n in ctx.gpu_nodes
                   if n.gpus_total >= 2 and n.gpus_used < n.gpus_total
@@ -163,6 +171,8 @@ class ThreadOverloadRule:
     kind = "overload"
 
     def evaluate(self, ctx: RuleContext) -> Optional[Insight]:
+        """WARN on load moderately above cores (the I/O-storm rule owns
+        anything beyond ``IO_STORM_FACTOR``x)."""
         over, worst = _overloaded(ctx)
         if worst is None or worst.norm_load > IO_STORM_FACTOR:
             return None                  # nothing, or the storm rule owns it
@@ -181,6 +191,8 @@ class IoStormRule:
     kind = "io_storm"
 
     def evaluate(self, ctx: RuleContext) -> Optional[Insight]:
+        """CRITICAL on extreme load (> ``IO_STORM_FACTOR``x cores) — the
+        concurrent-file-I/O pathology, not mere oversubscription."""
         over, worst = _overloaded(ctx)
         if worst is None or worst.norm_load <= IO_STORM_FACTOR:
             return None
@@ -210,6 +222,8 @@ def register_rule(rule: Rule) -> Rule:
 
 
 def get_rule(name: str) -> Rule:
+    """The registered rule called ``name``; raises KeyError (listing
+    the registered names) when unknown."""
     if name not in _REGISTRY:
         raise KeyError(f"unknown rule {name!r}; registered: "
                        + ", ".join(rule_names()))
@@ -217,6 +231,7 @@ def get_rule(name: str) -> Rule:
 
 
 def rule_names() -> List[str]:
+    """Registered rule names, sorted."""
     return sorted(_REGISTRY)
 
 

@@ -7,10 +7,10 @@ package, rendered by a registry renderer (``table``/``json``/``csv``/
 ``tsv``/``prom``) or the legacy byte-identical text layouts.
 """
 from repro.query.engine import (DEFAULT_COLUMNS, TABLES, Column, Query,
-                                ResultSet, column_kinds, history_rows,
-                                insight_rows, job_rows, node_rows,
-                                row_from_node, run_query, user_rows,
-                                vocabulary)
+                                ResultSet, column_kinds, experiment_rows,
+                                history_rows, insight_rows, job_rows,
+                                node_rows, row_from_node, run_query,
+                                user_rows, vocabulary)
 from repro.query.errors import QueryError
 from repro.query.expr import (Bool, Cmp, Expr, Not, conjoin, in_set,
                               parse_filter)
@@ -30,7 +30,8 @@ __all__ = [
     "QUERY_SCHEMA_VERSION", "Query", "QueryError", "RENDERERS",
     "Renderer", "ResultSet", "TABLES", "VIEW_KINDS", "advise_query",
     "all_query",
-    "apply_modifiers", "column_kinds", "conjoin", "get_renderer",
+    "apply_modifiers", "column_kinds", "conjoin", "experiment_rows",
+    "get_renderer",
     "history_rows", "in_set", "insight_rows", "job_rows", "json_payload",
     "jupyter_jobs_query", "node_rows", "nodes_query", "parse_delimited",
     "parse_filter", "register_renderer", "render_csv", "render_json",

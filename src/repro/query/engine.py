@@ -23,6 +23,9 @@ Tables:
                   InsightEngine; the CLI builds one for ``--advise`` /
                   ``--table insights``, the daemon streams its own —
                   DESIGN.md §8).
+  * ``experiments`` — one row per campaign cell (requires a
+                  CampaignResult from ``LLload --experiment`` or the
+                  daemon's ``GET /experiments`` — DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -108,6 +111,24 @@ _HISTORY_COLUMNS = [
     for f in _HISTORY_AGGS for agg in ("min", "mean", "max")
 ]
 
+_EXPERIMENT_COLUMNS = [
+    Column("cell", "str", "cell id: <mix>/<fleet>g/nppn<N> or "
+                          "<mix>/<fleet>g/controller"),
+    Column("mode", "str", "fixed (swept NPPN) | controller (closed loop)"),
+    Column("mix", "str", "workload mix name"),
+    Column("fleet", "int", "GPU nodes in the cell's fleet"),
+    Column("nppn", "int", "tasks-per-GPU (controller: converged level)"),
+    Column("tasks_done", "int", "tasks completed within the window"),
+    Column("throughput", "float", "completed tasks per hour"),
+    Column("speedup", "float",
+           "throughput vs the same mix+fleet fixed nppn1 cell"),
+    Column("gpu_duty", "float", "mean device duty over in-use GPU nodes"),
+    Column("mem_headroom", "float", "mean free device-memory fraction"),
+    Column("queue_wait_s", "float", "mean submit-to-start wait (s)"),
+    Column("insights", "int", "active insights summed over snapshots"),
+    Column("seed", "int", "scenario seed"),
+]
+
 _INSIGHT_COLUMNS = [
     Column("severity", "str", "info | warn | critical (ordered: "
                               "severity>=warn keeps warn and critical)"),
@@ -134,6 +155,7 @@ TABLES: Dict[str, List[Column]] = {
     "jobs": _JOB_COLUMNS,
     "history": _HISTORY_COLUMNS,
     "insights": _INSIGHT_COLUMNS,
+    "experiments": _EXPERIMENT_COLUMNS,
 }
 
 # the default selection shown by generic renderers when no --columns given
@@ -149,6 +171,8 @@ DEFAULT_COLUMNS: Dict[str, Tuple[str, ...]] = {
                 "nodes_mean", "cores_used_mean"),
     "insights": ("severity", "kind", "user", "nodes", "nppn",
                  "persistence", "message"),
+    "experiments": ("cell", "mode", "nppn", "tasks_done", "throughput",
+                    "speedup", "gpu_duty", "queue_wait_s", "insights"),
 }
 
 
@@ -161,6 +185,7 @@ def vocabulary(table: str) -> List[str]:
 
 
 def column_kinds(table: str) -> Dict[str, str]:
+    """Column name -> kind (``str``/``int``/``float``) for ``table``."""
     return {c.name: c.kind for c in TABLES[table]}
 
 
@@ -209,6 +234,9 @@ class Query:
     limit: Optional[int] = None         # grouped queries limit groups
 
     def validate(self) -> "Query":
+        """Check every referenced table/column/severity/limit; returns
+        self so construction can chain.  Raises QueryError (with the
+        valid vocabulary in the message) on the first problem."""
         vocabulary(self.table)          # raises on unknown table
         _check_columns(self.table, self.columns, "--columns")
         _check_columns(self.table, self.sort, "--sort", allow_desc=True)
@@ -279,6 +307,7 @@ class ResultSet:
     groups: Optional[List[Tuple[object, List[dict]]]] = None
 
     def cells(self, row: dict) -> List[object]:
+        """``row``'s values projected onto the selected columns."""
         return [row.get(c) for c in self.columns]
 
 
@@ -314,6 +343,8 @@ def row_from_node(n, *, user: str = "", users: str = "",
 
 
 def node_rows(snap: ClusterSnapshot) -> List[dict]:
+    """One nodes-table row per node, sorted by hostname; ``user`` is the
+    first-owner attribution, ``users`` every running-job owner."""
     owner: Dict[str, str] = {}
     jobtype: Dict[str, str] = {}
     owners: Dict[str, set] = {}
@@ -337,6 +368,8 @@ def node_rows(snap: ClusterSnapshot) -> List[dict]:
 
 
 def user_rows(snap: ClusterSnapshot) -> List[dict]:
+    """One users-table row per user with per-user aggregates (a node
+    shared by k users counts toward each of them)."""
     by_user = snap.nodes_by_user()
     rows = []
     for user in sorted(by_user):
@@ -361,6 +394,7 @@ def user_rows(snap: ClusterSnapshot) -> List[dict]:
 
 
 def job_rows(snap: ClusterSnapshot) -> List[dict]:
+    """One jobs-table row per job record, in snapshot job-table order."""
     return [{
         "job_id": j.job_id,
         "user": j.username,
@@ -403,6 +437,16 @@ def insight_rows(insights, snap: Optional[ClusterSnapshot] = None
             "message": i.message,
         })
     return rows
+
+
+def experiment_rows(experiments) -> List[dict]:
+    """One row per campaign cell.  ``experiments`` is a
+    :class:`~repro.experiments.runner.CampaignResult` (its ``rows()``
+    are materialized, speedups included) or any iterable of row dicts
+    already in the table's vocabulary."""
+    if hasattr(experiments, "rows"):
+        return list(experiments.rows())
+    return [dict(r) for r in experiments]
 
 
 def history_rows(store) -> List[dict]:
@@ -459,12 +503,14 @@ def _grouped(rows: List[dict], column: str
 
 
 def run_query(snap: Optional[ClusterSnapshot], query: Query,
-              store=None, insights=None) -> ResultSet:
+              store=None, insights=None, experiments=None) -> ResultSet:
     """Execute ``query`` against a snapshot (and optional history store
-    / insight engine).
+    / insight engine / campaign result).
 
-    ``snap`` may be None only for the ``history`` and ``insights``
-    tables; ``insights`` is an InsightEngine or an iterable of Insights.
+    ``snap`` may be None only for the ``history``, ``insights`` and
+    ``experiments`` tables; ``insights`` is an InsightEngine or an
+    iterable of Insights; ``experiments`` is a CampaignResult or an
+    iterable of experiments-table rows.
     """
     query.validate()
     if query.table == "history":
@@ -480,6 +526,13 @@ def run_query(snap: Optional[ClusterSnapshot], query: Query,
                 "daemon (GET /insights or GET /query) or pass "
                 "insights=InsightEngine(...)")
         rows = insight_rows(insights, snap)
+    elif query.table == "experiments":
+        if experiments is None:
+            raise QueryError(
+                "table 'experiments' needs campaign results — run "
+                "`LLload --experiment FILE`, query a daemon "
+                "(GET /experiments), or pass experiments=CampaignResult")
+        rows = experiment_rows(experiments)
     elif snap is None:
         raise QueryError(f"table {query.table!r} needs a snapshot")
     elif query.table == "nodes":

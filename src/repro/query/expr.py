@@ -73,6 +73,9 @@ class Cmp:
     raw: Optional[str] = None     # the literal as written (string contexts)
 
     def evaluate(self, row: dict) -> bool:
+        """Does ``row`` satisfy this comparison?  Missing/None cells
+        never match; type-mismatched comparisons match nothing (except
+        ``!=``, which stays the negation of ``==``)."""
         have = row.get(self.column)
         if have is None:
             return False
@@ -111,9 +114,11 @@ class Cmp:
 
 @dataclasses.dataclass(frozen=True)
 class Not:
+    """Logical negation of one child expression."""
     child: "Expr"
 
     def evaluate(self, row: dict) -> bool:
+        """True when the child expression does not match ``row``."""
         return not self.child.evaluate(row)
 
     def __str__(self):
@@ -122,10 +127,12 @@ class Not:
 
 @dataclasses.dataclass(frozen=True)
 class Bool:
+    """N-ary conjunction (``and``) or disjunction (``or``)."""
     op: str                       # and | or
     children: tuple
 
     def evaluate(self, row: dict) -> bool:
+        """All (``and``) / any (``or``) of the children match ``row``."""
         if self.op == "and":
             return all(c.evaluate(row) for c in self.children)
         return any(c.evaluate(row) for c in self.children)

@@ -40,6 +40,7 @@ class Renderer:
     fn: Callable[[ResultSet], str]
 
     def render(self, rs: ResultSet) -> str:
+        """Render ``rs`` to one newline-terminated string."""
         return self.fn(rs)
 
 
@@ -55,6 +56,9 @@ def _cell_text(v: object, kind: str) -> str:
 
 
 def render_table(rs: ResultSet) -> str:
+    """Aligned text columns (numbers right, strings left), groups as
+    ``-- col = key --`` sections, ``(N rows)`` footer; floats to two
+    decimals."""
     kinds = column_kinds(rs.table)
     header = list(rs.columns)
 
@@ -120,6 +124,8 @@ def json_payload(rs: ResultSet) -> Dict[str, object]:
 
 
 def render_json(rs: ResultSet) -> str:
+    """The versioned ``query_result`` JSON envelope (schema in
+    DESIGN.md §7); floats keep full precision."""
     env = {"v": QUERY_SCHEMA_VERSION, "kind": "query_result",
            "query_result": json_payload(rs)}
     return json.dumps(env, separators=(",", ":")) + "\n"
@@ -146,10 +152,12 @@ def _render_delimited(rs: ResultSet, *, delimiter: str,
 
 
 def render_csv(rs: ResultSet) -> str:
+    """RFC-4180 CSV: header + rows, quoted per ``_render_delimited``."""
     return _render_delimited(rs, delimiter=",", lineterminator="\r\n")
 
 
 def render_tsv(rs: ResultSet) -> str:
+    """Tab-separated with the same RFC-4180 quoting as CSV."""
     # CRLF here too: with a bare-\n terminator the csv writer would NOT
     # quote a lone \r inside a cell, breaking render->parse round-trips
     return _render_delimited(rs, delimiter="\t", lineterminator="\r\n")
@@ -210,10 +218,13 @@ RENDERERS: Dict[str, Renderer] = {}
 
 
 def register_renderer(renderer: Renderer) -> None:
+    """Admit (or replace) a renderer under its name."""
     RENDERERS[renderer.name] = renderer
 
 
 def get_renderer(name: str) -> Renderer:
+    """The registered renderer called ``name``; raises QueryError (with
+    the valid format list) for unknown names."""
     if name not in RENDERERS:
         raise QueryError(f"unknown format {name!r}; valid formats: "
                          + ", ".join(sorted(RENDERERS)))
@@ -221,6 +232,7 @@ def get_renderer(name: str) -> Renderer:
 
 
 def renderer_names() -> List[str]:
+    """Registered renderer names, sorted (the CLI's --format choices)."""
     return sorted(RENDERERS)
 
 

@@ -67,6 +67,9 @@ def running_jobs_query() -> Query:
 
 def view_query(kind: str, *, user: str = "",
                n: int = 10, hosts: Sequence[str] = ()) -> Query:
+    """The canned query for one of :data:`VIEW_KINDS` (``user``/``top``/
+    ``nodes``/``all``/``advise``), built from the relevant argument;
+    raises QueryError for unknown kinds."""
     if kind == "user":
         return user_query(user)
     if kind == "top":

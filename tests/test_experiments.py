@@ -1,0 +1,321 @@
+"""The §V-B experiment campaign subsystem (DESIGN.md §9): spec/TOML
+loading, deterministic runs, closed-loop convergence, the experiments
+query table, and the CLI/daemon surfaces (golden + remote identity)."""
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.cluster.job import JobSpec, TaskProfile
+from repro.cluster.node import make_nodes
+from repro.cluster.scheduler import Scheduler
+from repro.core import cli
+from repro.experiments import (Campaign, CampaignError, Scenario,
+                               campaign_from_dict, load_campaign,
+                               loads_toml, run_campaign, render_result)
+from repro.insights.rules import recommend_nppn
+from repro.query import Query, QueryError, run_query
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+GOLDEN = os.path.join(HERE, "golden")
+CAMPAIGN_TOML = os.path.join(HERE, os.pardir, "examples",
+                             "overload_campaign.toml")
+SMOKE_CELLS = "low_duty/8g/nppn1,low_duty/8g/controller"
+
+
+@pytest.fixture(scope="module")
+def campaign():
+    return load_campaign(CAMPAIGN_TOML)
+
+
+@pytest.fixture(scope="module")
+def low_duty_result(campaign):
+    """The low_duty 8-node fleet group (ladder + controller), run once."""
+    return run_campaign(campaign, cells="low_duty/8g/*")
+
+
+# ----------------------------------------------------------------- spec/TOML
+
+
+def test_example_campaign_grid(campaign):
+    names = [c.name for c in campaign.cells()]
+    assert "low_duty/8g/nppn1" in names
+    assert "low_duty/8g/controller" in names
+    assert "mixed/4g/nppn4" in names
+    # grid size: mixes x fleets x (ladder + controller)
+    assert len(names) == 2 * 2 * (3 + 1)
+    assert len(set(names)) == len(names)
+
+
+def test_select_cells_glob_and_errors(campaign):
+    cells = campaign.select_cells("low_duty/8g/*")
+    assert [c.name for c in cells] == [
+        "low_duty/8g/nppn1", "low_duty/8g/nppn2", "low_duty/8g/nppn4",
+        "low_duty/8g/controller"]
+    # exact names, deduplicated, grid order regardless of pattern order
+    cells = campaign.select_cells(
+        "low_duty/8g/controller,low_duty/8g/nppn1,low_duty/8g/nppn1")
+    assert [c.name for c in cells] == ["low_duty/8g/nppn1",
+                                       "low_duty/8g/controller"]
+    with pytest.raises(CampaignError, match="matches no cell"):
+        campaign.select_cells("bogus/*")
+
+
+def test_toml_subset_values():
+    data = loads_toml('a = 1\n[s]\nb = "x"  # comment\nc = [1, 2]\n'
+                      'd = true\ne = 1.5\n')
+    assert data == {"a": 1, "s": {"b": "x", "c": [1, 2], "d": True,
+                                  "e": 1.5}}
+
+
+@pytest.mark.parametrize("text", [
+    "a\n",                       # no '='
+    "[bad\n",                    # malformed section
+    "[a.b]\n",                   # nesting is outside the subset
+    'a = "x\\n"\n',              # escapes are outside the subset
+    "a = {x = 1}\n",             # inline tables are outside the subset
+])
+def test_toml_subset_rejects(text):
+    with pytest.raises(CampaignError):
+        loads_toml(text)
+
+
+def test_campaign_dict_roundtrip(campaign):
+    again = campaign_from_dict(json.loads(campaign.spec_json()))
+    assert again == campaign
+
+
+@pytest.mark.parametrize("mutate,match", [
+    ({"sweep": {"mixes": ["nope"]}}, "unknown workload mix"),
+    ({"sweep": {"nppn": [0]}}, "nppn"),
+    ({"scenario": {"duration_s": -1.0}}, "duration_s"),
+    ({"scenario": {"bogus": 1}}, "unknown scenario key"),
+    ({"bogus": {}}, "unknown campaign section"),
+    # resource ceilings: campaign specs reach the daemon from remote
+    # clients, so a spec may not demand unbounded compute/memory
+    ({"scenario": {"duration_s": 1e12}}, "cap"),
+    ({"sweep": {"fleets": [10**6]}}, "cap"),
+    ({"scenario": {"n_jobs": 10**6}}, "cap"),
+    ({"scenario": {"tasks_per_job": 10**6}}, "cap"),
+    ({"sweep": {"nppn": [1024]}}, "nppn"),
+    ({"sweep": {"fleets": list(range(1, 200))}}, "cells"),
+])
+def test_campaign_validation_errors(campaign, mutate, match):
+    data = campaign.to_dict()
+    for section, kv in mutate.items():
+        data.setdefault(section, {}).update(kv)
+    with pytest.raises(CampaignError, match=match):
+        campaign_from_dict(data)
+
+
+# ------------------------------------------------------------------- runner
+
+
+def test_same_seed_identical_results_table(campaign):
+    outs = [render_result(run_campaign(campaign, cells=SMOKE_CELLS),
+                          fmt="json") for _ in range(2)]
+    assert outs[0] == outs[1]
+
+
+def test_different_seed_still_runs():
+    c = Campaign(name="s", scenario=Scenario(duration_s=3600.0),
+                 mixes=("low_duty",), nppn=(1,), fleets=(4,),
+                 controller=False, seed=7).validate()
+    rows = run_campaign(c).rows()
+    assert rows[0]["seed"] == 7 and rows[0]["tasks_done"] >= 0
+
+
+def test_fixed_ladder_monotonic_throughput(low_duty_result):
+    thr = {r["cell"]: r["throughput"] for r in low_duty_result.rows()}
+    assert thr["low_duty/8g/nppn1"] < thr["low_duty/8g/nppn2"] \
+        <= thr["low_duty/8g/nppn4"]
+
+
+def test_controller_converges_to_recommended_nppn(low_duty_result):
+    """The closed loop must land on the level the Fig-7 rule recommends
+    for a 0.35-duty, 2GB-per-task job on a 32GB device — and stay."""
+    ctl = low_duty_result.cell_row("low_duty/8g/controller")
+    assert ctl["nppn"] == recommend_nppn(0.35, 2.0, 32.0)
+    # it acted on live diagnoses (some insight-active snapshots), then
+    # the diagnosis cleared (far fewer than the fixed nppn1 cell's)
+    fixed = low_duty_result.cell_row("low_duty/8g/nppn1")
+    assert 0 < ctl["insights"] < fixed["insights"]
+
+
+def test_closed_loop_speedup_acceptance(low_duty_result):
+    """Acceptance: >= 1.2x throughput for the closed-loop cell on the
+    low-duty workload mix (paper §V-B, Figs 5-7)."""
+    ctl = low_duty_result.cell_row("low_duty/8g/controller")
+    assert ctl["speedup"] >= 1.2
+    # and it shortens the queue: overloading frees capacity
+    fixed = low_duty_result.cell_row("low_duty/8g/nppn1")
+    assert ctl["queue_wait_s"] < fixed["queue_wait_s"]
+
+
+def test_high_duty_mix_gains_nothing():
+    """Control: the controller must NOT overload a well-utilized mix."""
+    c = Campaign(name="ctl", scenario=Scenario(duration_s=7200.0),
+                 mixes=("high_duty",), nppn=(1,), fleets=(8,),
+                 controller=True).validate()
+    rows = run_campaign(c).rows()
+    ctl = [r for r in rows if r["mode"] == "controller"][0]
+    assert ctl["nppn"] == 1
+    assert ctl["speedup"] == pytest.approx(1.0)
+
+
+def test_scheduler_cancel_frees_slots():
+    sched = Scheduler(make_nodes("c", 2, cores=40, gpus=2, gpu_mem_gb=32.0))
+    spec = JobSpec("u", "j", n_tasks=2, cores_per_task=5, gpus_per_task=1,
+                   duration_s=1e6, profile=TaskProfile(gpu_frac=0.3,
+                                                       gpu_mem_gb=2.0))
+    job = sched.submit(spec, 0.0)
+    sched.tick(60.0)
+    assert job.state == "R"
+    assert sum(len(ns.tasks) for ns in sched.nodes.values()) == 2
+    cancelled = sched.cancel(job.job_id)
+    assert cancelled is job and job.state == "CA"
+    assert sum(len(ns.tasks) for ns in sched.nodes.values()) == 0
+    assert job not in sched.running and job not in sched.completed
+    assert sched.cancel(job.job_id) is None          # already gone
+    pending = sched.submit(dataclasses.replace(spec, n_tasks=999), 1.0)
+    sched.tick(61.0)
+    assert pending.state == "PD"
+    assert sched.cancel(pending.job_id) is pending
+    assert not sched.pending
+
+
+# -------------------------------------------------------------- query table
+
+
+def test_experiments_table_through_query_engine(low_duty_result):
+    q = Query.from_params(table="experiments", filter="speedup>=1.2",
+                          sort="-speedup", columns="cell,speedup")
+    rs = run_query(None, q, experiments=low_duty_result)
+    assert rs.columns == ["cell", "speedup"]
+    assert all(r["speedup"] >= 1.2 for r in rs.rows)
+    speedups = [r["speedup"] for r in rs.rows]
+    assert speedups == sorted(speedups, reverse=True)
+
+
+def test_experiments_table_needs_results():
+    with pytest.raises(QueryError, match="experiments"):
+        run_query(None, Query(table="experiments"))
+
+
+def test_experiments_rows_accept_plain_dicts(low_duty_result):
+    rows = low_duty_result.rows()
+    rs = run_query(None, Query(table="experiments"), experiments=rows)
+    assert len(rs.rows) == len(rows)
+
+
+def test_speedup_none_without_baseline(campaign):
+    result = run_campaign(campaign, cells="low_duty/8g/controller")
+    row = result.rows()[0]
+    assert row["speedup"] is None
+    # None speedups sort after values in both directions (§7 contract)
+    out = render_result(result, sort="-speedup", fmt="json")
+    assert json.loads(out)["query_result"]["rows"]
+
+
+# ------------------------------------------------------------- CLI + daemon
+
+
+def _golden(name):
+    with open(os.path.join(GOLDEN, name)) as f:
+        return f.read()
+
+
+def test_cli_golden_experiments_table(capsys):
+    assert cli.main(["--experiment", CAMPAIGN_TOML,
+                     "--cells", SMOKE_CELLS]) == 0
+    assert capsys.readouterr().out == _golden("experiments.txt")
+
+
+def test_cli_watch_streams_progress_frames(capsys):
+    assert cli.main(["--experiment", CAMPAIGN_TOML, "--watch",
+                     "--cells", SMOKE_CELLS,
+                     "--columns", "cell,nppn,speedup"]) == 0
+    out = capsys.readouterr().out
+    headers = [ln for ln in out.splitlines()
+               if ln.startswith("=== LLload campaign overload-sweep")]
+    assert len(headers) == 2
+    assert "cell 1/2" in headers[0] and "cell 2/2" in headers[1]
+    # the final frame carries the full (partial-complete) table
+    assert "low_duty/8g/controller" in out.splitlines()[-2]
+
+
+@pytest.mark.parametrize("argv,needle", [
+    (["--experiment", "no-such.toml"], "cannot read campaign"),
+    (["--experiment", CAMPAIGN_TOML, "--cells", "bogus/*"],
+     "matches no cell"),
+    (["--cells", "low_duty/*"], "--experiment"),
+    (["--experiment", CAMPAIGN_TOML, "--advise"], "--experiment"),
+    (["--experiment", CAMPAIGN_TOML, "--table", "nodes"], "--experiment"),
+    (["--experiment", CAMPAIGN_TOML, "--tsv"], "--experiment"),
+    (["--experiment", CAMPAIGN_TOML, "--columns", "bogus"],
+     "unknown column"),
+    (["--experiment", CAMPAIGN_TOML, "--source", "remote"],
+     "one --url"),
+    (["--experiment", CAMPAIGN_TOML, "--source", "remote",
+      "--url", "http://localhost:1", "--watch"], "--watch"),
+])
+def test_cli_experiment_errors_exit_1(capsys, argv, needle):
+    assert cli.main(argv) == 1
+    assert needle in capsys.readouterr().err
+
+
+@pytest.fixture(scope="module")
+def daemon_box():
+    from repro.daemon import LLloadDaemon, serve_background
+    from repro.monitor import build_source
+
+    daemon = LLloadDaemon(build_source("sim"), ttl_s=3600.0)
+    server, thread = serve_background(daemon)
+    host, port = server.server_address[:2]
+    yield daemon, f"http://{host}:{port}"
+    server.shutdown()
+    server.server_close()
+    daemon.close()
+    thread.join(timeout=5)
+
+
+@pytest.mark.parametrize("extra", [
+    [], ["--format", "json"], ["--filter", "mode == controller"],
+    ["--columns", "cell,throughput,speedup"], ["--sort", "-speedup"]],
+    ids=["flagless", "json", "filter", "columns", "sort"])
+def test_remote_experiments_byte_identical(capsys, daemon_box, extra):
+    """--experiment --source remote is answered by GET /experiments and
+    must be byte-identical to the local run (acceptance)."""
+    _, url = daemon_box
+    args = ["--experiment", CAMPAIGN_TOML, "--cells", SMOKE_CELLS] + extra
+    assert cli.main(args) == 0
+    local = capsys.readouterr().out
+    assert cli.main(args + ["--source", "remote", "--url", url]) == 0
+    assert capsys.readouterr().out == local
+
+
+def test_remote_experiments_memoized(daemon_box, campaign):
+    """A repeated spec must not re-run the sweep (results are
+    deterministic): the memo answers, only the render differs."""
+    daemon, _ = daemon_box
+    params = {"spec": campaign.spec_json(), "cells": SMOKE_CELLS}
+    status, _, body1 = daemon.handle("/experiments", dict(params))
+    assert status == 200
+    memo_size = len(daemon._experiment_memo)
+    status, _, body2 = daemon.handle(
+        "/experiments", {**params, "format": "csv"})
+    assert status == 200 and body2 != body1
+    assert len(daemon._experiment_memo) == memo_size
+
+
+@pytest.mark.parametrize("params,needle", [
+    ({}, "spec"),
+    ({"spec": "{"}, "bad campaign spec"),
+    ({"spec": '{"bogus": {}}'}, "bad campaign spec"),
+])
+def test_daemon_experiments_rejects_bad_specs(daemon_box, params, needle):
+    daemon, _ = daemon_box
+    status, _, body = daemon.handle("/experiments", params)
+    assert status == 400
+    assert needle in json.loads(body)["error"]["message"]

@@ -1,0 +1,141 @@
+#!/usr/bin/env python3
+"""Execute every fenced ``bash``/``python`` block in markdown docs.
+
+    python tools/check_docs.py README.md docs/*.md
+
+Doc snippets rot silently; this runner makes them executable contracts:
+CI runs it over README.md and docs/*.md, so a renamed flag or module
+breaks the build, not a reader.
+
+Rules:
+  * only blocks fenced as ```` ```bash ```` or ```` ```python ```` run —
+    illustrative output belongs in ```` ```text ```` / ```` ```console ````
+    fences (never executed);
+  * a runnable block whose first line is ``# docs: skip`` is parsed but
+    not executed (for snippets that need unavailable infrastructure);
+  * every block runs from the repo root with ``PYTHONPATH=src`` in a
+    fresh interpreter/shell — blocks must be self-contained (start and
+    stop their own daemons, bound their own --watch frames);
+  * a non-zero exit or a timeout fails the run, printing file:line and
+    the block.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import subprocess
+import sys
+from typing import List
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RUNNABLE_LANGS = ("bash", "sh", "python")
+SKIP_MARK = "# docs: skip"
+
+
+@dataclasses.dataclass
+class Block:
+    """One fenced code block: language tag, body, and source location."""
+    path: str
+    lineno: int                 # line of the opening fence
+    lang: str
+    code: str
+
+
+def extract_blocks(path: str) -> List[Block]:
+    """Every fenced block in a markdown file, in document order.
+
+    Args:
+        path: the markdown file to scan.
+
+    Returns:
+        :class:`Block` records (all languages, runnable or not).
+    """
+    blocks: List[Block] = []
+    lang = None
+    body: List[str] = []
+    start = 0
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            stripped = line.strip()
+            if stripped.startswith("```"):
+                if lang is None:
+                    lang = stripped[3:].strip() or "text"
+                    body = []
+                    start = lineno
+                else:
+                    blocks.append(Block(path, start, lang, "".join(body)))
+                    lang = None
+            elif lang is not None:
+                body.append(line)
+    return blocks
+
+
+def is_runnable(block: Block) -> bool:
+    """Should this block execute?  ``bash``/``sh``/``python`` fences run
+    unless their first line is the ``# docs: skip`` marker."""
+    if block.lang not in RUNNABLE_LANGS:
+        return False
+    first = block.code.lstrip().splitlines()[:1]
+    return not (first and first[0].strip() == SKIP_MARK)
+
+
+def run_block(block: Block, timeout_s: float = 300.0) -> int:
+    """Execute one block from the repo root (PYTHONPATH=src).
+
+    Args:
+        block: a runnable block (``bash``/``sh`` via ``bash -euo
+            pipefail``, ``python`` via this interpreter).
+        timeout_s: per-block wall clock limit.
+
+    Returns:
+        The exit status (124 on timeout).
+    """
+    env = dict(os.environ)
+    src = os.path.join(REPO, "src")
+    env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else src)
+    if block.lang == "python":
+        argv = [sys.executable, "-c", block.code]
+    else:
+        argv = ["bash", "-euo", "pipefail", "-c", block.code]
+    try:
+        proc = subprocess.run(argv, cwd=REPO, env=env, timeout=timeout_s,
+                              stdout=subprocess.PIPE,
+                              stderr=subprocess.STDOUT)
+    except subprocess.TimeoutExpired:
+        print(f"TIMEOUT after {timeout_s:.0f}s", flush=True)
+        return 124
+    sys.stdout.buffer.write(proc.stdout)
+    sys.stdout.flush()
+    return proc.returncode
+
+
+def main(argv=None) -> int:
+    """Run every runnable block of every named file; 0 iff all pass."""
+    ap = argparse.ArgumentParser(
+        description="execute fenced bash/python blocks in markdown docs")
+    ap.add_argument("files", nargs="+", help="markdown files to check")
+    ap.add_argument("--timeout", type=float, default=300.0, metavar="S",
+                    help="per-block timeout (seconds)")
+    args = ap.parse_args(argv)
+
+    ran = failed = 0
+    for path in args.files:
+        for block in extract_blocks(path):
+            if not is_runnable(block):
+                continue
+            ran += 1
+            where = f"{path}:{block.lineno}"
+            print(f"--- {where} [{block.lang}] ---", flush=True)
+            rc = run_block(block, args.timeout)
+            if rc != 0:
+                failed += 1
+                print(f"FAILED (exit {rc}): {where}\n{block.code}",
+                      flush=True)
+    print(f"doc snippets: {ran} ran, {failed} failed")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
