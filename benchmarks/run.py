@@ -13,6 +13,8 @@ Prints ``name,us_per_call,derived`` CSV rows (one per benchmark).
 | query_{table,json}_512n  | query engine filter+sort+render (§7)         |
 | insights_{replay,incremental} | §V-B advise: streaming engine vs replay |
 | experiments_low_duty_8g  | §V-B campaign: fixed vs closed-loop NPPN     |
+| sim_{snapshot,tick}_*    | columnar FleetState vs object engine         |
+| sim_campaign_100k        | LLSC-scale (102 400-node) runner smoke cell  |
 | columnarize_1wk          | vectorized archive columnarization           |
 | weekly_analysis_1wk      | Fig 6 weekly node-hours aggregation          |
 | monitor_overhead         | "light-weight" claim: train loop +hooks      |
@@ -292,6 +294,106 @@ def bench_experiments():
         f.write("\n")
 
 
+def bench_sim():
+    """Columnar FleetState vs the preserved object engine (DESIGN.md
+    §10): snapshots/s and scheduler ticks/s at 512 and 4096 nodes on
+    the paper scenario, plus a 100k-node campaign smoke cell through
+    the real experiments runner.  Emits ``BENCH_sim.json`` for CI /
+    acceptance (snapshot speedup >= 10x in CI, >= 50x target locally)."""
+    import dataclasses
+    import json
+
+    from repro.cluster.baseline import ObjectClusterSim
+    from repro.cluster.workloads import (llsc_nodes, ml_training_job,
+                                         paper_scenario)
+    from repro.experiments.runner import run_cell
+    from repro.experiments.spec import Cell, Scenario
+
+    def build(n_nodes, columnar):
+        from repro.cluster.simulator import ClusterSim
+
+        n_gpu = max(4, n_nodes // 8)
+        nodes = llsc_nodes(n_nodes - n_gpu, n_gpu)
+        hosts = [n.hostname for n in nodes]
+        shared = hosts[:2] + hosts[n_nodes - n_gpu:n_nodes - n_gpu + 1]
+        partitions = {
+            "normal": {"hosts": [h for h in hosts if h not in shared],
+                       "policy": "whole-node"},
+            "jupyter": {"hosts": shared, "policy": "shared"},
+            "debug": {"hosts": shared, "policy": "shared"},
+        }
+        cls = ClusterSim if columnar else ObjectClusterSim
+        sim = cls(nodes, cluster="bench", partitions=partitions)
+        paper_scenario(sim, random.Random(0))
+        sim.run_until(1800.0)
+        return sim
+
+    def snap_rate(sim, iters):
+        sim.snapshot()                               # warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            sim.t += 60.0                            # defeat any caching
+            sim.snapshot()
+        return iters / (time.perf_counter() - t0)
+
+    def tick_rate(sim, iters):
+        # steady job churn: one short training job arrives per tick, so
+        # every tick pays dispatch + (eventually) completion compaction
+        t0 = time.perf_counter()
+        for i in range(iters):
+            sim.submit(dataclasses.replace(
+                ml_training_job(f"tk{i % 8:02d}", tasks=2),
+                duration_s=600.0))
+            sim.step(60.0)
+        return iters / (time.perf_counter() - t0)
+
+    out = {"cells": {}}
+    for n in (512, 4096):
+        col, obj = build(n, True), build(n, False)
+        s_col = snap_rate(col, 200 if n == 512 else 100)
+        s_obj = snap_rate(obj, 20 if n == 512 else 5)
+        t_col = tick_rate(col, 100 if n == 512 else 50)
+        t_obj = tick_rate(obj, 40 if n == 512 else 10)
+        s_x, t_x = s_col / s_obj, t_col / t_obj
+        _row(f"sim_snapshot_{n}n", 1e6 / s_col,
+             f"snapshots_per_s={s_col:.0f};object={s_obj:.1f};"
+             f"speedup={s_x:.1f}x")
+        _row(f"sim_tick_{n}n", 1e6 / t_col,
+             f"ticks_per_s={t_col:.0f};object={t_obj:.1f};"
+             f"speedup={t_x:.1f}x")
+        out["cells"][str(n)] = {
+            "snapshots_per_s": round(s_col, 1),
+            "object_snapshots_per_s": round(s_obj, 2),
+            "snapshot_speedup_x": round(s_x, 1),
+            "ticks_per_s": round(t_col, 1),
+            "object_ticks_per_s": round(t_obj, 2),
+            "tick_speedup_x": round(t_x, 1),
+        }
+
+    # 100k-node campaign smoke: a real runner cell at LLSC scale — the
+    # object engine could not finish this in any reasonable time
+    n_cpu, n_gpu = 98_304, 4_096                     # 102 400 nodes
+    cell = Cell("smoke/100k", Scenario(
+        mix="low_duty", n_cpu=n_cpu, n_gpu=n_gpu, duration_s=1800.0,
+        dt_s=600.0, n_jobs=64, tasks_per_job=8, arrival_s=30.0,
+        task_duration_s=1200.0, seed=0).validate(), mode="fixed", nppn=4)
+    t0 = time.perf_counter()
+    res = run_cell(cell)
+    smoke_s = time.perf_counter() - t0
+    _row("sim_campaign_100k", smoke_s * 1e6,
+         f"nodes={n_cpu + n_gpu};tasks_done={res.tasks_done};"
+         f"wall_s={smoke_s:.1f}")
+    out["smoke_100k"] = {
+        "nodes": n_cpu + n_gpu,
+        "tasks_done": res.tasks_done,
+        "throughput_tasks_per_hr": round(res.throughput, 1),
+        "wall_s": round(smoke_s, 2),
+    }
+    with open("BENCH_sim.json", "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+
+
 def bench_columnarize():
     """Vectorized archive columnarization on a week-scale synthetic
     archive (the per-row loop this replaced ran ~5x slower)."""
@@ -459,6 +561,7 @@ BENCHES = [
     bench_query,
     bench_insights,
     bench_experiments,
+    bench_sim,
     bench_columnarize,
     bench_weekly_analysis,
     bench_monitor_overhead,

@@ -1,3 +1,5 @@
+from repro.cluster.baseline import ObjectClusterSim, ObjectScheduler
+from repro.cluster.fleet import FleetState, gpu_task_capacity
 from repro.cluster.job import Job, JobSpec, TaskProfile
 from repro.cluster.node import NodeSpec, make_nodes
 from repro.cluster.scheduler import Scheduler
@@ -5,4 +7,6 @@ from repro.cluster.simulator import ClusterSim
 from repro.cluster.workloads import make_llsc_sim, paper_scenario
 
 __all__ = ["Job", "JobSpec", "TaskProfile", "NodeSpec", "make_nodes",
-           "Scheduler", "ClusterSim", "make_llsc_sim", "paper_scenario"]
+           "Scheduler", "ClusterSim", "FleetState", "gpu_task_capacity",
+           "ObjectScheduler", "ObjectClusterSim",
+           "make_llsc_sim", "paper_scenario"]

@@ -1,0 +1,325 @@
+"""Object-based reference scheduler/simulator (the pre-columnar path).
+
+This module preserves the per-node / per-task Python-object
+implementation that :class:`repro.cluster.scheduler.Scheduler` and
+:meth:`repro.cluster.simulator.ClusterSim.snapshot` replaced with the
+columnar :class:`~repro.cluster.fleet.FleetState`.  It exists for two
+reasons:
+
+* **equivalence oracle** — property tests drive an
+  :class:`ObjectClusterSim` and a columnar ``ClusterSim`` through
+  identical submit/step/cancel sequences and assert byte-identical
+  snapshots (DESIGN.md §10);
+* **benchmark baseline** — ``benchmarks/run.py:bench_sim`` measures the
+  columnar speedup against this path (``BENCH_sim.json``).
+
+It is NOT a frozen copy: the scheduling *bug fixes* that shipped with
+the columnar rebuild apply here too, so both paths implement the same
+semantics —
+
+* multi-GPU fit requires ``gpus_per_task`` *distinct* GPUs under the
+  ``tasks_per_gpu`` cap (the old slot-total check could place a 2-GPU
+  task on a single GPU with 2 free slots);
+* job completion/cancel frees only ``job.hostnames`` instead of
+  scanning the whole fleet;
+* ``_place`` maintains GPU occupancy incrementally per placement plan
+  instead of rebuilding it from every task on the node, per task.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.cluster.fleet import host_seed
+from repro.cluster.job import Job, JobSpec, RunningTask
+from repro.cluster.node import NodeSpec
+from repro.core.metrics import ClusterSnapshot, JobRecord, NodeSnapshot
+
+
+@dataclasses.dataclass
+class NodeState:
+    """Mutable per-node state: the spec plus the running-task list."""
+
+    spec: NodeSpec
+    tasks: List[RunningTask] = dataclasses.field(default_factory=list)
+    exclusive_job: Optional[int] = None
+
+    @property
+    def user(self) -> Optional[str]:
+        return self.tasks[0].username if self.tasks else None
+
+    @property
+    def users(self) -> set:
+        return {t.username for t in self.tasks}
+
+    @property
+    def cores_used(self) -> int:
+        return sum(t.cores for t in self.tasks)
+
+    def gpu_occupancy(self) -> Dict[int, int]:
+        occ = {i: 0 for i in range(self.spec.gpus)}
+        for t in self.tasks:
+            for g in t.gpu_slots:
+                occ[g] += 1
+        return occ
+
+    def mem_used(self) -> float:
+        return sum(t.profile.mem_gb for t in self.tasks)
+
+
+def gpu_fit_distinct(occ: Dict[int, int], tpg: int, gpt: int,
+                     cap: int) -> int:
+    """Greedy count of tasks that fit when each needs ``gpt`` *distinct*
+    GPUs with at most ``tpg`` tasks per GPU, stopping at ``cap``."""
+    if gpt == 1:
+        return min(cap, sum(max(0, tpg - c) for c in occ.values()))
+    work = dict(occ)
+    m = 0
+    while m < cap:
+        free = [g for g in sorted(work, key=lambda g: (work[g], g))
+                if work[g] < tpg]
+        if len(free) < gpt:
+            break
+        for g in free[:gpt]:
+            work[g] += 1
+        m += 1
+    return m
+
+
+class ObjectScheduler:
+    """The pre-columnar Slurm-like scheduler (see module docstring;
+    policy semantics are documented on the columnar ``Scheduler``)."""
+
+    def __init__(self, nodes: List[NodeSpec],
+                 partitions: Optional[Dict[str, dict]] = None):
+        self.nodes: Dict[str, NodeState] = {
+            n.hostname: NodeState(n) for n in nodes}
+        if partitions is None:
+            partitions = {"normal": {"hosts": [n.hostname for n in nodes],
+                                     "policy": "whole-node"}}
+        self.partitions = partitions
+        self.pending: List[Job] = []
+        self.running: List[Job] = []
+        self.completed: List[Job] = []
+        self._next_id = 26140000
+
+    # ------------------------------------------------------------- submit
+    def submit(self, spec: JobSpec, now: float) -> Job:
+        job = Job(self._next_id, spec, submit_time=now)
+        self._next_id += 1
+        self.pending.append(job)
+        return job
+
+    # ----------------------------------------------------------- dispatch
+    def _node_fits(self, ns: NodeState, job: Job, tasks: int) -> int:
+        """How many tasks of `job` fit on node `ns` right now."""
+        spec, jspec = ns.spec, job.spec
+        part = self.partitions.get(jspec.partition)
+        if part is None or ns.spec.hostname not in part["hosts"]:
+            return 0
+        if ns.exclusive_job is not None:
+            return 0
+        if jspec.exclusive and ns.tasks:
+            return 0
+        policy = part.get("policy", "whole-node")
+        if policy == "whole-node" and ns.tasks and ns.user != jspec.username:
+            return 0  # per-user whole-node isolation
+        free_cores = spec.cores - ns.cores_used
+        fit = free_cores // max(jspec.cores_per_task, 1)
+        free_mem = spec.mem_gb - ns.mem_used()
+        if jspec.profile.mem_gb > 0:
+            fit = min(fit, int(free_mem // jspec.profile.mem_gb))
+        if jspec.gpus_per_task > 0:
+            fit = gpu_fit_distinct(ns.gpu_occupancy(), jspec.tasks_per_gpu,
+                                   jspec.gpus_per_task, max(fit, 0))
+        return max(0, min(fit, tasks))
+
+    def _place(self, ns: NodeState, job: Job, count: int):
+        jspec = job.spec
+        occ = ns.gpu_occupancy() if jspec.gpus_per_task > 0 else None
+        for _ in range(count):
+            gpu_slots = ()
+            if occ is not None:
+                # round-robin: least-occupied GPUs first (paper's
+                # overloading), occupancy carried across tasks
+                order = sorted(occ, key=lambda g: occ[g])
+                chosen = [g for g in order
+                          if occ[g] < jspec.tasks_per_gpu][
+                              : jspec.gpus_per_task]
+                if len(chosen) < jspec.gpus_per_task:
+                    raise AssertionError(
+                        f"{ns.spec.hostname}: {len(chosen)} distinct free "
+                        f"GPUs for a {jspec.gpus_per_task}-GPU task")
+                for g in chosen:
+                    occ[g] += 1
+                gpu_slots = tuple(chosen)
+            ns.tasks.append(RunningTask(
+                job.job_id, jspec.username, ns.spec.hostname, jspec.profile,
+                jspec.cores_per_task, gpu_slots))
+        if jspec.exclusive:
+            ns.exclusive_job = job.job_id
+        if ns.spec.hostname not in job.hostnames:
+            job.hostnames.append(ns.spec.hostname)
+
+    def _try_dispatch(self, job: Job, now: float) -> bool:
+        remaining = job.spec.n_tasks
+        plan = []
+        # Prefer nodes this user already holds (packs whole nodes densely).
+        def keyfn(ns):
+            return (0 if ns.user == job.spec.username and ns.tasks else
+                    (1 if not ns.tasks else 2), ns.spec.hostname)
+        for ns in sorted(self.nodes.values(), key=keyfn):
+            if remaining <= 0:
+                break
+            fit = self._node_fits(ns, job, remaining)
+            if fit > 0:
+                plan.append((ns, fit))
+                remaining -= fit
+        if remaining > 0:
+            return False
+        for ns, count in plan:
+            self._place(ns, job, count)
+        job.state = "R"
+        job.start_time = now
+        self.running.append(job)
+        return True
+
+    # ------------------------------------------------------------- cancel
+    def _free(self, job: Job):
+        """Free a job's slots on the hosts it actually ran on
+        (``job.hostnames``) — not a whole-fleet scan."""
+        for host in job.hostnames:
+            ns = self.nodes[host]
+            ns.tasks = [t for t in ns.tasks if t.job_id != job.job_id]
+            if ns.exclusive_job == job.job_id:
+                ns.exclusive_job = None
+
+    def cancel(self, job_id: int) -> Optional[Job]:
+        """Cancel a pending or running job (state ``CA``), freeing any
+        node slots it holds; ``None`` if not pending/running."""
+        for i, job in enumerate(self.pending):
+            if job.job_id == job_id:
+                job.state = "CA"
+                return self.pending.pop(i)
+        for i, job in enumerate(self.running):
+            if job.job_id == job_id:
+                job.state = "CA"
+                self.running.pop(i)
+                self._free(job)
+                return job
+        return None
+
+    # ---------------------------------------------------------------- tick
+    def tick(self, now: float):
+        # completions
+        still = []
+        for job in self.running:
+            if job.start_time is not None and \
+                    now - job.start_time >= job.spec.duration_s:
+                job.state = "CG"
+                job.end_time = now
+                self._free(job)
+                self.completed.append(job)
+            else:
+                still.append(job)
+        self.running = still
+        # dispatch FIFO
+        still_pending = []
+        for job in self.pending:
+            if not self._try_dispatch(job, now):
+                still_pending.append(job)
+        self.pending = still_pending
+
+    # ---------------------------------------------------------- invariants
+    def check_whole_node_invariant(self) -> List[str]:
+        """Returns violations: whole-node partition nodes with >1 user."""
+        bad = []
+        shared_hosts = set()
+        for part in self.partitions.values():
+            if part.get("policy") == "shared":
+                shared_hosts.update(part["hosts"])
+        for host, ns in self.nodes.items():
+            if host in shared_hosts:
+                continue
+            if len(ns.users) > 1:
+                bad.append(host)
+        return bad
+
+
+def object_snapshot(sim) -> ClusterSnapshot:
+    """The pre-columnar per-node/per-task snapshot loop, over any sim
+    whose scheduler exposes object ``NodeState``s (the byte-identity
+    oracle for ``ClusterSim.snapshot``)."""
+    nodes: Dict[str, NodeSnapshot] = {}
+    for host, ns in sim.sched.nodes.items():
+        spec = ns.spec
+        load = 0.0
+        gpu_duty = 0.0
+        gpu_mem = 0.0
+        gpus_used = set()
+        hseed = host_seed(host)
+        for task in ns.tasks:
+            load += task.profile.cpu_load(sim.t, hseed % 97)
+            for g in task.gpu_slots:
+                gpus_used.add(g)
+            gpu_duty += task.profile.gpu_load(sim.t, hseed % 89)
+            gpu_mem += task.profile.gpu_mem_gb
+        # duty cycle saturates at 1.0 per device (the overloading payoff:
+        # several low-duty tasks sum toward full utilization)
+        gpu_load = 0.0
+        if spec.gpus > 0 and gpus_used:
+            gpu_load = min(1.0, gpu_duty / max(len(gpus_used), 1))
+        nodes[host] = NodeSnapshot(
+            hostname=host,
+            cores_total=spec.cores,
+            cores_used=min(ns.cores_used, spec.cores),
+            load=load,
+            mem_total_gb=spec.mem_gb,
+            mem_used_gb=min(ns.mem_used(), spec.mem_gb),
+            gpus_total=spec.gpus,
+            gpus_used=len(gpus_used),
+            gpu_load=gpu_load,
+            gpu_mem_total_gb=spec.gpus * spec.gpu_mem_gb,
+            gpu_mem_used_gb=min(gpu_mem, spec.gpus * spec.gpu_mem_gb),
+        )
+    jobs = []
+    for job in sim.sched.running:
+        s = job.spec
+        jobs.append(JobRecord(
+            job_id=job.job_id, username=s.username, name=s.name,
+            nodes=list(job.hostnames), cores_per_node=s.cores_per_task,
+            state="R", job_type=s.job_type,
+            gpus_per_node=s.gpus_per_task, gpu_request=s.gpu_request,
+            start_time=job.start_time or 0.0, partition=s.partition,
+            mem_per_node_gb=s.profile.mem_gb))
+    return ClusterSnapshot(sim.cluster, sim.t, nodes, jobs,
+                           dict(sim.user_emails))
+
+
+class ObjectClusterSim:
+    """Object-path twin of :class:`~repro.cluster.simulator.ClusterSim`
+    (same control API, :class:`ObjectScheduler` + ``object_snapshot``)."""
+
+    def __init__(self, nodes: List[NodeSpec], *, cluster: str = "txgreen",
+                 partitions: Optional[dict] = None, seed: int = 0):
+        self.cluster = cluster
+        self.sched = ObjectScheduler(nodes, partitions)
+        self.t = 0.0
+        self.seed = seed
+        self.user_emails: Dict[str, str] = {}
+
+    def submit(self, spec: JobSpec, *, now: Optional[float] = None) -> int:
+        self.user_emails.setdefault(spec.username,
+                                    f"{spec.username}@ll.mit.edu")
+        return self.sched.submit(spec, self.t if now is None else now).job_id
+
+    def step(self, dt: float = 60.0):
+        self.t += dt
+        self.sched.tick(self.t)
+
+    def run_until(self, t: float, dt: float = 60.0):
+        while self.t < t:
+            self.step(min(dt, t - self.t))
+
+    def snapshot(self) -> ClusterSnapshot:
+        return object_snapshot(self)

@@ -1,0 +1,476 @@
+"""FleetState — structure-of-arrays cluster state for LLSC-scale fleets.
+
+The object-based :class:`~repro.cluster.baseline.ObjectScheduler` keeps a
+``NodeState`` with a Python ``RunningTask`` list per node; every fit,
+placement, completion and snapshot walks those lists, which caps
+campaigns at toy fleet sizes.  ``FleetState`` keeps the same state as
+numpy columns — node specs, core/memory/GPU-slot occupancy, and one task
+table (node / job / user / profile / cores / GPU-bitmask columns) — so
+the scheduler and simulator can evaluate *whole-fleet* questions
+("which nodes fit this job?", "what is every node's load right now?")
+as array expressions instead of per-node Python loops (DESIGN.md §10).
+
+Bitwise equivalence with the object path is a design constraint, not an
+accident (the CLI's golden fixtures pin flagless output byte-for-byte):
+
+* per-node float reductions (memory, CPU load, GPU duty/memory) are
+  evaluated with :meth:`FleetState._seg_sum_ordered`, a padded
+  column-sweep that reproduces Python's sequential ``acc += v`` in task
+  insertion order — ``np.add.reduceat`` would pairwise-sum and drift in
+  the last ulp;
+* per-task duty-cycle curves are evaluated through the *same*
+  ``TaskProfile.cpu_load`` / ``gpu_load`` Python methods, once per
+  unique ``(profile, host-seed)`` pair (there are at most
+  ``profiles × 97`` of them), then gathered per task with one indexed
+  load;
+* GPU slots are assigned by a vectorized water-fill that provably emits
+  the same (least-occupied, lowest-index-first) pick sequence as the
+  object path's per-task ``sorted(occ)`` loop.
+
+Integer state (cores used, per-GPU slot occupancy) is maintained
+incrementally — exact in integers — while float aggregates are
+recomputed from the task table when read after a mutation (``_cache``),
+matching the object path's recompute-on-read semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cluster.job import JobSpec, TaskProfile
+from repro.cluster.node import NodeSpec
+from repro.core.metrics import NodeColumns
+
+#: GPU slots are tracked as one int64 bitmask per task.
+MAX_GPUS_PER_NODE = 63
+
+
+def host_seed(hostname: str) -> int:
+    """Stable per-host jitter seed (crc32: ``str.__hash__`` is randomized
+    per process, which made snapshots non-reproducible)."""
+    return zlib.crc32(hostname.encode())
+
+
+@dataclasses.dataclass
+class _DerivedCache:
+    """Task-table aggregates recomputed after a mutation (see module doc:
+    float state is recompute-on-read, integer state is incremental)."""
+    order: np.ndarray          # stable argsort of task rows by node
+    occ_nodes: np.ndarray      # node index of each non-empty segment
+    starts: np.ndarray         # segment starts into `order`
+    counts: np.ndarray         # tasks per non-empty segment
+    row: np.ndarray            # per sorted task: its segment row
+    pos: np.ndarray            # per sorted task: its position in segment
+    width: int                 # max tasks on any one node
+    n_tasks: np.ndarray        # per node: alive task count
+    first_user: np.ndarray     # per node: user id of earliest task (-1)
+    mem_used: np.ndarray       # per node: ordered sum of task mem_gb
+
+
+class FleetState:
+    """Columnar node + task state behind :class:`repro.cluster.scheduler.
+    Scheduler` (see module docstring for the layout and the bitwise-
+    equivalence strategy)."""
+
+    def __init__(self, specs: Sequence[NodeSpec],
+                 partitions: Dict[str, dict]):
+        self.specs: List[NodeSpec] = list(specs)
+        n = len(self.specs)
+        self.n_nodes = n
+        self.hostnames: List[str] = [s.hostname for s in self.specs]
+        self.host_index: Dict[str, int] = {
+            h: i for i, h in enumerate(self.hostnames)}
+        self.cores = np.array([s.cores for s in self.specs], np.int64)
+        self.mem_gb = np.array([s.mem_gb for s in self.specs], np.float64)
+        self.gpus = np.array([s.gpus for s in self.specs], np.int64)
+        self.gpu_mem_gb = np.array([s.gpu_mem_gb for s in self.specs],
+                                   np.float64)
+        self.gpu_mem_total = self.gpus * self.gpu_mem_gb
+        seeds = [host_seed(h) for h in self.hostnames]
+        self.smod97 = np.array([s % 97 for s in seeds], np.int64)
+        self.smod89 = np.array([s % 89 for s in seeds], np.int64)
+        # rank of each hostname in Python-string sort order: dispatch
+        # tie-breaks sort by hostname, and an integer rank sorts faster
+        # than strings while ordering identically
+        by_name = sorted(range(n), key=self.hostnames.__getitem__)
+        self.hostrank = np.empty(n, np.int64)
+        self.hostrank[np.array(by_name, np.int64) if n else []] = \
+            np.arange(n, dtype=np.int64)
+        self.max_gpus = int(self.gpus.max()) if n else 0
+        if self.max_gpus > MAX_GPUS_PER_NODE:
+            raise ValueError(
+                f"FleetState tracks GPU slots in an int64 bitmask; a node "
+                f"with {self.max_gpus} > {MAX_GPUS_PER_NODE} devices is "
+                "not representable")
+        # --- incremental integer state (exact) ---
+        self.occ = np.zeros((n, max(self.max_gpus, 1)), np.int64)
+        self.cores_used = np.zeros(n, np.int64)
+        self.exclusive_job = np.full(n, -1, np.int64)
+        # --- partition membership (static) ---
+        self.part_mask: Dict[str, np.ndarray] = {}
+        self.shared_mask = np.zeros(n, bool)
+        for name, part in partitions.items():
+            mask = np.zeros(n, bool)
+            for h in part["hosts"]:
+                idx = self.host_index.get(h)
+                if idx is not None:
+                    mask[idx] = True
+            self.part_mask[name] = mask
+            if part.get("policy") == "shared":
+                self.shared_mask |= mask
+        # --- task table (amortized append, boolean-mask compaction) ---
+        self._cap = 1024
+        self.t_node = np.empty(self._cap, np.int64)
+        self.t_job = np.empty(self._cap, np.int64)
+        self.t_user = np.empty(self._cap, np.int64)
+        self.t_prof = np.empty(self._cap, np.int64)
+        self.t_cores = np.empty(self._cap, np.int64)
+        self.t_gmask = np.empty(self._cap, np.int64)
+        self.n_tasks_total = 0
+        # --- intern tables ---
+        self._user_ids: Dict[str, int] = {}
+        self.user_names: List[str] = []
+        self._profile_ids: Dict[tuple, int] = {}
+        self.profiles: List[TaskProfile] = []
+        self._prof_mem = np.empty(0, np.float64)
+        self._prof_gpu_mem = np.empty(0, np.float64)
+        self._cache: Optional[_DerivedCache] = None
+        # per-mod (version, (profile, seed) pairs, inverse) for the duty
+        # tables, and the t-independent snapshot columns — both reusable
+        # across every snapshot between fleet mutations
+        self._duty_keys: Dict[int, tuple] = {}
+        self._static_cols: Optional[tuple] = None
+        self.version = 0            # bumped on every mutation
+
+    # ------------------------------------------------------------- intern
+    def user_id(self, username: str) -> int:
+        """Intern ``username`` and return its integer id."""
+        uid = self._user_ids.get(username)
+        if uid is None:
+            uid = len(self.user_names)
+            self._user_ids[username] = uid
+            self.user_names.append(username)
+        return uid
+
+    def profile_id(self, profile: TaskProfile) -> int:
+        """Intern a :class:`TaskProfile` by value and return its id."""
+        key = (profile.threads, profile.cpu_activity, profile.mem_gb,
+               profile.gpu_frac, profile.gpu_mem_gb, profile.jitter)
+        pid = self._profile_ids.get(key)
+        if pid is None:
+            pid = len(self.profiles)
+            self._profile_ids[key] = pid
+            self.profiles.append(profile)
+            self._prof_mem = np.append(self._prof_mem, profile.mem_gb)
+            self._prof_gpu_mem = np.append(self._prof_gpu_mem,
+                                           profile.gpu_mem_gb)
+        return pid
+
+    # ---------------------------------------------------------- mutation
+    def _dirty(self):
+        self._cache = None
+        self.version += 1
+
+    def _grow(self, need: int):
+        while self._cap < need:
+            self._cap *= 2
+        for name in ("t_node", "t_job", "t_user", "t_prof", "t_cores",
+                     "t_gmask"):
+            old = getattr(self, name)
+            new = np.empty(self._cap, old.dtype)
+            new[: self.n_tasks_total] = old[: self.n_tasks_total]
+            setattr(self, name, new)
+
+    def place(self, idx: int, job, count: int) -> None:
+        """Place ``count`` tasks of ``job`` on node ``idx`` (mirrors the
+        object path's ``_place``, including its GPU pick order)."""
+        jspec: JobSpec = job.spec
+        nt = self.n_tasks_total
+        if nt + count > self._cap:
+            self._grow(nt + count)
+        sl = slice(nt, nt + count)
+        self.t_node[sl] = idx
+        self.t_job[sl] = job.job_id
+        self.t_user[sl] = self.user_id(jspec.username)
+        self.t_prof[sl] = self.profile_id(jspec.profile)
+        self.t_cores[sl] = jspec.cores_per_task
+        if jspec.gpus_per_task > 0:
+            self.t_gmask[sl] = self._assign_gpus(idx, jspec, count)
+        else:
+            self.t_gmask[sl] = 0
+        self.n_tasks_total = nt + count
+        self.cores_used[idx] += count * jspec.cores_per_task
+        if jspec.exclusive:
+            self.exclusive_job[idx] = job.job_id
+        host = self.hostnames[idx]
+        if host not in job.hostnames:
+            job.hostnames.append(host)
+        self._dirty()
+
+    def _assign_gpus(self, idx: int, jspec: JobSpec,
+                     count: int) -> np.ndarray:
+        """GPU bitmasks for ``count`` tasks placed on node ``idx``,
+        matching the object path's per-task "least-occupied GPU first,
+        ties by index" round-robin; updates slot occupancy."""
+        G = int(self.gpus[idx])
+        tpg, gpt = jspec.tasks_per_gpu, jspec.gpus_per_task
+        occ_row = self.occ[idx, :G]
+        if gpt == 1:
+            # Water-fill: repeatedly picking argmin-(occ, index) emits the
+            # slot units (level, gpu) in lexicographic (level, gpu) order,
+            # so the first `count` entries of that grid ARE the picks.
+            lev = np.arange(tpg, dtype=np.int64)[:, None]
+            gidx = np.broadcast_to(np.arange(G, dtype=np.int64), (tpg, G))
+            valid = lev >= occ_row[None, :]
+            picks = gidx[valid][:count]
+            if len(picks) < count:
+                raise AssertionError(
+                    f"GPU water-fill underflow on node {idx}: "
+                    f"{len(picks)} slots for {count} tasks")
+            occ_row += np.bincount(picks, minlength=G)
+            return np.left_shift(np.int64(1), picks)
+        masks = np.empty(count, np.int64)
+        for i in range(count):
+            order = np.argsort(occ_row, kind="stable")
+            free = order[occ_row[order] < tpg]
+            if len(free) < gpt:
+                raise AssertionError(
+                    f"node {idx}: {len(free)} distinct free GPUs for a "
+                    f"{gpt}-GPU task (fit computation must prevent this)")
+            chosen = free[:gpt]
+            occ_row[chosen] += 1
+            masks[i] = np.bitwise_or.reduce(
+                np.left_shift(np.int64(1), chosen))
+        return masks
+
+    def free_jobs(self, job_ids: Iterable[int],
+                  hostnames: Iterable[str] = ()) -> int:
+        """Remove every task of ``job_ids`` (one boolean-mask compaction,
+        not a per-node list rebuild) and clear exclusive holds on the
+        jobs' recorded ``hostnames``.  Returns tasks freed."""
+        ids = set(int(j) for j in job_ids)
+        nt = self.n_tasks_total
+        if nt and ids:
+            if len(ids) == 1:
+                rm = self.t_job[:nt] == next(iter(ids))
+            else:
+                rm = np.isin(self.t_job[:nt],
+                             np.array(sorted(ids), np.int64))
+            n_rm = int(rm.sum())
+        else:
+            rm, n_rm = None, 0
+        if n_rm:
+            nodes_rm = self.t_node[:nt][rm]
+            np.subtract.at(self.cores_used, nodes_rm, self.t_cores[:nt][rm])
+            masks_rm = self.t_gmask[:nt][rm]
+            if masks_rm.any():
+                for g in range(self.max_gpus):
+                    bit = (masks_rm >> g) & 1
+                    if bit.any():
+                        np.subtract.at(self.occ[:, g], nodes_rm, bit)
+            keep = ~rm
+            for name in ("t_node", "t_job", "t_user", "t_prof", "t_cores",
+                         "t_gmask"):
+                col = getattr(self, name)
+                col[: nt - n_rm] = col[:nt][keep]
+            self.n_tasks_total = nt - n_rm
+        for h in hostnames:
+            idx = self.host_index.get(h)
+            if idx is not None and int(self.exclusive_job[idx]) in ids:
+                self.exclusive_job[idx] = -1
+        if n_rm or len(ids):
+            self._dirty()
+        return n_rm
+
+    # ------------------------------------------------------ derived state
+    def cache(self) -> _DerivedCache:
+        """Task-table aggregates (rebuilt after any mutation)."""
+        if self._cache is None:
+            self._cache = self._build_cache()
+        return self._cache
+
+    def _build_cache(self) -> _DerivedCache:
+        n, nt = self.n_nodes, self.n_tasks_total
+        n_tasks = np.bincount(self.t_node[:nt], minlength=n) if nt \
+            else np.zeros(n, np.int64)
+        first_user = np.full(n, -1, np.int64)
+        mem_used = np.zeros(n, np.float64)
+        if nt == 0:
+            empty = np.empty(0, np.int64)
+            return _DerivedCache(empty, empty, empty, empty, empty, empty,
+                                 0, n_tasks, first_user, mem_used)
+        node = self.t_node[:nt]
+        order = np.argsort(node, kind="stable")
+        nsort = node[order]
+        boundary = np.empty(nt, bool)
+        boundary[0] = True
+        np.not_equal(nsort[1:], nsort[:-1], out=boundary[1:])
+        starts = np.flatnonzero(boundary)
+        occ_nodes = nsort[starts]
+        counts = np.empty(len(starts), np.int64)
+        counts[:-1] = starts[1:] - starts[:-1]
+        counts[-1] = nt - starts[-1]
+        pos = np.arange(nt, dtype=np.int64) - np.repeat(starts, counts)
+        row = np.repeat(np.arange(len(occ_nodes), dtype=np.int64), counts)
+        width = int(counts.max())
+        first_user[occ_nodes] = self.t_user[:nt][order][starts]
+        cache = _DerivedCache(order, occ_nodes, starts, counts, row, pos,
+                              width, n_tasks, first_user, mem_used)
+        mem_vals = self._prof_mem[self.t_prof[:nt]]
+        mem_used[occ_nodes] = self._seg_sum_ordered(cache, mem_vals)
+        return cache
+
+    def _seg_sum_ordered(self, cache: _DerivedCache,
+                         vals: np.ndarray) -> np.ndarray:
+        """Per-node sum of per-task ``vals`` in task insertion order —
+        bitwise-identical to the object path's sequential ``acc += v``
+        (a padded column sweep; trailing ``+ 0.0`` keeps non-negative
+        accumulators exact).  Returns one sum per ``cache.occ_nodes``."""
+        padded = np.zeros((len(cache.occ_nodes), cache.width), np.float64)
+        padded[cache.row, cache.pos] = vals[cache.order]
+        acc = np.zeros(len(cache.occ_nodes), np.float64)
+        for j in range(cache.width):
+            acc += padded[:, j]
+        return acc
+
+    # ----------------------------------------------------------- queries
+    def users_per_node(self) -> np.ndarray:
+        """Distinct alive users per node (whole-node invariant sweep)."""
+        nt = self.n_tasks_total
+        out = np.zeros(self.n_nodes, np.int64)
+        if nt:
+            n_users = max(len(self.user_names), 1)
+            pairs = np.unique(self.t_node[:nt] * n_users + self.t_user[:nt])
+            np.add.at(out, pairs // n_users, 1)
+        return out
+
+    def task_indices_of_node(self, idx: int) -> np.ndarray:
+        """Row indices of node ``idx``'s tasks, in insertion order."""
+        return np.flatnonzero(self.t_node[: self.n_tasks_total] == idx)
+
+    # ---------------------------------------------------------- snapshot
+    def _duty_tables(self, t: float, mod: int, seeds: np.ndarray,
+                     method: str) -> np.ndarray:
+        """Per-task duty values at time ``t``: evaluate the *Python*
+        profile curve once per unique ``(profile, seed mod m)`` pair and
+        gather — bitwise-identical to calling it per task.  The unique
+        pairs depend only on fleet state, so they are cached per
+        ``version`` and only the (tiny) table is re-evaluated per ``t``."""
+        nt = self.n_tasks_total
+        entry = self._duty_keys.get(mod)
+        if entry is None or entry[0] != self.version:
+            keys = self.t_prof[:nt] * mod + seeds[self.t_node[:nt]]
+            uniq, inv = np.unique(keys, return_inverse=True)
+            pairs = [divmod(int(k), mod) for k in uniq.tolist()]
+            entry = (self.version, pairs, inv)
+            self._duty_keys[mod] = entry
+        _, pairs, inv = entry
+        profiles = self.profiles
+        table = np.empty(len(pairs), np.float64)
+        for i, (pid, s) in enumerate(pairs):
+            table[i] = getattr(profiles[pid], method)(t, s)
+        return table[inv]
+
+    def _static_snapshot_cols(self, cache: _DerivedCache) -> tuple:
+        """The t-independent snapshot columns (occupancy, memory, device
+        counts), rebuilt only when the fleet mutates."""
+        if self._static_cols is not None \
+                and self._static_cols[0] == self.version:
+            return self._static_cols
+        n, nt = self.n_nodes, self.n_tasks_total
+        gmem = np.zeros(n, np.float64)
+        gused = np.zeros(n, np.int64)
+        if nt:
+            occ_nodes = cache.occ_nodes
+            gmem[occ_nodes] = self._seg_sum_ordered(
+                cache, self._prof_gpu_mem[self.t_prof[:nt]])
+            ormask = np.bitwise_or.reduceat(
+                self.t_gmask[:nt][cache.order], cache.starts)
+            pop = np.zeros(len(occ_nodes), np.int64)
+            for g in range(self.max_gpus):
+                pop += (ormask >> g) & 1
+            gused[occ_nodes] = pop
+        self._static_cols = (
+            self.version,
+            np.minimum(self.cores_used, self.cores),
+            np.minimum(cache.mem_used, self.mem_gb),
+            gused,
+            np.minimum(gmem, self.gpu_mem_total),
+            (self.gpus > 0) & (gused > 0),      # busy-GPU-node mask
+            np.maximum(gused, 1),               # gpu_load denominator
+        )
+        return self._static_cols
+
+    def snapshot_columns(self, t: float) -> NodeColumns:
+        """Whole-fleet :class:`NodeColumns` at sim time ``t`` in one
+        vectorized pass (per-task duty via array-evaluated profile
+        curves, segment-reduced per node in insertion order)."""
+        n, nt = self.n_nodes, self.n_tasks_total
+        cache = self.cache()
+        (_, cores_used, mem_used, gused, gmem,
+         gpu_busy, gpu_denom) = self._static_snapshot_cols(cache)
+        load = np.zeros(n, np.float64)
+        duty = np.zeros(n, np.float64)
+        if nt:
+            occ_nodes = cache.occ_nodes
+            load[occ_nodes] = self._seg_sum_ordered(
+                cache, self._duty_tables(t, 97, self.smod97, "cpu_load"))
+            duty[occ_nodes] = self._seg_sum_ordered(
+                cache, self._duty_tables(t, 89, self.smod89, "gpu_load"))
+        gpu_load = np.where(
+            gpu_busy, np.minimum(1.0, duty / gpu_denom), 0.0)
+        return NodeColumns(
+            hostnames=self.hostnames,
+            cores_total=self.cores,
+            cores_used=cores_used,
+            load=load,
+            mem_total_gb=self.mem_gb,
+            mem_used_gb=mem_used,
+            gpus_total=self.gpus,
+            gpus_used=gused,
+            gpu_load=gpu_load,
+            gpu_mem_total_gb=self.gpu_mem_total,
+            gpu_mem_used_gb=gmem,
+            index=self.host_index,
+        )
+
+
+def gpu_task_capacity(caps: np.ndarray, gpt: int) -> np.ndarray:
+    """Max tasks placeable per node when each task needs ``gpt``
+    *distinct* GPUs and GPU ``i`` has ``caps[:, i]`` free slots.
+
+    ``m`` tasks are feasible iff ``sum_i min(caps_i, m) >= m * gpt``
+    (each GPU serves a task at most once, so at most ``min(caps_i, m)``
+    times) — the Gale-Ryser-style bound the greedy least-occupied
+    assignment achieves.  ``g(m) = sum_i min(caps_i, m) - m*gpt`` is
+    concave with ``g(0) = 0``, so the answer is the floor of g's
+    positive root; candidates are evaluated per linear segment.
+
+    Args:
+        caps: ``(nodes, G)`` int array of free slots per GPU.
+        gpt: GPUs required per task (>= 1).
+
+    Returns:
+        int64 array of per-node task capacities.
+    """
+    n, G = caps.shape
+    if gpt == 1:
+        return caps.sum(axis=1)
+    asc = np.sort(caps, axis=1)
+    prefix = np.concatenate(
+        [np.zeros((n, 1), np.int64), np.cumsum(asc, axis=1)], axis=1)
+    best = np.zeros(n, np.int64)
+    for j in range(G + 1):
+        # segment where exactly (G - j) GPUs still grow with m:
+        # g(m) = prefix[:, j] + m*(G - j) - m*gpt; crossing at slope < 0
+        slope = (G - j) - gpt
+        if slope >= 0:
+            continue
+        cand = prefix[:, j] // (-slope)
+        feas = (np.minimum(asc, cand[:, None]).sum(axis=1)
+                >= cand * gpt)
+        best = np.maximum(best, np.where(feas, cand, 0))
+    return best

@@ -10,26 +10,86 @@ Policies:
 
 GPU overloading (paper §V-B): ``JobSpec.tasks_per_gpu > 1`` lets the
 scheduler round-robin multiple tasks of the *same user* onto one GPU — the
-NPPN mechanism LLsub/LLMapReduce expose.
+NPPN mechanism LLsub/LLMapReduce expose.  A task with ``gpus_per_task > 1``
+needs that many *distinct* devices, each under the ``tasks_per_gpu`` cap.
+
+Implementation (DESIGN.md §10): all node/task state lives in a columnar
+:class:`~repro.cluster.fleet.FleetState`; fit checks, dispatch ordering,
+completion and cancel are whole-fleet array expressions, which is what
+lets experiment campaigns sweep LLSC-scale (100k-node) fleets.  The
+per-node object API (``sched.nodes[host].tasks`` etc.) survives as lazy
+:class:`NodeView`s over the arrays; the original object implementation
+lives on in :mod:`repro.cluster.baseline` as the equivalence oracle.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, Iterator, List, Optional
 
+import numpy as np
+
+from repro.cluster.baseline import NodeState  # noqa: F401  (compat re-export)
+from repro.cluster.fleet import FleetState, gpu_task_capacity
 from repro.cluster.job import Job, JobSpec, RunningTask
 from repro.cluster.node import NodeSpec
 
 
-@dataclasses.dataclass
-class NodeState:
-    spec: NodeSpec
-    tasks: List[RunningTask] = dataclasses.field(default_factory=list)
-    exclusive_job: Optional[int] = None
+def _mask_bits(mask: int) -> tuple:
+    """Set-bit indices of a GPU bitmask, ascending."""
+    out = []
+    g = 0
+    while mask:
+        if mask & 1:
+            out.append(g)
+        mask >>= 1
+        g += 1
+    return tuple(out)
+
+
+class NodeView:
+    """``NodeState``-shaped read view over one :class:`FleetState` row.
+
+    Consumers that still think in per-node objects (tests, debugging,
+    the shared-node insight paths) read through this; the task list is
+    reconstructed from the columnar task table on demand and cached
+    until the fleet mutates.  ``gpu_slots`` come back in ascending
+    device order (the bitmask drops pick order; every consumer treats
+    the tuple as a set).
+    """
+
+    __slots__ = ("_fleet", "_idx", "_version", "_tasks")
+
+    def __init__(self, fleet: FleetState, idx: int):
+        self._fleet = fleet
+        self._idx = idx
+        self._version = -1
+        self._tasks: List[RunningTask] = []
+
+    @property
+    def spec(self) -> NodeSpec:
+        return self._fleet.specs[self._idx]
+
+    @property
+    def tasks(self) -> List[RunningTask]:
+        f = self._fleet
+        if self._version != f.version:
+            host = f.hostnames[self._idx]
+            self._tasks = [
+                RunningTask(int(f.t_job[r]), f.user_names[int(f.t_user[r])],
+                            host, f.profiles[int(f.t_prof[r])],
+                            int(f.t_cores[r]), _mask_bits(int(f.t_gmask[r])))
+                for r in f.task_indices_of_node(self._idx).tolist()]
+            self._version = f.version
+        return self._tasks
+
+    @property
+    def exclusive_job(self) -> Optional[int]:
+        j = int(self._fleet.exclusive_job[self._idx])
+        return None if j < 0 else j
 
     @property
     def user(self) -> Optional[str]:
-        return self.tasks[0].username if self.tasks else None
+        tasks = self.tasks
+        return tasks[0].username if tasks else None
 
     @property
     def users(self) -> set:
@@ -37,17 +97,60 @@ class NodeState:
 
     @property
     def cores_used(self) -> int:
-        return sum(t.cores for t in self.tasks)
-
-    def gpu_occupancy(self) -> Dict[int, int]:
-        occ = {i: 0 for i in range(self.spec.gpus)}
-        for t in self.tasks:
-            for g in t.gpu_slots:
-                occ[g] += 1
-        return occ
+        return int(self._fleet.cores_used[self._idx])
 
     def mem_used(self) -> float:
-        return sum(t.profile.mem_gb for t in self.tasks)
+        total = 0.0
+        for t in self.tasks:
+            total += t.profile.mem_gb
+        return total
+
+    def gpu_occupancy(self) -> Dict[int, int]:
+        occ = self._fleet.occ[self._idx]
+        return {g: int(occ[g]) for g in range(self.spec.gpus)}
+
+
+class FleetNodeMap:
+    """Lazy ``hostname -> NodeView`` mapping (the ``Scheduler.nodes``
+    dict shape, without 100k eager per-node objects)."""
+
+    def __init__(self, fleet: FleetState):
+        self._fleet = fleet
+        self._views: Dict[str, NodeView] = {}
+
+    def __getitem__(self, host: str) -> NodeView:
+        view = self._views.get(host)
+        if view is None:
+            view = NodeView(self._fleet, self._fleet.host_index[host])
+            self._views[host] = view
+        return view
+
+    def get(self, host: str, default=None):
+        try:
+            return self[host]
+        except KeyError:
+            return default
+
+    def __contains__(self, host) -> bool:
+        return host in self._fleet.host_index
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._fleet.hostnames)
+
+    def __len__(self) -> int:
+        return self._fleet.n_nodes
+
+    def __bool__(self) -> bool:
+        return self._fleet.n_nodes > 0
+
+    def keys(self):
+        return list(self._fleet.hostnames)
+
+    def values(self) -> List[NodeView]:
+        return [self[h] for h in self._fleet.hostnames]
+
+    def items(self):
+        return [(h, self[h]) for h in self._fleet.hostnames]
 
 
 class Scheduler:
@@ -55,12 +158,12 @@ class Scheduler:
                  partitions: Optional[Dict[str, dict]] = None):
         """partitions: name -> {"hosts": [..], "policy": "whole-node"|"shared"}.
         Default: every node in a single whole-node "normal" partition."""
-        self.nodes: Dict[str, NodeState] = {
-            n.hostname: NodeState(n) for n in nodes}
         if partitions is None:
             partitions = {"normal": {"hosts": [n.hostname for n in nodes],
                                      "policy": "whole-node"}}
         self.partitions = partitions
+        self.fleet = FleetState(nodes, partitions)
+        self.nodes = FleetNodeMap(self.fleet)
         self.pending: List[Job] = []
         self.running: List[Job] = []
         self.completed: List[Job] = []
@@ -74,71 +177,71 @@ class Scheduler:
         return job
 
     # ----------------------------------------------------------- dispatch
-    def _node_fits(self, ns: NodeState, job: Job, tasks: int) -> int:
-        """How many tasks of `job` fit on node `ns` right now."""
-        spec, jspec = ns.spec, job.spec
+    def _fits(self, jspec: JobSpec) -> np.ndarray:
+        """Per-node task fit for a job, whole fleet at once (the array
+        form of the object path's per-node ``_node_fits`` loop)."""
+        f = self.fleet
         part = self.partitions.get(jspec.partition)
-        if part is None or ns.spec.hostname not in part["hosts"]:
-            return 0
-        if ns.exclusive_job is not None:
-            return 0
-        if jspec.exclusive and ns.tasks:
-            return 0
-        policy = part.get("policy", "whole-node")
-        if policy == "whole-node" and ns.tasks and ns.user != jspec.username:
-            return 0  # per-user whole-node isolation
-        free_cores = spec.cores - ns.cores_used
-        fit = free_cores // max(jspec.cores_per_task, 1)
-        free_mem = spec.mem_gb - ns.mem_used()
-        if jspec.profile.mem_gb > 0:
-            fit = min(fit, int(free_mem // jspec.profile.mem_gb))
-        if jspec.gpus_per_task > 0:
-            occ = ns.gpu_occupancy()
-            slots = sum(max(0, jspec.tasks_per_gpu - c) for c in occ.values())
-            fit = min(fit, slots // jspec.gpus_per_task)
-        return max(0, min(fit, tasks))
-
-    def _place(self, ns: NodeState, job: Job, count: int):
-        jspec = job.spec
-        for _ in range(count):
-            gpu_slots = ()
-            if jspec.gpus_per_task > 0:
-                occ = ns.gpu_occupancy()
-                # round-robin: least-occupied GPUs first (paper's overloading)
-                order = sorted(occ, key=lambda g: occ[g])
-                chosen = [g for g in order
-                          if occ[g] < jspec.tasks_per_gpu][: jspec.gpus_per_task]
-                gpu_slots = tuple(chosen)
-            ns.tasks.append(RunningTask(
-                job.job_id, jspec.username, ns.spec.hostname, jspec.profile,
-                jspec.cores_per_task, gpu_slots))
+        mask = f.part_mask.get(jspec.partition)
+        if part is None or mask is None:
+            return np.zeros(f.n_nodes, np.int64)
+        cache = f.cache()
+        has = cache.n_tasks > 0
+        elig = mask & (f.exclusive_job < 0)
         if jspec.exclusive:
-            ns.exclusive_job = job.job_id
-        if ns.spec.hostname not in job.hostnames:
-            job.hostnames.append(ns.spec.hostname)
+            elig &= ~has
+        if part.get("policy", "whole-node") == "whole-node":
+            uid = f.user_id(jspec.username)
+            elig &= ~(has & (cache.first_user != uid))
+        fit = (f.cores - f.cores_used) // max(jspec.cores_per_task, 1)
+        m = jspec.profile.mem_gb
+        if m > 0:
+            fit = np.minimum(fit, np.floor_divide(
+                f.mem_gb - cache.mem_used, m).astype(np.int64))
+        if jspec.gpus_per_task > 0:
+            caps = np.clip(jspec.tasks_per_gpu - f.occ, 0, None)
+            # columns past a node's real device count hold no capacity
+            caps[np.arange(f.occ.shape[1])[None, :] >= f.gpus[:, None]] = 0
+            fit = np.minimum(fit, gpu_task_capacity(
+                caps, jspec.gpus_per_task))
+        return np.where(elig, np.maximum(fit, 0), 0)
 
     def _try_dispatch(self, job: Job, now: float) -> bool:
-        remaining = job.spec.n_tasks
-        plan = []
-        # Prefer nodes this user already holds (packs whole nodes densely).
-        def keyfn(ns):
-            return (0 if ns.user == job.spec.username and ns.tasks else
-                    (1 if not ns.tasks else 2), ns.spec.hostname)
-        for ns in sorted(self.nodes.values(), key=keyfn):
-            if remaining <= 0:
-                break
-            fit = self._node_fits(ns, job, remaining)
-            if fit > 0:
-                plan.append((ns, fit))
-                remaining -= fit
-        if remaining > 0:
-            return False
-        for ns, count in plan:
-            self._place(ns, job, count)
+        f = self.fleet
+        jspec = job.spec
+        if jspec.n_tasks > 0:
+            fits = self._fits(jspec)
+            idxs = np.flatnonzero(fits)
+            if int(fits[idxs].sum()) < jspec.n_tasks:
+                return False
+            # Prefer nodes this user already holds (packs whole nodes
+            # densely), then empty nodes, then other shared nodes; ties by
+            # hostname — same order the object path got from its keyfn sort.
+            cache = f.cache()
+            uid = f.user_id(jspec.username)
+            has = cache.n_tasks[idxs] > 0
+            cat = np.where(has & (cache.first_user[idxs] == uid), 0,
+                           np.where(~has, 1, 2))
+            order = np.argsort(cat * f.n_nodes + f.hostrank[idxs])
+            plan = idxs[order]
+            csum = np.cumsum(fits[plan])
+            k = int(np.searchsorted(csum, jspec.n_tasks, side="left"))
+            counts = fits[plan[: k + 1]].copy()
+            counts[k] = jspec.n_tasks - (int(csum[k - 1]) if k else 0)
+            for idx, count in zip(plan[: k + 1].tolist(), counts.tolist()):
+                f.place(idx, job, count)
         job.state = "R"
         job.start_time = now
         self.running.append(job)
         return True
+
+    @staticmethod
+    def _fit_key(jspec: JobSpec) -> tuple:
+        """Everything `_fits` depends on besides fleet state — two jobs
+        with the same key see identical per-node fits."""
+        return (jspec.username, jspec.partition, jspec.cores_per_task,
+                jspec.profile.mem_gb, jspec.gpus_per_task,
+                jspec.tasks_per_gpu, jspec.exclusive)
 
     # ------------------------------------------------------------- cancel
     def cancel(self, job_id: int) -> Optional[Job]:
@@ -159,48 +262,52 @@ class Scheduler:
             if job.job_id == job_id:
                 job.state = "CA"
                 self.running.pop(i)
-                for ns in self.nodes.values():
-                    ns.tasks = [t for t in ns.tasks if t.job_id != job_id]
-                    if ns.exclusive_job == job_id:
-                        ns.exclusive_job = None
+                # free only the hosts the job ran on, not the whole fleet
+                self.fleet.free_jobs((job_id,), job.hostnames)
                 return job
         return None
 
     # ---------------------------------------------------------------- tick
     def tick(self, now: float):
-        # completions
-        still = []
-        for job in self.running:
-            if job.start_time is not None and \
-                    now - job.start_time >= job.spec.duration_s:
+        # completions: one boolean-mask compaction for every job that
+        # finished this tick, touching only their recorded hostnames
+        done = [job for job in self.running
+                if job.start_time is not None
+                and now - job.start_time >= job.spec.duration_s]
+        if done:
+            done_ids = set()
+            hosts: List[str] = []
+            for job in done:
                 job.state = "CG"
                 job.end_time = now
-                for ns in self.nodes.values():
-                    ns.tasks = [t for t in ns.tasks if t.job_id != job.job_id]
-                    if ns.exclusive_job == job.job_id:
-                        ns.exclusive_job = None
-                self.completed.append(job)
-            else:
-                still.append(job)
-        self.running = still
-        # dispatch FIFO
-        still_pending = []
+                done_ids.add(job.job_id)
+                hosts.extend(job.hostnames)
+            self.running = [j for j in self.running
+                            if j.job_id not in done_ids]
+            self.fleet.free_jobs(done_ids, hosts)
+            self.completed.extend(done)
+        # dispatch FIFO; a failed dispatch leaves state untouched, so any
+        # later job with the same fit key and at least as many tasks must
+        # fail too — skip it (cleared whenever a dispatch changes state)
+        still_pending: List[Job] = []
+        failed_at: Dict[tuple, int] = {}
         for job in self.pending:
-            if not self._try_dispatch(job, now):
+            key = self._fit_key(job.spec)
+            bar = failed_at.get(key)
+            if bar is not None and job.spec.n_tasks >= bar:
+                still_pending.append(job)
+                continue
+            if self._try_dispatch(job, now):
+                failed_at.clear()
+            else:
+                failed_at[key] = job.spec.n_tasks if bar is None \
+                    else min(bar, job.spec.n_tasks)
                 still_pending.append(job)
         self.pending = still_pending
 
     # ---------------------------------------------------------- invariants
     def check_whole_node_invariant(self) -> List[str]:
         """Returns violations: whole-node partition nodes with >1 user."""
-        bad = []
-        shared_hosts = set()
-        for part in self.partitions.values():
-            if part.get("policy") == "shared":
-                shared_hosts.update(part["hosts"])
-        for host, ns in self.nodes.items():
-            if host in shared_hosts:
-                continue
-            if len(ns.users) > 1:
-                bad.append(host)
-        return bad
+        f = self.fleet
+        bad = (f.users_per_node() > 1) & ~f.shared_mask
+        return [f.hostnames[i] for i in np.flatnonzero(bad).tolist()]

@@ -1,15 +1,23 @@
 """Discrete-time cluster simulator: drives the scheduler and materializes
-LLload :class:`ClusterSnapshot`s from running task profiles."""
+LLload :class:`ClusterSnapshot`s from running task profiles.
+
+``snapshot()`` is columnar (DESIGN.md §10): per-task cpu/gpu duty is
+evaluated through :meth:`FleetState.snapshot_columns` in one vectorized
+pass and the per-node view comes back as a lazy
+:class:`~repro.core.metrics.ColumnarNodeMap` — a ``NodeSnapshot`` is
+only built for hosts a consumer actually touches, which is what makes
+100k-node snapshots cheap.  Output is bitwise-identical to the object
+path preserved in :mod:`repro.cluster.baseline` (golden + property
+tested).
+"""
 from __future__ import annotations
 
-import math
-import zlib
 from typing import Dict, List, Optional
 
 from repro.cluster.job import JobSpec
 from repro.cluster.node import NodeSpec
 from repro.cluster.scheduler import Scheduler
-from repro.core.metrics import ClusterSnapshot, JobRecord, NodeSnapshot
+from repro.core.metrics import ClusterSnapshot, JobRecord
 
 
 class ClusterSim:
@@ -20,6 +28,7 @@ class ClusterSim:
         self.t = 0.0
         self.seed = seed
         self.user_emails: Dict[str, str] = {}
+        self._jobrec: Dict[int, JobRecord] = {}
 
     # ------------------------------------------------------------ control
     def submit(self, spec: JobSpec, *, now: Optional[float] = None) -> int:
@@ -52,50 +61,29 @@ class ClusterSim:
                          interval_hint=interval_hint)
 
     # ----------------------------------------------------------- snapshot
-    def snapshot(self) -> ClusterSnapshot:
-        nodes: Dict[str, NodeSnapshot] = {}
-        for host, ns in self.sched.nodes.items():
-            spec = ns.spec
-            load = 0.0
-            gpu_duty = 0.0
-            gpu_mem = 0.0
-            gpus_used = set()
-            # stable per-host jitter seed: str.__hash__ is randomized per
-            # process (PYTHONHASHSEED), which made snapshots non-reproducible
-            hseed = zlib.crc32(host.encode())
-            for task in ns.tasks:
-                load += task.profile.cpu_load(self.t, hseed % 97)
-                for g in task.gpu_slots:
-                    gpus_used.add(g)
-                gpu_duty += task.profile.gpu_load(self.t, hseed % 89)
-                gpu_mem += task.profile.gpu_mem_gb
-            # duty cycle saturates at 1.0 per device (the overloading payoff:
-            # several low-duty tasks sum toward full utilization)
-            gpu_load = 0.0
-            if spec.gpus > 0 and gpus_used:
-                gpu_load = min(1.0, gpu_duty / max(len(gpus_used), 1))
-            nodes[host] = NodeSnapshot(
-                hostname=host,
-                cores_total=spec.cores,
-                cores_used=min(ns.cores_used, spec.cores),
-                load=load,
-                mem_total_gb=spec.mem_gb,
-                mem_used_gb=min(ns.mem_used(), spec.mem_gb),
-                gpus_total=spec.gpus,
-                gpus_used=len(gpus_used),
-                gpu_load=gpu_load,
-                gpu_mem_total_gb=spec.gpus * spec.gpu_mem_gb,
-                gpu_mem_used_gb=min(gpu_mem, spec.gpus * spec.gpu_mem_gb),
-            )
-        jobs = []
-        for job in self.sched.running:
+    def _job_record(self, job) -> JobRecord:
+        """JobRecord for a running job, cached per job id — placement is
+        final at dispatch, so the record never changes while the job runs
+        (cancel+resubmit mints a new id)."""
+        rec = self._jobrec.get(job.job_id)
+        if rec is None:
             s = job.spec
-            jobs.append(JobRecord(
+            rec = JobRecord(
                 job_id=job.job_id, username=s.username, name=s.name,
                 nodes=list(job.hostnames), cores_per_node=s.cores_per_task,
                 state="R", job_type=s.job_type,
                 gpus_per_node=s.gpus_per_task, gpu_request=s.gpu_request,
                 start_time=job.start_time or 0.0, partition=s.partition,
-                mem_per_node_gb=s.profile.mem_gb))
-        return ClusterSnapshot(self.cluster, self.t, nodes, jobs,
+                mem_per_node_gb=s.profile.mem_gb)
+            self._jobrec[job.job_id] = rec
+        return rec
+
+    def snapshot(self) -> ClusterSnapshot:
+        cols = self.sched.fleet.snapshot_columns(self.t)
+        jobs = [self._job_record(job) for job in self.sched.running]
+        if len(self._jobrec) > 4 * max(len(jobs), 16):
+            alive = {job.job_id for job in self.sched.running}
+            self._jobrec = {j: r for j, r in self._jobrec.items()
+                            if j in alive}
+        return ClusterSnapshot(self.cluster, self.t, cols.as_map(), jobs,
                                dict(self.user_emails))

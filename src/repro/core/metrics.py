@@ -17,7 +17,9 @@ from __future__ import annotations
 import dataclasses
 import io
 import time
-from typing import Dict, List, Optional
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
 
 TSV_COLUMNS = [
     "timestamp", "cluster", "hostname", "username", "jobtype",
@@ -65,6 +67,138 @@ class NodeSnapshot:
 
 
 @dataclasses.dataclass
+class NodeColumns:
+    """Structure-of-arrays form of a fleet of :class:`NodeSnapshot`s.
+
+    One aligned numpy column per ``NodeSnapshot`` field — the columnar
+    construction path large producers (the cluster simulator's
+    ``FleetState``) emit in one vectorized pass, and columnar consumers
+    (the experiments runner's per-step fold) aggregate without ever
+    materializing 100k per-node Python objects.  ``node(i)`` or a
+    :class:`ColumnarNodeMap` converts back to the object form on demand.
+    """
+
+    hostnames: List[str]
+    cores_total: np.ndarray
+    cores_used: np.ndarray
+    load: np.ndarray
+    mem_total_gb: np.ndarray
+    mem_used_gb: np.ndarray
+    gpus_total: np.ndarray
+    gpus_used: np.ndarray
+    gpu_load: np.ndarray
+    gpu_mem_total_gb: np.ndarray
+    gpu_mem_used_gb: np.ndarray
+    #: optional shared ``hostname -> row`` index; producers that snapshot
+    #: repeatedly over a fixed fleet pass one dict instead of paying an
+    #: O(nodes) rebuild per snapshot
+    index: Optional[Dict[str, int]] = None
+
+    def __len__(self) -> int:
+        return len(self.hostnames)
+
+    def node(self, i: int) -> "NodeSnapshot":
+        """Materialize row ``i`` as a :class:`NodeSnapshot` (native
+        Python scalars, so downstream JSON/text paths see exactly the
+        types the object path produced)."""
+        return NodeSnapshot(
+            hostname=self.hostnames[i],
+            cores_total=int(self.cores_total[i]),
+            cores_used=int(self.cores_used[i]),
+            load=float(self.load[i]),
+            mem_total_gb=float(self.mem_total_gb[i]),
+            mem_used_gb=float(self.mem_used_gb[i]),
+            gpus_total=int(self.gpus_total[i]),
+            gpus_used=int(self.gpus_used[i]),
+            gpu_load=float(self.gpu_load[i]),
+            gpu_mem_total_gb=float(self.gpu_mem_total_gb[i]),
+            gpu_mem_used_gb=float(self.gpu_mem_used_gb[i]),
+        )
+
+    def as_map(self) -> "ColumnarNodeMap":
+        """This fleet as a lazy hostname -> :class:`NodeSnapshot` map."""
+        return ColumnarNodeMap(self)
+
+
+class ColumnarNodeMap:
+    """Lazy ``hostname -> NodeSnapshot`` mapping over :class:`NodeColumns`.
+
+    Drop-in for the ``ClusterSnapshot.nodes`` dict: iteration order is
+    the fleet's node order (matching the object path's insertion order),
+    and a ``NodeSnapshot`` is only materialized — then cached — when a
+    consumer actually touches that host.  This is what lets
+    ``ClusterSim.snapshot()`` return in microseconds at 100k nodes while
+    dict-shaped consumers keep working unchanged; columnar consumers
+    can reach the raw arrays through ``.columns``.
+    """
+
+    def __init__(self, columns: NodeColumns):
+        self.columns = columns
+        self._index: Optional[Dict[str, int]] = columns.index
+        self._cache: Dict[str, NodeSnapshot] = {}
+
+    def _host_index(self) -> Dict[str, int]:
+        if self._index is None:
+            self._index = {h: i for i, h in
+                           enumerate(self.columns.hostnames)}
+        return self._index
+
+    def __getitem__(self, host: str) -> NodeSnapshot:
+        node = self._cache.get(host)
+        if node is None:
+            node = self.columns.node(self._host_index()[host])
+            self._cache[host] = node
+        return node
+
+    def get(self, host: str, default=None):
+        try:
+            return self[host]
+        except KeyError:
+            return default
+
+    def __contains__(self, host) -> bool:
+        return host in self._host_index()
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.columns.hostnames)
+
+    def __len__(self) -> int:
+        return len(self.columns.hostnames)
+
+    def __bool__(self) -> bool:
+        return bool(self.columns.hostnames)
+
+    def __eq__(self, other):
+        # dict semantics (order-insensitive), so snapshots round-tripped
+        # over the wire — whose nodes decode to a plain dict — still
+        # compare equal to columnar-backed ones
+        if other is self:
+            return True
+        if isinstance(other, ColumnarNodeMap):
+            other = {h: other[h] for h in other}
+        if not isinstance(other, dict):
+            return NotImplemented
+        if len(other) != len(self):
+            return False
+        try:
+            return all(other[h] == self[h]
+                       for h in self.columns.hostnames)
+        except KeyError:
+            return False
+
+    __hash__ = None
+
+    def keys(self):
+        return list(self.columns.hostnames)
+
+    def values(self) -> List[NodeSnapshot]:
+        return [self[h] for h in self.columns.hostnames]
+
+    def items(self):
+        return [(h, self[h]) for h in self.columns.hostnames]
+
+
+@dataclasses.dataclass
 class JobRecord:
     job_id: int
     username: str
@@ -96,13 +230,21 @@ class ClusterSnapshot:
         return None
 
     def nodes_by_user(self) -> Dict[str, List[str]]:
+        # set-based dedup: `h not in lst` was O(hosts) per host, which is
+        # quadratic for one user spanning half a 100k-node fleet; output
+        # (first-seen order per user) is unchanged
         out: Dict[str, List[str]] = {}
+        seen: Dict[str, set] = {}
         for job in self.jobs:
             if job.state != "R":
                 continue
+            if not job.nodes:
+                continue
+            s = seen.setdefault(job.username, set())
+            lst = out.setdefault(job.username, [])
             for h in job.nodes:
-                lst = out.setdefault(job.username, [])
-                if h not in lst:
+                if h not in s:
+                    s.add(h)
                     lst.append(h)
         return out
 

@@ -147,6 +147,40 @@ def _resubmit_user(sim, username: str, nppn: int) -> int:
     return len(requeue)
 
 
+#: Fleets at or below this size fold GPU duty/headroom through per-node
+#: ``NodeSnapshot`` objects, exactly as before the columnar engine —
+#: numpy's pairwise summation can differ from the sequential Python fold
+#: in the last ulp, and every pre-existing campaign golden lives at
+#: ≤ 4096 nodes.  Larger fleets (which have no legacy goldens) use the
+#: array fold, still fully deterministic for a given cell + seed.
+COLUMNAR_FOLD_MIN_NODES = 4_096
+
+
+def _gpu_fold(snap):
+    """Mean GPU duty and memory headroom over busy GPU nodes for one
+    poll; ``(None, None)`` when no GPU node is busy."""
+    nodes = snap.nodes
+    columns = getattr(nodes, "columns", None)
+    if columns is not None and len(nodes) > COLUMNAR_FOLD_MIN_NODES:
+        import numpy as np
+
+        busy = (columns.gpus_total > 0) & (columns.gpus_used > 0)
+        k = int(busy.sum())
+        if not k:
+            return None, None
+        free = (columns.gpu_mem_total_gb[busy]
+                - columns.gpu_mem_used_gb[busy])
+        return (float(columns.gpu_load[busy].sum()) / k,
+                float(np.sum(free / columns.gpu_mem_total_gb[busy])) / k)
+    gpu_nodes = [n for n in nodes.values()
+                 if n.gpus_total > 0 and n.gpus_used > 0]
+    if not gpu_nodes:
+        return None, None
+    return (sum(n.gpu_load for n in gpu_nodes) / len(gpu_nodes),
+            sum(n.gpu_mem_free_gb / n.gpu_mem_total_gb
+                for n in gpu_nodes) / len(gpu_nodes))
+
+
 def run_cell(cell: Cell) -> CellResult:
     """Run one cell start to finish and fold its measurements.
 
@@ -194,13 +228,10 @@ def run_cell(cell: Cell) -> CellResult:
         if sim.t >= sc.duration_s - 1e-9:
             break
         snap = bus.poll(source.name)
-        gpu_nodes = [n for n in snap.nodes.values()
-                     if n.gpus_total > 0 and n.gpus_used > 0]
-        if gpu_nodes:
-            duty_sum += (sum(n.gpu_load for n in gpu_nodes)
-                         / len(gpu_nodes))
-            head_sum += (sum(n.gpu_mem_free_gb / n.gpu_mem_total_gb
-                             for n in gpu_nodes) / len(gpu_nodes))
+        duty, head = _gpu_fold(snap)
+        if duty is not None:
+            duty_sum += duty
+            head_sum += head
             duty_polls += 1
         active = engine.active()
         insight_obs += len(active)

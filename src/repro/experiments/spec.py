@@ -39,7 +39,10 @@ class CampaignError(ValueError):
 # sensible experiment (the reference campaign uses 36 steps, 8 nodes,
 # 16 cells) yet keep the worst accepted spec bounded.
 MAX_STEPS_PER_CELL = 10_000          # duration_s / dt_s
-MAX_FLEET_NODES = 4_096              # n_cpu + n_gpu per cell
+# LLSC-scale ceiling: the columnar FleetState (DESIGN.md §10) keeps a
+# 100k-node cell tractable, so the cap is now sized to the largest
+# published reference system rather than to the object engine's limits.
+MAX_FLEET_NODES = 131_072            # n_cpu + n_gpu per cell
 MAX_JOBS = 10_000                    # n_jobs per cell
 MAX_TASKS_PER_JOB = 1_024
 MAX_NPPN = 64
