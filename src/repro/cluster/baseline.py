@@ -291,7 +291,8 @@ def object_snapshot(sim) -> ClusterSnapshot:
             state="R", job_type=s.job_type,
             gpus_per_node=s.gpus_per_task, gpu_request=s.gpu_request,
             start_time=job.start_time or 0.0, partition=s.partition,
-            mem_per_node_gb=s.profile.mem_gb))
+            mem_per_node_gb=s.profile.mem_gb,
+            submit_time=job.submit_time or 0.0))
     return ClusterSnapshot(sim.cluster, sim.t, nodes, jobs,
                            dict(sim.user_emails))
 

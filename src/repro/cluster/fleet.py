@@ -109,6 +109,14 @@ class FleetState:
         self.occ = np.zeros((n, max(self.max_gpus, 1)), np.int64)
         self.cores_used = np.zeros(n, np.int64)
         self.exclusive_job = np.full(n, -1, np.int64)
+        # per-node alive-task count and earliest task's user id, kept
+        # incrementally (exact in integers) so the scheduler's
+        # small-fleet dispatch path can answer "is this node held, and
+        # by whom?" without rebuilding the derived cache
+        self.n_tasks_node = np.zeros(n, np.int64)
+        self.first_user_node = np.full(n, -1, np.int64)
+        self._ntn_list: List[int] = [0] * n
+        self._ntn_list_version = 0
         # --- partition membership (static) ---
         self.part_mask: Dict[str, np.ndarray] = {}
         self.shared_mask = np.zeros(n, bool)
@@ -192,9 +200,10 @@ class FleetState:
         if nt + count > self._cap:
             self._grow(nt + count)
         sl = slice(nt, nt + count)
+        uid = self.user_id(jspec.username)
         self.t_node[sl] = idx
         self.t_job[sl] = job.job_id
-        self.t_user[sl] = self.user_id(jspec.username)
+        self.t_user[sl] = uid
         self.t_prof[sl] = self.profile_id(jspec.profile)
         self.t_cores[sl] = jspec.cores_per_task
         if jspec.gpus_per_task > 0:
@@ -203,6 +212,9 @@ class FleetState:
             self.t_gmask[sl] = 0
         self.n_tasks_total = nt + count
         self.cores_used[idx] += count * jspec.cores_per_task
+        if self.n_tasks_node[idx] == 0:
+            self.first_user_node[idx] = uid
+        self.n_tasks_node[idx] += count
         if jspec.exclusive:
             self.exclusive_job[idx] = job.job_id
         host = self.hostnames[idx]
@@ -277,6 +289,18 @@ class FleetState:
                 col = getattr(self, name)
                 col[: nt - n_rm] = col[:nt][keep]
             self.n_tasks_total = nt - n_rm
+            # incremental per-node task counts + earliest-task user; the
+            # compaction keeps insertion order, so a node's new earliest
+            # task is its first surviving row
+            np.subtract.at(self.n_tasks_node, nodes_rm, 1)
+            aff = np.unique(nodes_rm)
+            self.first_user_node[aff[self.n_tasks_node[aff] == 0]] = -1
+            refresh = aff[self.n_tasks_node[aff] > 0]
+            if len(refresh):
+                tn = self.t_node[: self.n_tasks_total]
+                for i in refresh.tolist():
+                    rows = np.flatnonzero(tn == i)
+                    self.first_user_node[i] = self.t_user[rows[0]]
         for h in hostnames:
             idx = self.host_index.get(h)
             if idx is not None and int(self.exclusive_job[idx]) in ids:
@@ -284,6 +308,15 @@ class FleetState:
         if n_rm or len(ids):
             self._dirty()
         return n_rm
+
+    def n_tasks_node_tolist(self) -> List[int]:
+        """``n_tasks_node`` as a plain list (cached per version) — the
+        small-fleet dispatch scan reads it per node, and Python-list
+        reads are ~3x cheaper than numpy scalar indexing."""
+        if self._ntn_list_version != self.version or self._ntn_list is None:
+            self._ntn_list = self.n_tasks_node.tolist()
+            self._ntn_list_version = self.version
+        return self._ntn_list
 
     # ------------------------------------------------------ derived state
     def cache(self) -> _DerivedCache:

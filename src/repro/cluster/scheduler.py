@@ -28,9 +28,17 @@ from typing import Dict, Iterator, List, Optional
 import numpy as np
 
 from repro.cluster.baseline import NodeState  # noqa: F401  (compat re-export)
+from repro.cluster.baseline import gpu_fit_distinct
 from repro.cluster.fleet import FleetState, gpu_task_capacity
 from repro.cluster.job import Job, JobSpec, RunningTask
 from repro.cluster.node import NodeSpec
+
+#: Below this many nodes, dispatch walks candidate nodes in preference
+#: order with early exit (the object path's algorithm over the columnar
+#: arrays) instead of evaluating whole-fleet fit expressions — the ~35
+#: fixed numpy dispatches per tick cost more than a short Python scan
+#: until fleets get large (BENCH_sim.json pins the crossover).
+SMALL_FLEET_MAX_NODES = 1024
 
 
 def _mask_bits(mask: int) -> tuple:
@@ -168,6 +176,19 @@ class Scheduler:
         self.running: List[Job] = []
         self.completed: List[Job] = []
         self._next_id = 26140000
+        # static per-partition candidate node lists in hostname order for
+        # the small-fleet dispatch scan; the GPU variant drops nodes that
+        # can never fit a GPU task (zero-fit nodes never enter a plan, so
+        # skipping them preserves the dispatch order exactly)
+        f = self.fleet
+        rank = sorted(range(f.n_nodes), key=f.hostnames.__getitem__)
+        self._part_rank: Dict[str, List[int]] = {}
+        self._part_rank_gpu: Dict[str, List[int]] = {}
+        for name in partitions:
+            mask = f.part_mask[name]
+            lst = [i for i in rank if mask[i]]
+            self._part_rank[name] = lst
+            self._part_rank_gpu[name] = [i for i in lst if f.gpus[i] > 0]
 
     # ------------------------------------------------------------- submit
     def submit(self, spec: JobSpec, now: float) -> Job:
@@ -206,8 +227,106 @@ class Scheduler:
                 caps, jspec.gpus_per_task))
         return np.where(elig, np.maximum(fit, 0), 0)
 
+    def _node_fit_py(self, idx: int, jspec: JobSpec, mask: np.ndarray,
+                     whole: bool, uid: int, remaining: int) -> int:
+        """Single-node task fit, mirroring the object path's
+        ``_node_fits`` check for check (the small-fleet dispatch scan
+        calls this only until the job's tasks are covered)."""
+        f = self.fleet
+        if not mask[idx] or f.exclusive_job[idx] >= 0:
+            return 0
+        n_on = int(f.n_tasks_node[idx])
+        if jspec.exclusive and n_on:
+            return 0
+        if whole and n_on and int(f.first_user_node[idx]) != uid:
+            return 0
+        fit = (int(f.cores[idx]) - int(f.cores_used[idx])) \
+            // max(jspec.cores_per_task, 1)
+        m = jspec.profile.mem_gb
+        if m > 0:
+            mem_used = 0.0
+            if n_on:
+                rows = np.flatnonzero(
+                    f.t_node[: f.n_tasks_total] == idx)
+                # sequential adds in insertion order — same float sum the
+                # object path's mem_used() walk produces
+                for v in f._prof_mem[f.t_prof[rows]].tolist():
+                    mem_used += v
+            fit = min(fit, int((float(f.mem_gb[idx]) - mem_used) // m))
+        if jspec.gpus_per_task > 0:
+            occ_row = f.occ[idx].tolist()
+            occ = {g: occ_row[g] for g in range(int(f.gpus[idx]))}
+            fit = gpu_fit_distinct(occ, jspec.tasks_per_gpu,
+                                   jspec.gpus_per_task, max(fit, 0))
+        return max(0, min(fit, remaining))
+
+    def _dispatch_small(self, job: Job, now: float) -> bool:
+        """Early-exit dispatch for small fleets: walk candidates in the
+        same (user-held, empty, other) × hostname preference order the
+        array path sorts by, stopping as soon as the job is covered.
+        Produces the identical placement plan — zero-fit nodes never
+        enter a plan, so skipping whole categories of them is safe."""
+        f = self.fleet
+        jspec = job.spec
+        plan: List[tuple] = []
+        if jspec.n_tasks > 0:
+            part = self.partitions.get(jspec.partition)
+            mask = f.part_mask.get(jspec.partition)
+            if part is None or mask is None:
+                return False
+            whole = part.get("policy", "whole-node") == "whole-node"
+            uid = f.user_id(jspec.username)
+            remaining = jspec.n_tasks
+            held = np.flatnonzero((f.n_tasks_node > 0)
+                                  & (f.first_user_node == uid))
+            if len(held) > 1:
+                held = held[np.argsort(f.hostrank[held])]
+            held_list = held.tolist()
+            for idx in held_list:                 # cat 0: user-held nodes
+                fit = self._node_fit_py(idx, jspec, mask, whole, uid,
+                                        remaining)
+                if fit > 0:
+                    plan.append((idx, fit))
+                    remaining -= fit
+                    if remaining <= 0:
+                        break
+            cand = (self._part_rank_gpu if jspec.gpus_per_task > 0
+                    else self._part_rank).get(jspec.partition, ())
+            ntn = f.n_tasks_node_tolist()
+            if remaining > 0:
+                for idx in cand:                  # cat 1: empty nodes
+                    if ntn[idx] == 0:
+                        fit = self._node_fit_py(idx, jspec, mask, whole,
+                                                uid, remaining)
+                        if fit > 0:
+                            plan.append((idx, fit))
+                            remaining -= fit
+                            if remaining <= 0:
+                                break
+            if remaining > 0:
+                held_set = set(held_list)
+                for idx in cand:                  # cat 2: other users'
+                    if ntn[idx] > 0 and idx not in held_set:
+                        fit = self._node_fit_py(idx, jspec, mask, whole,
+                                                uid, remaining)
+                        if fit > 0:
+                            plan.append((idx, fit))
+                            remaining -= fit
+                            if remaining <= 0:
+                                break
+            if remaining > 0:
+                return False
+        for idx, count in plan:
+            f.place(idx, job, count)
+        job.state = "R"
+        job.start_time = now
+        self.running.append(job)
+        return True
+
     def _try_dispatch(self, job: Job, now: float) -> bool:
         f = self.fleet
+        if f.n_nodes <= SMALL_FLEET_MAX_NODES:
+            return self._dispatch_small(job, now)
         jspec = job.spec
         if jspec.n_tasks > 0:
             fits = self._fits(jspec)

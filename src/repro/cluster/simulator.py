@@ -22,11 +22,17 @@ from repro.core.metrics import ClusterSnapshot, JobRecord
 
 class ClusterSim:
     def __init__(self, nodes: List[NodeSpec], *, cluster: str = "txgreen",
-                 partitions: Optional[dict] = None, seed: int = 0):
+                 partitions: Optional[dict] = None, seed: int = 0,
+                 show_pending: bool = False):
+        """``show_pending`` additionally surfaces queued (``PD``) jobs in
+        snapshots — opt-in so existing consumers (and goldens) keep
+        seeing only running jobs; the arrival-driven experiment
+        scenarios enable it so queue-wait rules can observe the queue."""
         self.cluster = cluster
         self.sched = Scheduler(nodes, partitions)
         self.t = 0.0
         self.seed = seed
+        self.show_pending = show_pending
         self.user_emails: Dict[str, str] = {}
         self._jobrec: Dict[int, JobRecord] = {}
 
@@ -74,13 +80,29 @@ class ClusterSim:
                 state="R", job_type=s.job_type,
                 gpus_per_node=s.gpus_per_task, gpu_request=s.gpu_request,
                 start_time=job.start_time or 0.0, partition=s.partition,
-                mem_per_node_gb=s.profile.mem_gb)
+                mem_per_node_gb=s.profile.mem_gb,
+                submit_time=job.submit_time or 0.0)
             self._jobrec[job.job_id] = rec
         return rec
+
+    def _pending_record(self, job) -> JobRecord:
+        """JobRecord for a queued job — built fresh each snapshot (no
+        cache: the record changes shape when the job dispatches)."""
+        s = job.spec
+        return JobRecord(
+            job_id=job.job_id, username=s.username, name=s.name,
+            nodes=[], cores_per_node=s.cores_per_task, state="PD",
+            job_type=s.job_type, gpus_per_node=s.gpus_per_task,
+            gpu_request=s.gpu_request, start_time=0.0,
+            partition=s.partition, mem_per_node_gb=s.profile.mem_gb,
+            submit_time=job.submit_time or 0.0)
 
     def snapshot(self) -> ClusterSnapshot:
         cols = self.sched.fleet.snapshot_columns(self.t)
         jobs = [self._job_record(job) for job in self.sched.running]
+        if self.show_pending:
+            jobs += [self._pending_record(job)
+                     for job in self.sched.pending]
         if len(self._jobrec) > 4 * max(len(jobs), 16):
             alive = {job.job_id for job in self.sched.running}
             self._jobrec = {j: r for j, r in self._jobrec.items()

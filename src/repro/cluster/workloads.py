@@ -68,6 +68,17 @@ def overloaded_gpu_job(user, tasks=8, tasks_per_gpu=4,
                                        gpu_mem_gb=2.0))
 
 
+def fragmented_job(user, tasks=1, name="one_task.sh"):
+    """Fleet fragmentation: a tiny exclusive job that pins a whole node
+    at a few busy cores.  Submitted in bulk these fragment the fleet —
+    the ``fleet_fragmentation`` rule's target; consolidation (dropping
+    ``exclusive``) lets the whole batch share a couple of nodes."""
+    return JobSpec(user, name, n_tasks=tasks, cores_per_task=4,
+                   duration_s=86400.0, exclusive=True,
+                   profile=TaskProfile(threads=4, cpu_activity=0.9,
+                                       mem_gb=16.0))
+
+
 def thread_oversubscribed_job(user, tasks=2, name="multiproc.py"):
     """Fig 10: each task spawns as many threads as the node has cores; with
     2 tasks per node the runnable-thread count is ~2x cores (norm ~2.2)."""

@@ -3,7 +3,7 @@
 Usage (mirrors the paper's flags, plus the streaming extensions):
 
     python -m repro.core.cli [-g] [--all] [-t N] [-n HOST,HOST] [--advise]
-                             [--tsv] [-q] [--user USER]
+                             [--tsv] [-q] [--user USER] [--job ID]
                              [--filter EXPR] [--sort SPEC] [--columns LIST]
                              [--limit N] [--format FMT] [--table TABLE]
                              [--group-by COL]
@@ -29,8 +29,15 @@ Every view is a canned :class:`repro.query.Query` (DESIGN.md §7):
 ``--limit`` override it, and ``--format table|json|csv|tsv|prom`` swaps
 the paper's text layout for a machine-readable renderer — one-shot, in
 ``--watch`` frames, and (``--source remote``) answered server-side by
-the daemon's ``/query`` endpoint.  ``--table nodes|users|jobs|history|insights``
-skips the view scoping and queries a table directly.
+the daemon's ``/query`` endpoint.  ``--table
+nodes|users|jobs|history|insights|job_history`` skips the view scoping
+and queries a table directly.
+
+``--job ID`` renders the MPCDF-style single-job report (DESIGN.md
+§11): lifetime utilization stats, memory/HBM headroom, and a roofline
+verdict.  Locally it spans one snapshot; against ``--source remote``
+it is answered server-side by the daemon's ``GET /job/{id}`` from the
+job-keyed history tier — byte-identical rendering either way.
 
 ``--advise`` renders the §V-B insights view (DESIGN.md §8): every
 active diagnosis from the pluggable rule registry, one-shot or
@@ -119,19 +126,21 @@ def build_view_query(args):
     return q, kind, fmt
 
 
-def render_view(snap, args, prebuilt=None, insights=None) -> str:
+def render_view(snap, args, prebuilt=None, insights=None,
+                jobstore=None) -> str:
     """Render the view selected by the parsed flags (shared by the
     one-shot and --watch paths).  Machine formats end with a newline;
     the legacy text layouts do not (the caller prints them).
     ``prebuilt`` is a ``build_view_query(args)`` result to reuse, so
     watch frames don't re-parse the same filter/sort strings;
     ``insights`` is the InsightEngine backing the advise view /
-    insights table."""
+    insights table; ``jobstore`` the JobHistoryStore backing the
+    job_history table."""
     if args.tsv:
         return snap.to_tsv()
     q, kind, fmt = prebuilt if prebuilt is not None \
         else build_view_query(args)
-    rs = run_query(snap, q, insights=insights)
+    rs = run_query(snap, q, insights=insights, jobstore=jobstore)
     if fmt != "text":
         return get_renderer(fmt).render(rs)
     if kind == "advise":
@@ -309,6 +318,54 @@ def _run_experiment(args) -> int:
         return 0
 
 
+def _run_job(args) -> int:
+    """The ``--job`` verb: render the MPCDF-style job report (DESIGN.md
+    §11).  ``--source remote`` forwards to the daemon's ``GET /job/{id}``
+    (rendered from its full job history tier); locally a fresh
+    JobHistoryStore observes one snapshot — the same render path either
+    way, so the bytes match."""
+    if args.source == "remote":
+        from repro.daemon.client import RemoteClient, RemoteError
+        urls = [u.strip() for u in (args.url or "").split(",")
+                if u.strip()]
+        if len(urls) != 1:
+            print("LLload: --job --source remote needs exactly one --url "
+                  "(the report renders on that daemon)", file=sys.stderr)
+            return 1
+        try:
+            body = RemoteClient(urls[0]).job(args.job)
+            sys.stdout.write(body)
+            sys.stdout.flush()
+            return 0
+        except RemoteError as exc:
+            # covers old daemons without /job/{id}: their 404 envelope
+            # lands here as a one-line error, not a traceback
+            print(f"LLload: {exc}", file=sys.stderr)
+            return 1
+        except BrokenPipeError:
+            _squelch_broken_pipe()
+            return 0
+
+    from repro.daemon.store import JobHistoryStore
+    source = make_source_from_args(args)
+    snap = source.snapshot()
+    jobstore = JobHistoryStore()
+    jobstore.observe(snap)
+    samples = jobstore.raw_points(args.job)
+    lifetime = jobstore.lifetime(args.job)
+    if not samples or lifetime is None:
+        print(f"LLload: unknown job {args.job} (not in the current "
+              "snapshot)", file=sys.stderr)
+        return 1
+    try:
+        print(formatting.job_report_text(snap.cluster, samples, lifetime))
+        sys.stdout.flush()
+        return 0
+    except BrokenPipeError:
+        _squelch_broken_pipe()
+        return 0
+
+
 def _positive_int(s: str) -> int:
     try:
         v = int(s)
@@ -363,8 +420,12 @@ def main(argv=None) -> int:
                     help="output renderer (text = the paper's layout)")
     ap.add_argument("--table", default=None,
                     choices=["nodes", "users", "jobs", "history",
-                             "insights"],
+                             "insights", "job_history"],
                     help="query a table directly instead of a view")
+    ap.add_argument("--job", type=int, default=None, metavar="ID",
+                    help="render the job report for one job: per-job "
+                         "time-series stats, memory headroom, queue "
+                         "wait, and a roofline verdict")
     ap.add_argument("--group-by", default=None, dest="group_by",
                     metavar="COL", help="partition rows by a column "
                                         "(machine formats)")
@@ -425,6 +486,16 @@ def main(argv=None) -> int:
                 "--experiment --watch streams local progress frames; a "
                 "remote campaign (GET /experiments) answers in one shot "
                 "— drop --watch or run without --source remote")
+        if args.job is not None and (args.experiment or args.tsv
+                                     or args.advise or args.table
+                                     or args.t is not None
+                                     or args.n is not None or args.watch):
+            raise QueryError(
+                "--job renders one job's report and cannot combine with "
+                "--experiment/--tsv/--advise/--table/-t/-n/--watch "
+                "(use --table job_history for the queryable series)")
+        if args.job is not None:
+            return _run_job(args)
         if args.experiment:
             return _run_experiment(args)
         if args.tsv and (has_query_flags(args) or args.advise):
@@ -464,21 +535,32 @@ def main(argv=None) -> int:
         from repro.insights import InsightEngine
         engine = InsightEngine()
 
+    # the job_history table reads a JobHistoryStore the same way: one
+    # observation per snapshot, accumulated across --watch frames
+    jobstore = None
+    if getattr(args, "table", None) == "job_history":
+        from repro.daemon.store import JobHistoryStore
+        jobstore = JobHistoryStore()
+
     try:
         if args.watch:
             bus = TelemetryBus(ttl_s=3.0 * args.interval)
             bus.register(source)
             if engine is not None:
                 bus.subscribe(engine.subscriber(source.name))
+            if jobstore is not None:
+                bus.subscribe(jobstore.subscriber(source.name))
             if prebuilt is not None and prebuilt[2] != "text":
                 # machine renderers end with a newline and the watch
                 # loop adds its own; drop ours so a frame's bytes match
                 # the one-shot output exactly (no blank separator line)
                 def frame(snap):
-                    return render_view(snap, args, prebuilt, engine)[:-1]
+                    return render_view(snap, args, prebuilt, engine,
+                                       jobstore)[:-1]
             else:
                 def frame(snap):
-                    return render_view(snap, args, prebuilt, engine)
+                    return render_view(snap, args, prebuilt, engine,
+                                       jobstore)
             ws = watch(bus, frame,
                        source_name=source.name, interval_s=args.interval,
                        max_frames=args.frames)
@@ -493,9 +575,11 @@ def main(argv=None) -> int:
         snap = source.snapshot()
         if engine is not None:
             engine.observe(snap)
+        if jobstore is not None:
+            jobstore.observe(snap)
         # one-shot output can land in a closed pager (`LLload ... | head`):
         # a BrokenPipeError is a normal exit, not a traceback
-        out = render_view(snap, args, prebuilt, engine)
+        out = render_view(snap, args, prebuilt, engine, jobstore)
         machine = bool(args.tsv or args.table
                        or resolve_format(args.format, args.columns,
                                          args.group_by) != "text")

@@ -264,6 +264,91 @@ def advise_view_text(snap: ClusterSnapshot, rows: Sequence[dict]) -> str:
     return "\n".join(lines)
 
 
+# ------------------------------------------------------------- job report
+
+#: ASCII sparkline ramp (lowest to highest); ASCII so report bytes are
+#: stable across terminal encodings and golden files diff cleanly.
+_SPARK_RAMP = " .:-=+*#%@"
+
+
+def sparkline(values: Sequence[float], lo: float = 0.0,
+              hi: float = 1.0) -> str:
+    """Values as a fixed-ramp ASCII sparkline (one char per value),
+    clamped to ``[lo, hi]`` so duty cycles render on an absolute scale."""
+    span = max(hi - lo, 1e-12)
+    out = []
+    for v in values:
+        frac = min(1.0, max(0.0, (v - lo) / span))
+        out.append(_SPARK_RAMP[min(int(frac * len(_SPARK_RAMP)),
+                                   len(_SPARK_RAMP) - 1)])
+    return "".join(out)
+
+
+def _agg_line(label: str, agg, spark: str = "") -> str:
+    line = (f"{label:<9}: min {agg.min:6.2f}  mean {agg.mean:6.2f}  "
+            f"max {agg.max:6.2f}")
+    if spark:
+        line += f"  [{spark}]"
+    return line
+
+
+def _headroom(used: float, total: float) -> str:
+    if total <= 0:
+        return "n/a"
+    return f"{max(0.0, total - used) / total * 100:.0f}%"
+
+
+def job_report_text(cluster: str, samples: Sequence, lifetime: Dict) -> str:
+    """The MPCDF-style per-job performance report (DESIGN.md §11).
+
+    One page per job: identity, queue wait, lifetime duty/load/memory
+    statistics with an absolute-scale duty sparkline over the retained
+    raw samples, memory/HBM headroom from the newest sample, and a
+    roofline verdict from the monitoring-side roofline bridge.  This is
+    the single render path shared by the local CLI, the daemon's
+    ``GET /job/{id}``, and remote forwarding — which is what makes
+    ``--job`` output byte-identical across sources.
+
+    Args:
+        cluster: cluster name for the header.
+        samples: the job's retained raw ring
+            (:class:`repro.daemon.store.JobSample`, oldest first,
+            non-empty).
+        lifetime: lifetime :class:`repro.daemon.store.Agg` per sampled
+            field (``gpu_duty``/``cpu_load``/``mem_used_gb``/
+            ``step_time_s``).
+    """
+    from repro.roofline import verdict_from_monitoring
+
+    last = samples[-1]
+    span = last.t - samples[0].t
+    lines = [
+        f"LLload job report: cluster {cluster}, job {last.job_id}",
+        (f"User: {last.username}   Name: {last.name}   "
+         f"State: {last.state}   Nodes: {last.n_nodes}"),
+        (f"Queue wait: {last.queue_wait_s:.0f}s   "
+         f"Samples: {len(samples)} raw spanning {span:.0f}s"),
+        "",
+        _agg_line("GPU duty", lifetime["gpu_duty"],
+                  sparkline([s.gpu_duty for s in samples])),
+        _agg_line("CPU load", lifetime["cpu_load"]),
+        _agg_line("Mem (GB)", lifetime["mem_used_gb"]),
+        (f"Memory   : {last.mem_used_gb:.1f}GB used / "
+         f"{last.mem_total_gb:.1f}GB  "
+         f"(headroom {_headroom(last.mem_used_gb, last.mem_total_gb)})"),
+        (f"HBM      : {last.gpu_mem_used_gb:.1f}GB used / "
+         f"{last.gpu_mem_total_gb:.1f}GB  (headroom "
+         + _headroom(last.gpu_mem_used_gb, last.gpu_mem_total_gb) + ")"),
+    ]
+    if lifetime["step_time_s"].max > 0:
+        lines.append(f"Step time: {lifetime['step_time_s'].mean:.3f}s mean")
+    lines.append("")
+    lines.append("Roofline : " + verdict_from_monitoring(
+        lifetime["gpu_duty"].mean, lifetime["step_time_s"].mean,
+        last.gpu_mem_used_gb))
+    return "\n".join(lines)
+
+
 def all_view_text(snap: ClusterSnapshot, rows: Sequence[dict],
                   requesting_user: str, privileged: bool,
                   gpu: bool = False) -> str:

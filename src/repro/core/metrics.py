@@ -212,6 +212,13 @@ class JobRecord:
     start_time: float = 0.0
     partition: str = "normal"
     mem_per_node_gb: float = 0.0
+    # --- per-job samples (additive wire fields; 0.0 = "not reported",
+    # consumers derive from the job's nodes instead — see daemon/store) ---
+    submit_time: float = 0.0       # for queue-wait (start - submit)
+    gpu_duty: float = 0.0          # self-reported device duty (MFU proxy)
+    cpu_load: float = 0.0          # self-reported normalized CPU load
+    mem_used_gb: float = 0.0       # self-reported memory footprint
+    step_time_s: float = 0.0       # training/serving step time, if any
 
 
 @dataclasses.dataclass

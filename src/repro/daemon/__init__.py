@@ -12,12 +12,14 @@ from repro.daemon.promtext import parse_prometheus, render_prometheus
 from repro.daemon.protocol import (WIRE_VERSION, WireError, decode_snapshot,
                                    encode_snapshot)
 from repro.daemon.server import (LLloadDaemon, serve, serve_background)
-from repro.daemon.store import (DEFAULT_TIERS, HistoryStore, TierPoint,
-                                TierSpec)
+from repro.daemon.store import (DEFAULT_TIERS, HistoryStore,
+                                JobHistoryStore, JobPoint, JobSample,
+                                TierPoint, TierSpec, job_sample)
 
 __all__ = [
-    "DEFAULT_TIERS", "HistoryStore", "LLloadDaemon", "RemoteClient",
+    "DEFAULT_TIERS", "HistoryStore", "JobHistoryStore", "JobPoint",
+    "JobSample", "LLloadDaemon", "RemoteClient",
     "RemoteError", "RemoteSource", "TierPoint", "TierSpec", "WIRE_VERSION",
-    "WireError", "decode_snapshot", "encode_snapshot", "parse_prometheus",
-    "render_prometheus", "serve", "serve_background",
+    "WireError", "decode_snapshot", "encode_snapshot", "job_sample",
+    "parse_prometheus", "render_prometheus", "serve", "serve_background",
 ]

@@ -105,6 +105,14 @@ class RemoteClient:
         streaming insight engine."""
         return self._get("/insights", params).decode("utf-8")
 
+    def job(self, job_id: int) -> str:
+        """GET /job/{id} — the MPCDF-style job report (DESIGN.md §11),
+        rendered server-side from the daemon's job history tier.  An
+        old daemon without the endpoint answers 404, which surfaces
+        here as a :class:`RemoteError` (graceful ``--job`` failure,
+        not a traceback)."""
+        return self._get(f"/job/{int(job_id)}").decode("utf-8")
+
     def experiments(self, **params) -> str:
         """GET /experiments with the params passed through verbatim —
         a §V-B overloading campaign run (and memoized) server-side

@@ -15,6 +15,23 @@ from repro.core.metrics import ClusterSnapshot
 
 CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
 
+# per-job gauges are label-bounded: at most JOB_LABEL_BUDGET jobs (top
+# by device duty) get their own ``job``/``user`` labels, everything else
+# folds into one ``job="other"`` series — the same hardening as the
+# per-endpoint request counter (a 10k-job snapshot must not mint 10k
+# label values per scrape)
+JOB_LABEL_BUDGET = 8
+
+_JOB_GAUGES = [
+    # (metric suffix, help text, JobSample attribute, other-bucket agg)
+    ("job_gpu_duty", "device duty cycle (MFU proxy)", "gpu_duty", "mean"),
+    ("job_cpu_load", "normalized CPU load", "cpu_load", "mean"),
+    ("job_mem_used_gb", "memory used (GB)", "mem_used_gb", "sum"),
+    ("job_queue_wait_s", "submit-to-start wait (s)", "queue_wait_s",
+     "mean"),
+    ("job_nodes", "nodes the job occupies", "n_nodes", "sum"),
+]
+
 _NODE_GAUGES = [
     # (metric suffix, help text, NodeSnapshot attribute)
     ("node_cores_total", "CPU cores on the node", "cores_total"),
@@ -64,9 +81,17 @@ class _Writer:
 def render_prometheus(snap: ClusterSnapshot, *,
                       counters: Optional[Dict[str, float]] = None,
                       insights: Optional[List] = None,
+                      job_samples: Optional[List] = None,
+                      job_label_budget: int = JOB_LABEL_BUDGET,
                       prefix: str = "llload_") -> str:
-    """One scrape body: snapshot gauges + optional daemon counters and
-    active-insight gauges.
+    """One scrape body: snapshot gauges + optional daemon counters,
+    active-insight gauges and bounded per-job gauges.
+
+    ``job_samples`` is a list of :class:`~repro.daemon.store.JobSample`
+    (the daemon samples its current snapshot); the ``job_label_budget``
+    highest-duty jobs get their own ``job``/``user`` labels, the rest
+    aggregate into ``job="other"`` so the metric family stays bounded no
+    matter how many jobs the cluster runs (DESIGN.md §11).
 
     ``counters`` maps ``name`` or ``name{label="v"}``-style keys (already
     flattened by the caller) to monotonic values; they are emitted as
@@ -110,6 +135,29 @@ def render_prometheus(snap: ClusterSnapshot, *,
             duty = sum(n.gpu_load for n in gpu_nodes) / len(gpu_nodes)
             w.sample(f"{prefix}user_gpu_duty",
                      [("cluster", cluster), ("user", user)], duty)
+
+    if job_samples is not None:
+        w.header(f"{prefix}jobs_tracked", "jobs in the snapshot", "gauge")
+        w.sample(f"{prefix}jobs_tracked", [("cluster", cluster)],
+                 len(job_samples))
+        ordered = sorted(job_samples,
+                         key=lambda s: (-s.gpu_duty, s.job_id))
+        top = ordered[:job_label_budget]
+        rest = ordered[job_label_budget:]
+        for suffix, help_text, attr, agg in _JOB_GAUGES:
+            name = prefix + suffix
+            w.header(name, help_text + " (top jobs by duty; the rest "
+                     "fold into job=\"other\")", "gauge")
+            for s in top:
+                w.sample(name, [("cluster", cluster),
+                                ("job", str(s.job_id)),
+                                ("user", s.username)],
+                         getattr(s, attr))
+            if rest:
+                vals = [getattr(s, attr) for s in rest]
+                v = sum(vals) if agg == "sum" else sum(vals) / len(vals)
+                w.sample(name, [("cluster", cluster), ("job", "other"),
+                                ("user", "")], v)
 
     if insights is not None:
         name = f"{prefix}insights_active"

@@ -36,6 +36,9 @@ _JOB_FIELDS = [
     "job_id", "username", "name", "nodes", "cores_per_node", "state",
     "job_type", "gpus_per_node", "gpu_request", "start_time", "partition",
     "mem_per_node_gb",
+    # per-job samples (additive, v1-compatible: old decoders ignore them,
+    # old payloads decode with the JobRecord defaults)
+    "submit_time", "gpu_duty", "cpu_load", "mem_used_gb", "step_time_s",
 ]
 
 

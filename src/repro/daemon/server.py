@@ -49,7 +49,8 @@ from typing import Dict, Optional, Tuple
 
 from repro.core import formatting
 from repro.daemon import promtext, protocol
-from repro.daemon.store import HistoryStore, as_snapshots
+from repro.daemon.store import (HistoryStore, JobHistoryStore,
+                                as_snapshots, job_sample)
 from repro.insights import InsightEngine
 from repro.monitor import TelemetryBus, build_source
 from repro.query import (Query, QueryError, advise_query, apply_modifiers,
@@ -63,7 +64,7 @@ TEXT_CT = "text/plain; charset=utf-8"
 # derived purely from the current snapshot / store state; /experiments
 # is deterministic per spec and additionally memoized across windows)
 _CACHEABLE = ("/snapshot", "/query", "/view/", "/metrics", "/trend",
-              "/weekly", "/insights", "/experiments")
+              "/weekly", "/insights", "/experiments", "/job/")
 
 # the fixed label vocabulary for the per-endpoint request counter:
 # arbitrary client paths must not mint new Prometheus label values (label
@@ -71,7 +72,7 @@ _CACHEABLE = ("/snapshot", "/query", "/view/", "/metrics", "/trend",
 _KNOWN_ENDPOINTS = frozenset([
     "/snapshot", "/query", "/view/user", "/view/top", "/view/nodes",
     "/insights", "/experiments", "/trend", "/weekly", "/healthz",
-    "/stats", "/metrics",
+    "/stats", "/metrics", "/job",
 ])
 
 
@@ -99,6 +100,10 @@ class LLloadDaemon:
         # collection is folded once, so /insights reads are O(active)
         self.insights = InsightEngine()
         self.bus.subscribe(self.insights.subscriber(source.name))
+        # the job-keyed tier streams the same way: one fold per
+        # collection, so /job/{id} and the job_history table are O(read)
+        self.jobstore = JobHistoryStore()
+        self.bus.subscribe(self.jobstore.subscriber(source.name))
         self.privileged = privileged if privileged is not None else set()
         self.ttl_s = ttl_s
         self._started = time.monotonic()
@@ -133,6 +138,7 @@ class LLloadDaemon:
         for snap in as_snapshots(archive_or_snaps):
             self.store.append(snap)
             self.insights.observe(snap)
+            self.jobstore.observe(snap)
             n += 1
         return n
 
@@ -160,7 +166,10 @@ class LLloadDaemon:
                ) -> Tuple[int, str, bytes]:
         """Serve one request; returns (status, content type, body)."""
         query = query or {}
-        endpoint = path if path in _KNOWN_ENDPOINTS else "other"
+        # /job/{id} carries an arbitrary id in the path: count it as
+        # "/job" so request-counter labels stay bounded
+        endpoint = ("/job" if path.startswith("/job/")
+                    else path if path in _KNOWN_ENDPOINTS else "other")
         with self._lock:
             self._requests[endpoint] = self._requests.get(endpoint, 0) + 1
 
@@ -247,6 +256,7 @@ class LLloadDaemon:
                 "bus": {"reads": st.reads, "cache_hits": st.cache_hits,
                         "collections": st.collections, "errors": st.errors},
                 "store": self.store.sizes(),
+                "jobstore": self.jobstore.sizes(),
                 "http": self.counters()})
         if path == "/snapshot":
             snap = self.bus.read(self.source.name)
@@ -254,10 +264,10 @@ class LLloadDaemon:
                 protocol.encode_snapshot(snap))
         if path == "/metrics":
             snap = self.bus.read(self.source.name)
-            text = promtext.render_prometheus(snap,
-                                              counters=self.counters(),
-                                              insights=self.insights
-                                              .active())
+            text = promtext.render_prometheus(
+                snap, counters=self.counters(),
+                insights=self.insights.active(),
+                job_samples=[job_sample(snap, j) for j in snap.jobs])
             return 200, promtext.CONTENT_TYPE, text.encode("utf-8")
         if path == "/trend":
             window = _float_q(query, "window")
@@ -296,6 +306,8 @@ class LLloadDaemon:
             return self._experiments(query)
         if path.startswith("/view/"):
             return self._view(path[len("/view/"):], query)
+        if path.startswith("/job/"):
+            return self._job(path[len("/job/"):])
         raise HTTPError(404, f"unknown endpoint {path!r}")
 
     def _query(self, query: Dict[str, str]) -> Tuple[int, str, bytes]:
@@ -313,7 +325,8 @@ class LLloadDaemon:
             renderer = get_renderer(fmt)
             snap = self.bus.read(self.source.name)
             rs = run_query(snap, q, store=self.store,
-                           insights=self.insights)
+                           insights=self.insights,
+                           jobstore=self.jobstore)
             body = renderer.render(rs)      # prom may reject dup labels
         except QueryError as exc:
             raise HTTPError(400, str(exc)) from exc
@@ -402,6 +415,24 @@ class LLloadDaemon:
         except QueryError as exc:
             raise HTTPError(400, str(exc)) from exc
         return 200, renderer.content_type, body.encode("utf-8")
+
+    def _job(self, id_part: str) -> Tuple[int, str, bytes]:
+        """The MPCDF-style job report (DESIGN.md §11), answered from the
+        job-keyed history tier; the same render path the local CLI uses,
+        so ``LLload --job ID --source remote`` is byte-identical."""
+        try:
+            job_id = int(id_part)
+        except ValueError as exc:
+            raise HTTPError(400, f"/job/{{id}} needs an integer job id, "
+                            f"got {id_part!r}") from exc
+        snap = self.bus.read(self.source.name)   # feeds the store if stale
+        samples = self.jobstore.raw_points(job_id)
+        lifetime = self.jobstore.lifetime(job_id)
+        if not samples or lifetime is None:
+            raise HTTPError(404, f"unknown job {job_id} (not in the "
+                            "current snapshot or retained history)")
+        text = formatting.job_report_text(snap.cluster, samples, lifetime)
+        return 200, TEXT_CT, (text + "\n").encode("utf-8")
 
     def _view(self, kind: str, query: Dict[str, str]
               ) -> Tuple[int, str, bytes]:

@@ -29,7 +29,7 @@ from typing import Deque, Dict, Iterable, List, Optional, Tuple
 
 from repro.core.analysis import (SNAPSHOT_INTERVAL_HOURS, WeeklyReport,
                                  weekly_from_buckets)
-from repro.core.metrics import ClusterSnapshot
+from repro.core.metrics import ClusterSnapshot, JobRecord
 
 
 def as_snapshots(archive_or_snaps) -> Iterable[ClusterSnapshot]:
@@ -343,3 +343,211 @@ class HistoryStore:
                    and (end is None or p.bucket_start <= end)]
         return weekly_from_buckets(buckets, emails=emails,
                                    interval_hours=interval_hours)
+
+
+# ---------------------------------------------------------------------------
+# Job-keyed history tier (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class JobSample:
+    """One job's per-snapshot sample — self-reported wire fields when the
+    producer filled them, otherwise derived from the job's nodes."""
+    t: float
+    job_id: int
+    username: str
+    name: str
+    state: str
+    n_nodes: int
+    gpu_duty: float
+    cpu_load: float
+    mem_used_gb: float
+    mem_total_gb: float
+    gpu_mem_used_gb: float
+    gpu_mem_total_gb: float
+    queue_wait_s: float
+    step_time_s: float
+
+
+def job_sample(snap: ClusterSnapshot, job: JobRecord) -> JobSample:
+    """Sample one job from one snapshot.
+
+    Self-reported per-job wire fields (``gpu_duty``, ``cpu_load``,
+    ``mem_used_gb``, ``step_time_s``) win when non-zero; otherwise the
+    sample is the mean over the job's nodes — which is exact under the
+    paper's whole-node scheduling (the job is the only tenant).  Queue
+    wait is ``start - submit`` for started jobs and ``now - submit`` for
+    still-pending ones (0.0 when the producer reports no submit time).
+    """
+    nodes = [n for n in (snap.nodes.get(h) for h in job.nodes)
+             if n is not None]
+    k = max(len(nodes), 1)
+    duty = job.gpu_duty or (sum(n.gpu_load for n in nodes) / k)
+    cpu = job.cpu_load or (sum(n.norm_load for n in nodes) / k)
+    mem = job.mem_used_gb or (sum(n.mem_used_gb for n in nodes) / k)
+    if job.submit_time <= 0.0:
+        wait = 0.0
+    elif job.state == "PD" or not job.start_time:
+        wait = max(0.0, snap.timestamp - job.submit_time)
+    else:
+        wait = max(0.0, job.start_time - job.submit_time)
+    return JobSample(
+        t=snap.timestamp, job_id=job.job_id, username=job.username,
+        name=job.name, state=job.state, n_nodes=len(job.nodes),
+        gpu_duty=duty, cpu_load=cpu, mem_used_gb=mem,
+        mem_total_gb=sum(n.mem_total_gb for n in nodes) / k,
+        gpu_mem_used_gb=sum(n.gpu_mem_used_gb for n in nodes) / k,
+        gpu_mem_total_gb=sum(n.gpu_mem_total_gb for n in nodes) / k,
+        queue_wait_s=wait, step_time_s=job.step_time_s)
+
+
+_JOB_AGG_FIELDS = ("gpu_duty", "cpu_load", "mem_used_gb", "step_time_s")
+
+
+@dataclasses.dataclass
+class JobPoint:
+    """One downsampled per-job bucket (15-minute by default)."""
+    bucket_start: float
+    count: int = 0
+    gpu_duty: Agg = dataclasses.field(default_factory=Agg)
+    cpu_load: Agg = dataclasses.field(default_factory=Agg)
+    mem_used_gb: Agg = dataclasses.field(default_factory=Agg)
+    step_time_s: Agg = dataclasses.field(default_factory=Agg)
+
+    def fold(self, sample: JobSample):
+        """Fold one sample into every aggregated field."""
+        for f in _JOB_AGG_FIELDS:
+            getattr(self, f).fold(getattr(sample, f))
+        self.count += 1
+
+
+class _JobSeries:
+    """One job's retained history: raw ring, 15-min tier, lifetime
+    aggregates (which survive raw/tier aging-out)."""
+
+    def __init__(self, raw_capacity: int, bucket_s: float,
+                 bucket_capacity: int):
+        self.bucket_s = bucket_s
+        self.raw: Deque[JobSample] = collections.deque(maxlen=raw_capacity)
+        self.points: Deque[JobPoint] = collections.deque(
+            maxlen=bucket_capacity)
+        self.current: Optional[JobPoint] = None
+        self.last: Optional[JobSample] = None       # newest sample seen
+        self.lifetime = {f: Agg() for f in _JOB_AGG_FIELDS}
+
+    def fold(self, sample: JobSample) -> bool:
+        """Absorb one sample.  Samples at or before the newest retained
+        timestamp are dropped (returns False): the same restart-tolerant
+        policy as :meth:`_Tier.fold`, plus duplicate suppression so
+        re-observing a cached snapshot (every poll inside a daemon's TTL
+        window) cannot skew the aggregates."""
+        if self.last is not None and sample.t <= self.last.t:
+            return False
+        start = math.floor(sample.t / self.bucket_s) * self.bucket_s
+        cur = self.current
+        if cur is None or start > cur.bucket_start:
+            if cur is not None:
+                self.points.append(cur)
+            cur = self.current = JobPoint(bucket_start=start)
+        cur.fold(sample)
+        self.raw.append(sample)
+        self.last = sample
+        for f in _JOB_AGG_FIELDS:
+            self.lifetime[f].fold(getattr(sample, f))
+        return True
+
+    def all_points(self) -> List[JobPoint]:
+        """Finalized buckets plus a copy of the open one (same torn-read
+        discipline as :meth:`_Tier.all_points`; call under the lock)."""
+        pts = list(self.points)
+        if self.current is not None:
+            pts.append(copy.deepcopy(self.current))
+        return pts
+
+
+class JobHistoryStore:
+    """Job-keyed history: per-job raw ring → 15-min downsampling, with
+    bounded per-job retention and a bounded job population (least-
+    recently-seen jobs evicted first).  Thread-safe, same reader/writer
+    discipline as :class:`HistoryStore`."""
+
+    def __init__(self, *, raw_per_job: int = 64, bucket_s: float = 900.0,
+                 buckets_per_job: int = 4 * 24 * 7,
+                 max_jobs: int = 4096):
+        self.raw_per_job = raw_per_job
+        self.bucket_s = bucket_s
+        self.buckets_per_job = buckets_per_job
+        self.max_jobs = max_jobs
+        self._jobs: "collections.OrderedDict[int, _JobSeries]" = \
+            collections.OrderedDict()
+        self._appended = 0
+        self._dropped = 0
+        self._evicted = 0
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- writes
+    def observe(self, snap: ClusterSnapshot):
+        """Fold every job of one snapshot (bus-subscriber entry point)."""
+        samples = [job_sample(snap, job) for job in snap.jobs]
+        with self._lock:
+            for s in samples:
+                series = self._jobs.get(s.job_id)
+                if series is None:
+                    series = self._jobs[s.job_id] = _JobSeries(
+                        self.raw_per_job, self.bucket_s,
+                        self.buckets_per_job)
+                if series.fold(s):
+                    self._appended += 1
+                else:
+                    self._dropped += 1
+                self._jobs.move_to_end(s.job_id)
+            while len(self._jobs) > self.max_jobs:
+                self._jobs.popitem(last=False)
+                self._evicted += 1
+
+    def subscriber(self, source_name: Optional[str] = None):
+        """A TelemetryBus subscriber feeding this store."""
+        def fn(name: str, snap: ClusterSnapshot):
+            if source_name is None or name == source_name:
+                self.observe(snap)
+        return fn
+
+    # -------------------------------------------------------------- reads
+    def job_ids(self) -> List[int]:
+        """Tracked job ids, least recently seen first."""
+        with self._lock:
+            return list(self._jobs)
+
+    def sizes(self) -> Dict[str, int]:
+        """Occupancy + append/drop/evict counters (``/stats``)."""
+        with self._lock:
+            return {"jobs": len(self._jobs), "appended": self._appended,
+                    "dropped": self._dropped, "evicted": self._evicted}
+
+    def raw_points(self, job_id: int) -> List[JobSample]:
+        """``job_id``'s raw ring, oldest first (empty when unknown)."""
+        with self._lock:
+            series = self._jobs.get(job_id)
+            return list(series.raw) if series is not None else []
+
+    def points(self, job_id: int) -> List[JobPoint]:
+        """``job_id``'s 15-min buckets (empty when unknown)."""
+        with self._lock:
+            series = self._jobs.get(job_id)
+            return series.all_points() if series is not None else []
+
+    def lifetime(self, job_id: int) -> Optional[Dict[str, Agg]]:
+        """Lifetime min/mean/max per sampled field, or ``None``."""
+        with self._lock:
+            series = self._jobs.get(job_id)
+            if series is None:
+                return None
+            return {f: copy.deepcopy(a)
+                    for f, a in series.lifetime.items()}
+
+    def last_sample(self, job_id: int) -> Optional[JobSample]:
+        """The newest retained sample of ``job_id``, or ``None``."""
+        with self._lock:
+            series = self._jobs.get(job_id)
+            return series.last if series is not None else None

@@ -10,16 +10,25 @@ resubmission, and folds the window into one ``experiments``-table row
 per cell — queryable through every §7 surface (CLI ``--experiment``,
 ``GET /experiments``, any renderer).
 """
+from repro.experiments.library import (JOB_RULE_CAMPAIGNS,
+                                       fairness_campaign,
+                                       fragmentation_campaign,
+                                       job_rule_campaign,
+                                       starvation_campaign)
 from repro.experiments.runner import (CampaignResult, CampaignRunner,
-                                      CellResult, render_result, run_campaign,
+                                      CellResult, arrival_times,
+                                      render_result, run_campaign,
                                       run_cell)
-from repro.experiments.spec import (MIXES, Campaign, CampaignError, Cell,
-                                    MixJob, Scenario, campaign_from_dict,
-                                    load_campaign, loads_toml, mix_names)
+from repro.experiments.spec import (ARRIVAL_PATTERNS, MIXES, Campaign,
+                                    CampaignError, Cell, MixJob, Scenario,
+                                    campaign_from_dict, load_campaign,
+                                    loads_toml, mix_names)
 
 __all__ = [
-    "Campaign", "CampaignError", "CampaignResult", "CampaignRunner",
-    "Cell", "CellResult", "MIXES", "MixJob", "Scenario",
-    "campaign_from_dict", "load_campaign", "loads_toml", "mix_names",
-    "render_result", "run_campaign", "run_cell",
+    "ARRIVAL_PATTERNS", "Campaign", "CampaignError", "CampaignResult",
+    "CampaignRunner", "Cell", "CellResult", "JOB_RULE_CAMPAIGNS", "MIXES",
+    "MixJob", "Scenario", "arrival_times", "campaign_from_dict",
+    "fairness_campaign", "fragmentation_campaign", "job_rule_campaign",
+    "load_campaign", "loads_toml", "mix_names", "render_result",
+    "run_campaign", "run_cell", "starvation_campaign",
 ]

@@ -1,0 +1,107 @@
+"""Predefined campaigns — the job-level rule scenarios (DESIGN.md §11).
+
+Each of the three job-level insight rules ships with a trace-driven
+campaign that demonstrates it closed-loop: the ``fixed`` ``nppn1`` cell
+shows the pathology (the rule fires, throughput suffers), and the
+``controller`` cell shows the remediation the insight actuates:
+
+  * ``queue_starvation``       — a diurnal rush of NPPN=1 jobs that
+    need the whole fleet each; the closed loop steps the NPPN ladder so
+    submissions fit the free capacity and the backlog drains.
+  * ``fleet_fragmentation``    — bursts of tiny *exclusive* jobs, each
+    pinning a whole node at ~10% core usage; the closed loop
+    consolidates them onto shared nodes, freeing the fleet for the
+    next burst.
+  * ``multi_tenant_fairness``  — one tenant fills the fleet before the
+    others arrive; the closed loop applies an
+    :class:`~repro.launch.fault.ElasticResizePlan` (shrink + resubmit)
+    so waiting tenants can start.
+
+``job_rule_campaign(kind)`` returns the campaign for one rule kind;
+:data:`JOB_RULE_CAMPAIGNS` maps every kind to its factory.  The
+campaigns are plain :class:`~repro.experiments.spec.Campaign` values —
+they run through the same runner, query table, CLI, and daemon
+endpoint as any TOML-loaded sweep (``examples/job_rules_campaign.toml``
+is the starvation one in file form).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.experiments.spec import Campaign, Scenario
+
+
+def starvation_campaign() -> Campaign:
+    """``queue_starvation``: diurnal arrivals of fleet-sized jobs.
+
+    At NPPN=1 every job wants 8 GPUs (= the whole 4-node fleet), so the
+    two diurnal rushes pile up a pending queue whose oldest job waits
+    far past the starvation threshold.  The controller cell steps the
+    ladder (starvation *and* the low-duty diagnosis both push it), jobs
+    shrink to a fraction of the fleet, and the queue drains.
+    """
+    return Campaign(
+        name="queue-starvation",
+        scenario=Scenario(arrival_pattern="diurnal", duration_s=10800.0,
+                          dt_s=300.0, n_jobs=12, tasks_per_job=8,
+                          arrival_s=300.0, task_duration_s=1800.0),
+        mixes=("starved",), nppn=(1,), fleets=(4,),
+        controller=True).validate()
+
+
+def fragmentation_campaign() -> Campaign:
+    """``fleet_fragmentation``: bursts of tiny exclusive jobs.
+
+    Each burst of 8 one-task exclusive jobs pins all 8 nodes at 4/40
+    busy cores, so the next burst queues behind idle capacity.  The
+    controller cell consolidates (drops ``exclusive`` and resubmits);
+    the batch then shares a couple of nodes and the fleet is free for
+    the following burst.
+    """
+    return Campaign(
+        name="fleet-fragmentation",
+        scenario=Scenario(arrival_pattern="bursty", duration_s=10800.0,
+                          dt_s=300.0, n_jobs=16, tasks_per_job=1,
+                          arrival_s=300.0, task_duration_s=7200.0),
+        mixes=("fragmented",), nppn=(1,), fleets=(8,),
+        controller=True).validate()
+
+
+def fairness_campaign() -> Campaign:
+    """``multi_tenant_fairness``: one tenant front-runs the fleet.
+
+    The ``hog00`` stream submits everything at the start and occupies
+    8 of 10 nodes; ``ten01`` arrives a third into the window and can
+    only wait.  The controller cell shrinks the dominant tenant's jobs
+    (elastic resize), the waiting tenant dispatches ahead of the
+    resubmissions, and both finish inside the window.
+    """
+    return Campaign(
+        name="multi-tenant-fairness",
+        scenario=Scenario(arrival_pattern="elastic", duration_s=14400.0,
+                          dt_s=300.0, n_jobs=4, tasks_per_job=8,
+                          arrival_s=300.0, task_duration_s=7200.0),
+        mixes=("tenants",), nppn=(1,), fleets=(10,),
+        controller=True).validate()
+
+
+#: rule kind -> campaign factory, for every job-level rule.
+JOB_RULE_CAMPAIGNS: Dict[str, Callable[[], Campaign]] = {
+    "queue_starvation": starvation_campaign,
+    "fleet_fragmentation": fragmentation_campaign,
+    "multi_tenant_fairness": fairness_campaign,
+}
+
+
+def job_rule_campaign(kind: str) -> Campaign:
+    """The demonstration campaign for one job-level rule kind.
+
+    Raises:
+        KeyError: for kinds without a campaign (the message lists the
+            valid ones).
+    """
+    try:
+        return JOB_RULE_CAMPAIGNS[kind]()
+    except KeyError:
+        raise KeyError(f"no campaign for rule kind {kind!r}; available: "
+                       + ", ".join(sorted(JOB_RULE_CAMPAIGNS))) from None

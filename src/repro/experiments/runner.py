@@ -22,6 +22,7 @@ server-side via the daemon's ``GET /experiments``.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Iterator, List, Optional, Sequence
 
 from repro.experiments.spec import (MIXES, Campaign, Cell, MixJob,
@@ -43,6 +44,10 @@ class CellResult:
     queue_wait_s: float         # mean submit->start wait
     insights: int               # active insights summed over snapshots
     seed: int
+    #: per-kind breakdown of ``insights`` (observations per rule kind);
+    #: not a table column — the goldens pin the row layout — but what
+    #: the rule-scenario campaigns assert against.
+    kinds: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def row(self) -> dict:
         """This result as an ``experiments``-table row (``speedup`` is
@@ -120,6 +125,67 @@ class CampaignRunner:
 # ----------------------------------------------------------------- one cell
 
 
+#: Jobs per burst for the ``bursty`` arrival pattern; bursts land every
+#: ``BURST_SIZE * arrival_s`` seconds, so the mean rate stays the
+#: uniform stream's while submissions arrive in platoons.
+BURST_SIZE = 8
+
+
+def arrival_times(sc: Scenario, n_streams: int = 1) -> List[float]:
+    """Per-job arrival times (seconds) for the scenario's
+    ``arrival_pattern`` — the deterministic traces behind the job-level
+    rule scenarios (DESIGN.md §11).
+
+      * ``uniform`` — one job every ``arrival_s`` (the §V-B stream).
+      * ``diurnal`` — arrivals follow a ``1 - cos(2πt/P)`` intensity
+        with two "days" in the window (``P = duration_s / 2``);
+        inverse-CDF placement bunches submissions into two rushes that
+        back the queue up (``queue_starvation``'s trace).
+      * ``bursty`` — platoons of :data:`BURST_SIZE` simultaneous jobs
+        (``fleet_fragmentation``'s trace: each burst pins a rack of
+        whole nodes at once).
+      * ``elastic`` — stream 0 (the dominant tenant) submits everything
+        up front, one job per sim step; the other streams arrive a
+        third into the window and find the fleet taken
+        (``multi_tenant_fairness``'s trace).
+
+    Times are per job *index*; for ``elastic`` they are not monotonic
+    in index (stream 0 front-runs), so the runner submits in
+    time-sorted order while keeping each index's mix stream.
+    """
+    n = sc.n_jobs
+    if sc.arrival_pattern == "diurnal":
+        period = sc.duration_s / 2.0
+        two_pi = 2.0 * math.pi
+
+        def cdf(t: float) -> float:
+            # integral of the 1 - cos intensity, normalized over the window
+            return (t - (period / two_pi)
+                    * math.sin(two_pi * t / period)) / sc.duration_s
+
+        out = []
+        for i in range(n):
+            target = (i + 0.5) / n
+            lo, hi = 0.0, sc.duration_s
+            for _ in range(50):          # bisection: |hi-lo| < 1e-10 s
+                mid = (lo + hi) / 2.0
+                if cdf(mid) < target:
+                    lo = mid
+                else:
+                    hi = mid
+            out.append((lo + hi) / 2.0)
+        return out
+    if sc.arrival_pattern == "bursty":
+        return [(i // BURST_SIZE) * BURST_SIZE * sc.arrival_s
+                for i in range(n)]
+    if sc.arrival_pattern == "elastic":
+        streams = max(n_streams, 1)
+        return [(i // streams) * sc.dt_s if i % streams == 0
+                else sc.duration_s / 3.0 + (i // streams) * sc.arrival_s
+                for i in range(n)]
+    return [i * sc.arrival_s for i in range(n)]
+
+
 def _build_spec(mj: MixJob, sc: Scenario, nppn: int):
     """One arrival's JobSpec: the mix factory's job with the scenario's
     task count/duration, at ``nppn`` tasks-per-GPU when overloadable."""
@@ -145,6 +211,40 @@ def _resubmit_user(sim, username: str, nppn: int) -> int:
     for job in requeue:
         sim.submit(dataclasses.replace(job.spec, tasks_per_gpu=nppn))
     return len(requeue)
+
+
+def _consolidate_user(sim, username: str) -> int:
+    """``fleet_fragmentation``'s actuator: cancel the user's *exclusive*
+    jobs and resubmit them without the flag, so the scheduler packs
+    them onto shared whole nodes instead of one node each.  Idempotent
+    — returns 0 (and touches nothing) once no exclusive job remains,
+    so re-firing insights cause no churn."""
+    sched = sim.sched
+    requeue = [j for j in list(sched.pending) + list(sched.running)
+               if j.spec.username == username and j.spec.exclusive]
+    for job in requeue:
+        sched.cancel(job.job_id)
+    for job in requeue:
+        sim.submit(dataclasses.replace(job.spec, exclusive=False))
+    return len(requeue)
+
+
+def _elastic_shrink(sim, plan) -> int:
+    """``multi_tenant_fairness``'s actuator: resubmit the dominant
+    tenant's jobs at the :class:`~repro.launch.fault.ElasticResizePlan`
+    target size (work done so far is lost, like any resubmission).
+    Jobs already at or below the target are left alone.  Returns the
+    number of jobs resized."""
+    sched = sim.sched
+    resize = [j for j in list(sched.pending) + list(sched.running)
+              if j.spec.username == plan.username
+              and plan.shrink(j.spec.n_tasks) < j.spec.n_tasks]
+    for job in resize:
+        sched.cancel(job.job_id)
+    for job in resize:
+        sim.submit(dataclasses.replace(
+            job.spec, n_tasks=plan.shrink(job.spec.n_tasks)))
+    return len(resize)
 
 
 #: Fleets at or below this size fold GPU duty/headroom through per-node
@@ -193,13 +293,17 @@ def run_cell(cell: Cell) -> CellResult:
     from repro.cluster.simulator import ClusterSim
     from repro.core.overload import OverloadController
     from repro.insights import InsightEngine
+    from repro.launch.fault import ElasticResizePlan
     from repro.monitor import TelemetryBus
 
     sc = cell.scenario
     nodes = (make_nodes("d", sc.n_cpu, cores=48, mem_gb=192.0)
              + make_nodes("c", sc.n_gpu, cores=40, mem_gb=384.0, gpus=2,
                           gpu_mem_gb=32.0))
-    sim = ClusterSim(nodes, cluster="exp", seed=sc.seed)
+    # non-uniform arrivals exist to stress the queue: surface pending
+    # jobs so the queue-level rules can see the backlog
+    sim = ClusterSim(nodes, cluster="exp", seed=sc.seed,
+                     show_pending=sc.arrival_pattern != "uniform")
     source = sim.as_source(advance_s=sc.dt_s, name="exp")
     bus = TelemetryBus(ttl_s=0.0, history=8)
     bus.register(source)
@@ -214,16 +318,21 @@ def run_cell(cell: Cell) -> CellResult:
         controllers = {mj.username: OverloadController()
                        for mj in mix if mj.overloadable}
 
+    times = arrival_times(sc, len(mix))
+    order = sorted(range(sc.n_jobs), key=lambda i: (times[i], i))
+
     duty_sum = head_sum = 0.0
     duty_polls = 0
     insight_obs = 0
+    kinds: Dict[str, int] = {}
     submitted = 0
     while True:
         while (submitted < sc.n_jobs
-               and submitted * sc.arrival_s <= sim.t + 1e-9):
-            mj = mix[submitted % len(mix)]
+               and times[order[submitted]] <= sim.t + 1e-9):
+            idx = order[submitted]
+            mj = mix[idx % len(mix)]
             sim.submit(_build_spec(mj, sc, levels[mj.username]),
-                       now=submitted * sc.arrival_s)
+                       now=times[idx])
             submitted += 1
         if sim.t >= sc.duration_s - 1e-9:
             break
@@ -236,18 +345,40 @@ def run_cell(cell: Cell) -> CellResult:
         active = engine.active()
         insight_obs += len(active)
         for ins in active:
-            ctl = controllers.get(ins.username)
-            if ctl is None or ins.kind != "low_gpu":
-                continue
+            kinds[ins.kind] = kinds.get(ins.kind, 0) + 1
+        if cell.mode != "controller":
+            continue
+        for ins in active:
             if ins.last_seen < snap.timestamp:
                 # hysteresis keeps a clearing insight active for a few
-                # frames; only a *firing* diagnosis drives the ladder
+                # frames; only a *firing* diagnosis drives actuation
                 continue
-            cur = levels[ins.username]
-            decision = ctl.consume(ins, cur)
-            if decision.nppn != cur:
-                levels[ins.username] = decision.nppn
-                _resubmit_user(sim, ins.username, decision.nppn)
+            if ins.kind == "low_gpu":
+                ctl = controllers.get(ins.username)
+                if ctl is None:
+                    continue
+                cur = levels[ins.username]
+                decision = ctl.consume(ins, cur)
+                if decision.nppn != cur:
+                    levels[ins.username] = decision.nppn
+                    _resubmit_user(sim, ins.username, decision.nppn)
+            elif ins.kind == "queue_starvation":
+                # starvation on an overloadable stream: jobs don't fit
+                # the free capacity — step the ladder so they do
+                if ins.username not in controllers:
+                    continue
+                cur = levels[ins.username]
+                nxt = min(cur * 2, 8)
+                if nxt != cur:
+                    levels[ins.username] = nxt
+                    _resubmit_user(sim, ins.username, nxt)
+            elif ins.kind == "fleet_fragmentation":
+                _consolidate_user(sim, ins.username)
+            elif ins.kind == "multi_tenant_fairness":
+                # shrink while the unfairness persists; bounded — each
+                # resize halves the tenant's jobs and the actuator
+                # no-ops once every job reaches the plan's floor
+                _elastic_shrink(sim, ElasticResizePlan(ins.username))
 
     completed = sim.sched.completed
     tasks_done = sum(j.spec.n_tasks for j in completed)
@@ -263,7 +394,8 @@ def run_cell(cell: Cell) -> CellResult:
         throughput=tasks_done / (sc.duration_s / 3600.0),
         gpu_duty=(duty_sum / duty_polls) if duty_polls else 0.0,
         mem_headroom=(head_sum / duty_polls) if duty_polls else 0.0,
-        queue_wait_s=queue_wait, insights=insight_obs, seed=sc.seed)
+        queue_wait_s=queue_wait, insights=insight_obs, seed=sc.seed,
+        kinds=kinds)
 
 
 def run_campaign(campaign: Campaign,

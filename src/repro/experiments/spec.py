@@ -78,6 +78,18 @@ MIXES: Dict[str, Tuple[MixJob, ...]] = {
               MixJob("ml_training_job", "exp01")),
     # Control: high-duty training only — overloading has nothing to win.
     "high_duty": (MixJob("ml_training_job", "exp01"),),
+    # Job-level rule scenarios (DESIGN.md §11) — paired with a
+    # non-uniform arrival_pattern so the matching diagnosis fires:
+    # a diurnal rush of low-NPPN jobs backs the queue up
+    # (queue_starvation; the closed loop raises NPPN so jobs fit),
+    "starved": (MixJob("overloaded_gpu_job", "exp10", overloadable=True),),
+    # bursts of tiny exclusive jobs pin whole nodes at idle cores
+    # (fleet_fragmentation; the closed loop consolidates them),
+    "fragmented": (MixJob("fragmented_job", "exp20"),),
+    # one tenant fills the fleet before others arrive
+    # (multi_tenant_fairness; the closed loop elastically shrinks it).
+    "tenants": (MixJob("ml_training_job", "hog00"),
+                MixJob("ml_training_job", "ten01")),
 }
 
 
@@ -89,6 +101,12 @@ def mix_names() -> List[str]:
 # ------------------------------------------------------------------ scenario
 
 
+#: Supported arrival traces.  ``uniform`` is the classic one-every-
+#: ``arrival_s`` stream; the others warp the same job count into the
+#: pathological shapes the job-level rules diagnose (DESIGN.md §11).
+ARRIVAL_PATTERNS = ("uniform", "diurnal", "bursty", "elastic")
+
+
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     """One experiment setup: fleet, workload, arrivals, window, seed.
@@ -97,7 +115,11 @@ class Scenario:
     ``arrival_s`` seconds starting at t=0, each task running
     ``task_duration_s``; the sim advances in ``dt_s`` steps for
     ``duration_s`` seconds, snapshotting (through the TelemetryBus)
-    once per step.
+    once per step.  ``arrival_pattern`` warps the arrival times
+    (see :data:`ARRIVAL_PATTERNS` and
+    :func:`repro.experiments.runner.arrival_times`); non-uniform
+    patterns also surface pending jobs in snapshots so queue-level
+    rules can observe the backlog.
     """
     mix: str = "low_duty"
     n_cpu: int = 0                  # CPU-only nodes in the fleet
@@ -107,6 +129,7 @@ class Scenario:
     n_jobs: int = 24
     tasks_per_job: int = 8
     arrival_s: float = 300.0        # one job arrives every arrival_s
+    arrival_pattern: str = "uniform"
     task_duration_s: float = 1800.0
     seed: int = 0
 
@@ -119,6 +142,10 @@ class Scenario:
         if self.mix not in MIXES:
             raise CampaignError(f"unknown workload mix {self.mix!r}; "
                                 "valid mixes: " + ", ".join(mix_names()))
+        if self.arrival_pattern not in ARRIVAL_PATTERNS:
+            raise CampaignError(
+                f"unknown arrival_pattern {self.arrival_pattern!r}; "
+                "valid patterns: " + ", ".join(ARRIVAL_PATTERNS))
         for field in ("duration_s", "dt_s", "arrival_s", "task_duration_s"):
             if getattr(self, field) <= 0:
                 raise CampaignError(f"scenario.{field} must be > 0, got "
@@ -338,7 +365,8 @@ def campaign_from_dict(data: dict) -> Campaign:
         if f.name in ("mix", "n_gpu", "seed"):
             scen.pop(f.name, None)   # swept axes are [sweep]'s business
             continue
-        kind = float if f.type == "float" else int
+        kind = (str if f.type == "str"
+                else float if f.type == "float" else int)
         fields[f.name] = take(scen, "scenario", f.name, kind,
                               f.default)
     if scen:

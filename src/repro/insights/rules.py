@@ -68,18 +68,29 @@ class RuleContext:
     username: str
     nodes: List[object]              # the user's NodeSnapshots
     gpu_nodes: List[object]          # subset with devices
+    jobs: List[object] = dataclasses.field(default_factory=list)
+    # ^ the user's JobRecords (running AND pending) — what the job-level
+    #   rules consume; node-level rules ignore it
 
 
 def contexts(snap) -> Iterator[RuleContext]:
-    """Yield one :class:`RuleContext` per user with nodes, sorted by
-    username — the engine's O(users) iteration for one snapshot."""
+    """Yield one :class:`RuleContext` per user with nodes *or jobs*,
+    sorted by username — the engine's O(users + jobs) iteration for one
+    snapshot.  Users whose only presence is a queued (``PD``) job get a
+    context with empty node lists, which every node-level rule treats as
+    not-applicable."""
     by_user = snap.nodes_by_user()
-    for user in sorted(by_user):
-        nodes = [snap.nodes[h] for h in by_user[user] if h in snap.nodes]
-        if not nodes:
+    jobs_by_user: Dict[str, List[object]] = {}
+    for job in snap.jobs:
+        jobs_by_user.setdefault(job.username, []).append(job)
+    for user in sorted(set(by_user) | set(jobs_by_user)):
+        nodes = [snap.nodes[h] for h in by_user.get(user, ())
+                 if h in snap.nodes]
+        jobs = jobs_by_user.get(user, [])
+        if not nodes and not jobs:
             continue
         yield RuleContext(snap, user, nodes,
-                          [n for n in nodes if n.gpus_total > 0])
+                          [n for n in nodes if n.gpus_total > 0], jobs)
 
 
 class Rule(Protocol):
@@ -207,6 +218,114 @@ class IoStormRule:
                        evidence={"max_norm_load": worst.norm_load})
 
 
+# --------------------------------------------------------- job-level rules
+# (DESIGN.md §11) — thresholds are set so the rules diagnose the
+# arrival-driven pathologies (diurnal backlog, whole-node fragmentation,
+# one tenant crowding out the rest) without firing on the steady-state
+# §V-B mixes, whose snapshots carry only running jobs.
+
+# pending wait beyond which the queue counts as starving the user
+STARVATION_WAIT_S = 1800.0
+# a user fragmenting the fleet: many whole-node jobs, mostly idle cores
+FRAG_MIN_JOBS = 6
+FRAG_CORE_FRACTION = 0.35
+# a tenant's share of busy nodes beyond which waiting others is unfair
+FAIR_DOMINANT_FRACTION = 0.5
+
+
+class QueueStarvationRule:
+    """Queued jobs waiting far beyond the starvation threshold."""
+    name = "queue_starvation"
+    kind = "queue_starvation"
+
+    def evaluate(self, ctx: RuleContext) -> Optional[Insight]:
+        """WARN when any of the subject's pending jobs has waited longer
+        than ``STARVATION_WAIT_S`` (needs producers that report
+        ``submit_time`` and surface pending jobs)."""
+        snap = ctx.snap
+        pend = [j for j in ctx.jobs
+                if j.state == "PD" and j.submit_time > 0]
+        if not pend:
+            return None
+        worst = max(max(0.0, snap.timestamp - j.submit_time)
+                    for j in pend)
+        if worst < STARVATION_WAIT_S:
+            return None
+        msg = (f"{len(pend)} queued job(s), the oldest waiting "
+               f"{worst:.0f}s (> {STARVATION_WAIT_S:.0f}s). The queue is "
+               "starving this user's work: request fewer or smaller "
+               "nodes, or raise NPPN so submissions fit the free "
+               "capacity.")
+        return Insight(self.kind, WARN, ctx.username, [], msg,
+                       evidence={"max_wait_s": worst,
+                                 "pending": float(len(pend))})
+
+
+class FleetFragmentationRule:
+    """Many small whole-node jobs pinning nodes at low core usage."""
+    name = "fleet_fragmentation"
+    kind = "fleet_fragmentation"
+
+    def evaluate(self, ctx: RuleContext) -> Optional[Insight]:
+        """INFO when the subject runs ``FRAG_MIN_JOBS``+ jobs whose nodes
+        sit below ``FRAG_CORE_FRACTION`` mean core usage — whole-node
+        scheduling is fragmenting the fleet."""
+        running = [j for j in ctx.jobs if j.state == "R"]
+        if len(running) < FRAG_MIN_JOBS or not ctx.nodes:
+            return None
+        frac = (sum(n.cores_used for n in ctx.nodes)
+                / max(sum(n.cores_total for n in ctx.nodes), 1))
+        if frac >= FRAG_CORE_FRACTION:
+            return None
+        msg = (f"{len(running)} running job(s) spread over "
+               f"{len(ctx.nodes)} whole node(s) at {frac * 100:.0f}% "
+               "mean core usage: whole-node scheduling is fragmenting "
+               "the fleet. Consolidate (more tasks per job, or the "
+               "shared partition) to free nodes.")
+        return Insight(self.kind, INFO, ctx.username,
+                       [n.hostname for n in ctx.nodes], msg,
+                       evidence={"jobs": float(len(running)),
+                                 "core_fraction": frac})
+
+
+class MultiTenantFairnessRule:
+    """One tenant holding most busy nodes while other users queue."""
+    name = "multi_tenant_fairness"
+    kind = "multi_tenant_fairness"
+
+    def evaluate(self, ctx: RuleContext) -> Optional[Insight]:
+        """WARN when the subject owns ``FAIR_DOMINANT_FRACTION``+ of the
+        busy nodes while at least one *other* user's job is pending —
+        the elastic-resize (shrink) trigger."""
+        snap = ctx.snap
+        others_waiting = [j for j in snap.jobs
+                          if j.state == "PD" and j.submit_time > 0
+                          and j.username != ctx.username]
+        if not others_waiting or not ctx.nodes:
+            return None
+        by_user = snap.nodes_by_user()
+        occupied = set()
+        for hosts in by_user.values():
+            occupied.update(hosts)
+        mine = len(by_user.get(ctx.username, ()))
+        if not occupied or mine / len(occupied) < FAIR_DOMINANT_FRACTION:
+            return None
+        share = mine / len(occupied)
+        worst = max(max(0.0, snap.timestamp - j.submit_time)
+                    for j in others_waiting)
+        msg = (f"holds {mine} of {len(occupied)} busy node(s) "
+               f"({share * 100:.0f}%) while {len(others_waiting)} "
+               f"job(s) from other users wait up to {worst:.0f}s. "
+               "Elastic resize: shrink this user's jobs so waiting "
+               "tenants can start.")
+        return Insight(self.kind, WARN, ctx.username,
+                       sorted(by_user.get(ctx.username, ())), msg,
+                       evidence={"share": share,
+                                 "others_waiting":
+                                     float(len(others_waiting)),
+                                 "max_wait_s": worst})
+
+
 # ------------------------------------------------------------------ registry
 
 
@@ -242,5 +361,6 @@ def default_rules() -> List[Rule]:
 
 
 for _rule in (LowGpuDutyRule(), MissubmissionRule(), ThreadOverloadRule(),
-              IoStormRule()):
+              IoStormRule(), QueueStarvationRule(),
+              FleetFragmentationRule(), MultiTenantFairnessRule()):
     register_rule(_rule)

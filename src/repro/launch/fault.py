@@ -15,6 +15,11 @@ Three mechanisms, all LLload-integrated (the paper's monitoring is what
     time instead of CPU load.
   * Failure simulation hooks for tests: `CrashInjector` raises at a chosen
     step so the restart path is exercised end-to-end.
+  * Elastic resize — :class:`ElasticResizePlan` is the shrink decision a
+    ``multi_tenant_fairness`` insight actuates (DESIGN.md §11): a tenant
+    holding most of the fleet while others queue gets its jobs
+    resubmitted at a reduced task count, the same mesh-independent
+    re-scaling the checkpoint layer supports.
 """
 from __future__ import annotations
 
@@ -57,6 +62,25 @@ class StragglerDetector:
             if med > 0 and m / med >= self.slow_factor:
                 out.append(StragglerReport(host, med, m, m / med))
         return sorted(out, key=lambda r: -r.factor)
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticResizePlan:
+    """A shrink decision for one dominant tenant's jobs.
+
+    ``shrink`` maps a job's current task count to its resized one:
+    ``max(min_tasks, int(n_tasks * factor))`` — deterministic, so the
+    closed loop (insight → resize → resubmit) replays identically.
+    A plan never grows a job (``factor`` is clamped to <= 1.0).
+    """
+    username: str
+    factor: float = 0.5
+    min_tasks: int = 1
+
+    def shrink(self, n_tasks: int) -> int:
+        """The resized task count for a job of ``n_tasks`` tasks."""
+        factor = min(self.factor, 1.0)
+        return max(self.min_tasks, int(n_tasks * factor))
 
 
 class CrashInjector:

@@ -8,7 +8,8 @@ package, rendered by a registry renderer (``table``/``json``/``csv``/
 """
 from repro.query.engine import (DEFAULT_COLUMNS, TABLES, Column, Query,
                                 ResultSet, column_kinds, experiment_rows,
-                                history_rows, insight_rows, job_rows,
+                                history_rows, insight_rows,
+                                job_history_rows, job_rows,
                                 node_rows, row_from_node, run_query,
                                 user_rows, vocabulary)
 from repro.query.errors import QueryError
@@ -32,7 +33,8 @@ __all__ = [
     "all_query",
     "apply_modifiers", "column_kinds", "conjoin", "experiment_rows",
     "get_renderer",
-    "history_rows", "in_set", "insight_rows", "job_rows", "json_payload",
+    "history_rows", "in_set", "insight_rows", "job_history_rows",
+    "job_rows", "json_payload",
     "jupyter_jobs_query", "node_rows", "nodes_query", "parse_delimited",
     "parse_filter", "register_renderer", "render_csv", "render_json",
     "render_prom", "render_table", "render_tsv", "renderer_names",

@@ -26,6 +26,9 @@ Tables:
   * ``experiments`` — one row per campaign cell (requires a
                   CampaignResult from ``LLload --experiment`` or the
                   daemon's ``GET /experiments`` — DESIGN.md §9).
+  * ``job_history`` — one row per job per 15-minute bucket (requires a
+                  JobHistoryStore; the daemon keeps one per source —
+                  DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -111,6 +114,22 @@ _HISTORY_COLUMNS = [
     for f in _HISTORY_AGGS for agg in ("min", "mean", "max")
 ]
 
+_JOB_HISTORY_AGGS = ("gpu_duty", "cpu_load", "mem_used_gb", "step_time_s")
+
+_JOB_HISTORY_COLUMNS = [
+    Column("job_id", "int", "job id"),
+    Column("user", "str", "submitting user"),
+    Column("name", "str", "job name"),
+    Column("state", "str", "job state at the newest sample"),
+    Column("nodes", "int", "nodes the job occupies"),
+    Column("queue_wait_s", "float", "submit-to-start wait (s)"),
+    Column("t", "float", "bucket start (cluster clock)"),
+    Column("count", "int", "samples folded into the bucket"),
+] + [
+    Column(f"{f}_{agg}", "float", f"bucket {agg} of {f}")
+    for f in _JOB_HISTORY_AGGS for agg in ("min", "mean", "max")
+]
+
 _EXPERIMENT_COLUMNS = [
     Column("cell", "str", "cell id: <mix>/<fleet>g/nppn<N> or "
                           "<mix>/<fleet>g/controller"),
@@ -156,6 +175,7 @@ TABLES: Dict[str, List[Column]] = {
     "history": _HISTORY_COLUMNS,
     "insights": _INSIGHT_COLUMNS,
     "experiments": _EXPERIMENT_COLUMNS,
+    "job_history": _JOB_HISTORY_COLUMNS,
 }
 
 # the default selection shown by generic renderers when no --columns given
@@ -173,6 +193,9 @@ DEFAULT_COLUMNS: Dict[str, Tuple[str, ...]] = {
                  "persistence", "message"),
     "experiments": ("cell", "mode", "nppn", "tasks_done", "throughput",
                     "speedup", "gpu_duty", "queue_wait_s", "insights"),
+    "job_history": ("job_id", "user", "state", "nodes", "t", "count",
+                    "gpu_duty_mean", "cpu_load_mean", "mem_used_gb_mean",
+                    "queue_wait_s"),
 }
 
 
@@ -449,6 +472,36 @@ def experiment_rows(experiments) -> List[dict]:
     return [dict(r) for r in experiments]
 
 
+def job_history_rows(jobstore) -> List[dict]:
+    """One row per job per 15-minute bucket of a
+    :class:`~repro.daemon.store.JobHistoryStore`, jobs in id order,
+    buckets oldest first.  Identity columns (user/name/state/nodes/
+    queue_wait_s) come from the job's newest retained sample."""
+    rows = []
+    for job_id in sorted(jobstore.job_ids()):
+        last = jobstore.last_sample(job_id)
+        if last is None:
+            continue
+        for p in jobstore.points(job_id):
+            row = {
+                "job_id": job_id,
+                "user": last.username,
+                "name": last.name,
+                "state": last.state,
+                "nodes": last.n_nodes,
+                "queue_wait_s": last.queue_wait_s,
+                "t": p.bucket_start,
+                "count": p.count,
+            }
+            for f in _JOB_HISTORY_AGGS:
+                agg = getattr(p, f)
+                row[f"{f}_min"] = agg.min
+                row[f"{f}_mean"] = agg.mean
+                row[f"{f}_max"] = agg.max
+            rows.append(row)
+    return rows
+
+
 def history_rows(store) -> List[dict]:
     """Flatten every tier (raw included) of a HistoryStore into rows."""
     rows = []
@@ -503,14 +556,16 @@ def _grouped(rows: List[dict], column: str
 
 
 def run_query(snap: Optional[ClusterSnapshot], query: Query,
-              store=None, insights=None, experiments=None) -> ResultSet:
+              store=None, insights=None, experiments=None,
+              jobstore=None) -> ResultSet:
     """Execute ``query`` against a snapshot (and optional history store
-    / insight engine / campaign result).
+    / insight engine / campaign result / job history store).
 
-    ``snap`` may be None only for the ``history``, ``insights`` and
-    ``experiments`` tables; ``insights`` is an InsightEngine or an
-    iterable of Insights; ``experiments`` is a CampaignResult or an
-    iterable of experiments-table rows.
+    ``snap`` may be None only for the ``history``, ``insights``,
+    ``experiments`` and ``job_history`` tables; ``insights`` is an
+    InsightEngine or an iterable of Insights; ``experiments`` is a
+    CampaignResult or an iterable of experiments-table rows;
+    ``jobstore`` is a JobHistoryStore.
     """
     query.validate()
     if query.table == "history":
@@ -519,6 +574,13 @@ def run_query(snap: Optional[ClusterSnapshot], query: Query,
                 "table 'history' needs a history store — query a daemon "
                 "(GET /query) or pass store=HistoryStore(...)")
         rows = history_rows(store)
+    elif query.table == "job_history":
+        if jobstore is None:
+            raise QueryError(
+                "table 'job_history' needs a job history store — query "
+                "a daemon (GET /query) or pass "
+                "jobstore=JobHistoryStore(...)")
+        rows = job_history_rows(jobstore)
     elif query.table == "insights":
         if insights is None:
             raise QueryError(

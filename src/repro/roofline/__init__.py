@@ -1,5 +1,7 @@
 from repro.roofline import hw
 from repro.roofline.analysis import (RooflineTerms, parse_collective_bytes,
-                                     roofline)
+                                     roofline, terms_from_monitoring,
+                                     verdict_from_monitoring)
 
-__all__ = ["hw", "RooflineTerms", "parse_collective_bytes", "roofline"]
+__all__ = ["hw", "RooflineTerms", "parse_collective_bytes", "roofline",
+           "terms_from_monitoring", "verdict_from_monitoring"]

@@ -95,6 +95,51 @@ class RooflineTerms:
         return self.compute_s / b if b > 0 else 0.0
 
 
+def terms_from_monitoring(gpu_duty: float, step_time_s: float,
+                          hbm_used_gb: float) -> RooflineTerms:
+    """Roofline terms estimated from *monitoring* data (DESIGN.md §11):
+    what the job-level observability layer knows about a running job,
+    instead of a compiled dry-run artifact.
+
+    ``gpu_duty`` is the MFU proxy (achieved FLOP/s / peak), so the
+    per-step achieved flops are ``duty * peak * step``; the memory term
+    assumes the job streams its resident HBM footprint once per step —
+    the standard working-set bound when no HLO is available.  With no
+    step time reported a nominal 1 s step is used (both terms scale
+    together, so the verdict is step-time invariant).
+    """
+    step = step_time_s if step_time_s > 0 else 1.0
+    flops = gpu_duty * hw.PEAK_FLOPS_BF16 * step
+    hbm_bytes = hbm_used_gb * 2.0 ** 30
+    compute_s = flops / hw.PEAK_FLOPS_BF16
+    memory_s = hbm_bytes / hw.HBM_BW
+    dominant = "compute" if compute_s >= memory_s else "memory"
+    return RooflineTerms(
+        flops=flops, hbm_bytes=hbm_bytes, collective_bytes=0.0,
+        compute_s=compute_s, memory_s=memory_s, collective_s=0.0,
+        dominant=dominant)
+
+
+def verdict_from_monitoring(gpu_duty: float, step_time_s: float,
+                            hbm_used_gb: float) -> str:
+    """One-line roofline verdict for a job report, e.g.
+    ``"memory-bound at 43% of roofline"`` (the MPCDF-report phrasing).
+
+    The percentage is the dominant term's share of the step time — how
+    close the job runs to the roof it is under (compute-bound at duty
+    1.0 means the devices never idle).  Jobs reporting neither duty nor
+    HBM get ``"no device activity"`` rather than a fabricated bound.
+    """
+    if gpu_duty <= 0.0 and hbm_used_gb <= 0.0:
+        return "no device activity"
+    terms = terms_from_monitoring(gpu_duty, step_time_s, hbm_used_gb)
+    step = step_time_s if step_time_s > 0 else 1.0
+    frac = min(terms.bound_s() / step, 1.0)
+    if terms.dominant == "compute":
+        return f"compute-bound at {frac * 100:.0f}% of roofline"
+    return f"memory-bound at {frac * 100:.0f}% of roofline"
+
+
 def roofline(cost: dict, hlo_text: str, *, n_devices: int,
              model_flops_global: float = 0.0) -> RooflineTerms:
     flops = float(cost.get("flops", 0.0))

@@ -325,3 +325,174 @@ def test_cli_remote_cluster_name_matrix(daemon_url):
     with pytest.raises(SystemExit):
         cli.main(["--source", "remote", "--url", url,
                   "--cluster", "a,b", "-t", "3"])
+
+
+# ------------------------------------------------------- job report (/job)
+
+
+JOB_ID = 26140000                  # the deterministic sim's first job
+_NEW_JOB_FIELDS = ("submit_time", "gpu_duty", "cpu_load", "mem_used_gb",
+                   "step_time_s")
+
+
+def _golden_job_report():
+    import os
+    here = os.path.dirname(os.path.abspath(__file__))
+    with open(os.path.join(here, "golden", "job_report.txt")) as f:
+        return f.read()
+
+
+def _run_cli_err(argv):
+    buf, err = io.StringIO(), io.StringIO()
+    with contextlib.redirect_stdout(buf), contextlib.redirect_stderr(err):
+        rc = cli.main(argv)
+    return rc, buf.getvalue(), err.getvalue()
+
+
+def test_job_report_golden_local_remote_forwarded(daemon_url):
+    """The MPCDF-style job report is byte-identical in every topology:
+    local CLI, remote CLI against a daemon, and forwarded through a
+    daemon-over-daemon tier."""
+    url, _ = daemon_url
+    golden = _golden_job_report()
+    rc, local = _run_cli(["--source", "sim", "--job", str(JOB_ID)])
+    assert rc == 0 and local == golden
+    rc, remote = _run_cli(["--source", "remote", "--url", url,
+                           "--job", str(JOB_ID)])
+    assert rc == 0 and remote == golden
+    upstream = RemoteSource(url, name="tier0")
+    d2 = LLloadDaemon(upstream, ttl_s=3600.0)
+    server, thread = serve_background(d2)
+    try:
+        host, port = server.server_address[:2]
+        fwd = _get(f"http://{host}:{port}", f"/job/{JOB_ID}").decode()
+        assert fwd == golden
+    finally:
+        server.shutdown()
+        server.server_close()
+        d2.close()
+        thread.join(timeout=5)
+
+
+def test_job_endpoint_is_cached(daemon_url):
+    url, daemon = daemon_url
+    first = _get(url, f"/job/{JOB_ID}")
+    hits_before = daemon.counters()["http_cache_hits_total"]
+    assert _get(url, f"/job/{JOB_ID}") == first
+    assert daemon.counters()["http_cache_hits_total"] > hits_before
+
+
+def test_job_endpoint_errors(daemon_url):
+    url, _ = daemon_url
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _get(url, "/job/999999")
+    assert ei.value.code == 404
+    assert "unknown job" in json.loads(ei.value.read())["error"]["message"]
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _get(url, "/job/abc")
+    assert ei.value.code == 400
+
+
+# ----------------------------------------------- wire version negotiation
+
+
+def test_old_client_ignores_new_job_fields(monkeypatch):
+    """Old client vs new daemon: a decoder predating the per-job sample
+    fields (same wire version, additive keys) must decode the new wire
+    by ignoring the unknown keys."""
+    wire = encode_snapshot(build_source("sim").snapshot())
+    assert all(f in wire["snapshot"]["jobs"][0] for f in _NEW_JOB_FIELDS)
+    old_fields = tuple(f for f in protocol._JOB_FIELDS
+                       if f not in _NEW_JOB_FIELDS)
+    monkeypatch.setattr(protocol, "_JOB_FIELDS", old_fields)
+    snap = protocol.decode_snapshot(wire)
+    job = snap.jobs[0]
+    assert job.job_id == JOB_ID                 # identity intact
+    assert job.gpu_duty == 0.0                  # new fields defaulted
+
+
+def test_new_client_decodes_old_daemon_wire():
+    """New client vs old daemon: wire missing the per-job sample fields
+    decodes with zero defaults (the drop-in upgrade direction)."""
+    wire = encode_snapshot(build_source("sim").snapshot())
+    for jd in wire["snapshot"]["jobs"]:
+        for f in _NEW_JOB_FIELDS:
+            jd.pop(f, None)
+    snap = decode_snapshot(wire)
+    assert snap.jobs[0].job_id == JOB_ID
+    assert snap.jobs[0].submit_time == 0.0
+    assert snap.jobs[0].gpu_duty == 0.0
+
+
+def test_cli_job_against_old_daemon_fails_gracefully():
+    """--job against a daemon predating /job/{id} gets the daemon's
+    404 envelope rendered as a one-line error, not a traceback."""
+    import http.server
+
+    class OldDaemonHandler(http.server.BaseHTTPRequestHandler):
+        def do_GET(self):            # an old daemon 404s unknown paths
+            body = protocol.dumps(protocol.encode_error(
+                f"unknown endpoint {self.path}", 404))
+            self.send_response(404)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):
+            pass
+
+    server = http.server.ThreadingHTTPServer(("127.0.0.1", 0),
+                                             OldDaemonHandler)
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    try:
+        host, port = server.server_address[:2]
+        rc, out, err = _run_cli_err(["--source", "remote",
+                                     "--url", f"http://{host}:{port}",
+                                     "--job", str(JOB_ID)])
+        assert rc == 1 and out == ""
+        assert err.startswith("LLload: ")
+        assert "unknown endpoint" in err and "Traceback" not in err
+    finally:
+        server.shutdown()
+        server.server_close()
+        thread.join(timeout=5)
+
+
+def test_job_metrics_present_and_labeled(daemon_url):
+    url, daemon = daemon_url
+    text = _get(url, "/metrics").decode()
+    families = parse_prometheus(text)
+    snap = daemon.bus.read("txgreen")
+    assert families["llload_jobs_tracked"][f'{{cluster="txgreen"}}'] \
+        == len(snap.jobs)
+    duty = families["llload_job_gpu_duty"]
+    assert duty and all('job="' in k and 'user="' in k for k in duty)
+
+
+def test_job_metric_family_is_bounded_at_10k_jobs():
+    """Regression (PR 2 endpoint-label hardening, applied to jobs): a
+    10k-job snapshot must not grow any per-job metric family past the
+    label budget + the "other" bucket."""
+    from repro.daemon.promtext import (JOB_LABEL_BUDGET,
+                                       render_prometheus)
+    from repro.daemon.store import JobSample
+
+    snap = build_source("sim").snapshot()
+    samples = [JobSample(t=0.0, job_id=i, username=f"u{i % 97}",
+                         name="j", state="R", n_nodes=1,
+                         gpu_duty=(i % 100) / 100.0, cpu_load=1.0,
+                         mem_used_gb=8.0, mem_total_gb=384.0,
+                         gpu_mem_used_gb=2.0, gpu_mem_total_gb=32.0,
+                         queue_wait_s=60.0, step_time_s=0.0)
+               for i in range(10_000)]
+    families = parse_prometheus(render_prometheus(snap,
+                                                  job_samples=samples))
+    job_families = [k for k in families if k.startswith("llload_job_")]
+    assert job_families
+    for name in job_families:
+        assert len(families[name]) <= JOB_LABEL_BUDGET + 1, name
+        assert any('job="other"' in k for k in families[name]), name
+    assert families["llload_jobs_tracked"][f'{{cluster="txgreen"}}'] \
+        == 10_000

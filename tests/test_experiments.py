@@ -11,9 +11,10 @@ from repro.cluster.job import JobSpec, TaskProfile
 from repro.cluster.node import make_nodes
 from repro.cluster.scheduler import Scheduler
 from repro.core import cli
-from repro.experiments import (Campaign, CampaignError, Scenario,
-                               campaign_from_dict, load_campaign,
-                               loads_toml, run_campaign, render_result)
+from repro.experiments import (JOB_RULE_CAMPAIGNS, Campaign, CampaignError,
+                               Scenario, arrival_times, campaign_from_dict,
+                               load_campaign, loads_toml, run_campaign,
+                               render_result, starvation_campaign)
 from repro.insights.rules import recommend_nppn
 from repro.query import Query, QueryError, run_query
 
@@ -319,3 +320,75 @@ def test_daemon_experiments_rejects_bad_specs(daemon_box, params, needle):
     status, _, body = daemon.handle("/experiments", params)
     assert status == 400
     assert needle in json.loads(body)["error"]["message"]
+
+
+# ------------------------------------------------- job-level rule campaigns
+
+
+RULES_TOML = os.path.join(HERE, os.pardir, "examples",
+                          "job_rules_campaign.toml")
+
+
+@pytest.fixture(scope="module")
+def rule_results():
+    """Each job-level rule's demo campaign (library.py), run once."""
+    return {kind: run_campaign(factory())
+            for kind, factory in JOB_RULE_CAMPAIGNS.items()}
+
+
+def test_arrival_pattern_validation():
+    with pytest.raises(CampaignError, match="arrival_pattern"):
+        Scenario(arrival_pattern="weekly").validate()
+
+
+def test_arrival_times_traces():
+    sc = Scenario(n_jobs=16, arrival_s=300.0, duration_s=9600.0)
+    assert arrival_times(sc) == [i * 300.0 for i in range(16)]
+    diurnal = arrival_times(dataclasses.replace(sc,
+                                                arrival_pattern="diurnal"))
+    assert diurnal == sorted(diurnal)
+    assert 0.0 <= diurnal[0] and diurnal[-1] <= sc.duration_s
+    # bunched around the first "day" peak (t = D/4): the quarter-window
+    # around it holds clearly more than a uniform quarter of the jobs
+    d = sc.duration_s
+    peak = [t for t in diurnal if d / 8 <= t <= 3 * d / 8]
+    assert len(peak) > sc.n_jobs // 4
+    bursty = arrival_times(dataclasses.replace(sc,
+                                               arrival_pattern="bursty"))
+    assert bursty[:8] == [0.0] * 8 and bursty[8:] == [2400.0] * 8
+    elastic = arrival_times(dataclasses.replace(sc,
+                                                arrival_pattern="elastic"),
+                            n_streams=2)
+    assert all(t < d / 3 for t in elastic[0::2])       # dominant tenant
+    assert all(t >= d / 3 for t in elastic[1::2])      # late arrivals
+
+
+def test_arrival_pattern_spec_roundtrip():
+    """arrival_pattern survives the spec_json wire form (str field)."""
+    camp = starvation_campaign()
+    assert campaign_from_dict(json.loads(camp.spec_json())) == camp
+    assert camp.scenario.arrival_pattern == "diurnal"
+
+
+def test_job_rules_campaign_toml_matches_library():
+    assert load_campaign(RULES_TOML) == starvation_campaign()
+
+
+@pytest.mark.parametrize("kind", sorted(JOB_RULE_CAMPAIGNS))
+def test_rule_fires_in_its_campaign_cells(rule_results, kind):
+    """Every job-level rule's campaign makes that rule fire — in the
+    pathology cell AND (before remediation kicks in) the controller
+    cell."""
+    for r in rule_results[kind].results:
+        assert r.kinds.get(kind, 0) > 0, (r.cell, r.kinds)
+
+
+@pytest.mark.parametrize("kind", sorted(JOB_RULE_CAMPAIGNS))
+def test_rule_campaign_closed_loop_remediates(rule_results, kind):
+    """The controller cell beats the fixed cell on throughput and queue
+    wait, and quiets the diagnosis it actuates on."""
+    by_mode = {r.mode: r for r in rule_results[kind].results}
+    fixed, ctl = by_mode["fixed"], by_mode["controller"]
+    assert ctl.throughput > fixed.throughput
+    assert ctl.queue_wait_s < fixed.queue_wait_s
+    assert ctl.kinds[kind] < fixed.kinds[kind]

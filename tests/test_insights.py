@@ -41,9 +41,10 @@ def _low_gpu_snap(ts=0.0, firing=True):
 # ----------------------------------------------------------------- rules ----
 
 
-def test_registry_has_the_four_paper_rules():
-    assert rule_names() == ["io_storm", "low_gpu", "missubmission",
-                            "overload"]
+def test_registry_has_the_builtin_rules():
+    assert rule_names() == ["fleet_fragmentation", "io_storm", "low_gpu",
+                            "missubmission", "multi_tenant_fairness",
+                            "overload", "queue_starvation"]
     assert get_rule("low_gpu").kind == "low_gpu"
     with pytest.raises(KeyError):
         get_rule("bogus")
