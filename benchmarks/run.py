@@ -626,6 +626,83 @@ def bench_steps():
     _row("serve_step_reduced", us, f"tokens_per_s={4 / (us / 1e6):.0f}")
 
 
+def bench_storage():
+    """The durable segment storage (DESIGN.md §12): WAL ingest
+    throughput over pre-encoded wire snapshots, and cold-start recovery
+    of a week of 15-min history (672 snapshots) from a compacted data
+    directory.  Emits ``BENCH_storage.json`` for CI / acceptance
+    (ingest >= 20k snapshots/s, recovery byte-identical and < 10 s)."""
+    import dataclasses
+    import shutil
+    import tempfile
+
+    from repro.daemon import protocol
+    from repro.daemon.store import HistoryStore
+    from repro.storage import SegmentLog, open_storage
+
+    sim = _sim(64)
+    base = sim.snapshot()
+    payload = protocol.dumps(protocol.encode_snapshot(base))
+
+    work = tempfile.mkdtemp(prefix="llload-bench-storage-")
+    try:
+        log = SegmentLog(os.path.join(work, "wal"), max_records=1024)
+        n_batch = 2000
+        clock = [base.timestamp]
+
+        def ingest():
+            for _ in range(n_batch):
+                clock[0] += 1.0
+                log.append(clock[0], payload)
+
+        us = _timeit(ingest, repeat=3, warmup=1)
+        rps = n_batch / (us / 1e6)
+        _row("storage_wal_ingest", us / n_batch,
+             f"records_per_s={rps:.0f};payload_b={len(payload)}")
+        log.close()
+
+        # a week of 15-min history through the full store + compaction,
+        # then a cold restart: recovery must reproduce /trend bytes
+        week = 4 * 24 * 7
+        data = os.path.join(work, "data")
+        rt = open_storage(data, compact_interval_s=1e9)
+        store = HistoryStore(backend=rt.history)
+        t0 = base.timestamp
+        for i in range(week):
+            store.append(dataclasses.replace(base,
+                                             timestamp=t0 + 900.0 * i))
+        rt.compact_once()
+        before = protocol.dumps(store.trend_wire("15min"))
+        rt.close()
+
+        t_rec0 = time.perf_counter()
+        rt2 = open_storage(data, compact_interval_s=1e9)
+        store2 = HistoryStore(backend=rt2.history)
+        counts = store2.recover()
+        recovery_s = time.perf_counter() - t_rec0
+        identical = protocol.dumps(store2.trend_wire("15min")) == before
+        rt2.close()
+        _row("storage_week_recovery", recovery_s * 1e6,
+             f"tier_points={counts['tier_points']};"
+             f"replayed={counts['replayed']};identical={identical}")
+
+        assert rps >= 20_000, f"storage ingest too slow: {rps:.0f}/s"
+        assert identical, "recovered /trend bytes differ"
+        assert recovery_s < 10.0, \
+            f"week recovery too slow: {recovery_s:.2f}s"
+        _emit("storage", {
+            "wal_payload_bytes": len(payload),
+            "wal_ingest_records_per_s": round(rps, 1),
+            "week_snapshots": week,
+            "recovery_s": round(recovery_s, 4),
+            "recovered_tier_points": counts["tier_points"],
+            "recovered_replayed_raw": counts["replayed"],
+            "trend_byte_identical": identical,
+        })
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
 BENCHES = [
     bench_llload_query,
     bench_llload_all,
@@ -638,6 +715,7 @@ BENCHES = [
     bench_experiments,
     bench_sim,
     bench_jobstore,
+    bench_storage,
     bench_columnarize,
     bench_weekly_analysis,
     bench_monitor_overhead,

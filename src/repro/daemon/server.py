@@ -90,11 +90,20 @@ class LLloadDaemon:
     def __init__(self, source, *, ttl_s: float = 2.0,
                  store: Optional[HistoryStore] = None,
                  privileged: Optional[set] = None,
-                 history: int = 64):
+                 history: int = 64, storage=None):
         self.bus = TelemetryBus(ttl_s=ttl_s, history=history)
         self.bus.register(source)
         self.source = source
-        self.store = store if store is not None else HistoryStore()
+        # optional durable storage (repro.storage.StorageRuntime): both
+        # history stores gain a write-ahead backend and recover their
+        # pre-restart state before the sampler delivers anything
+        self.storage = storage
+        self.recovered: Dict[str, Dict[str, int]] = {}
+        if store is not None:
+            self.store = store
+        else:
+            self.store = HistoryStore(
+                backend=storage.history if storage is not None else None)
         self.bus.subscribe(self.store.subscriber(source.name))
         # the insight engine streams alongside the history store: every
         # collection is folded once, so /insights reads are O(active)
@@ -102,8 +111,12 @@ class LLloadDaemon:
         self.bus.subscribe(self.insights.subscriber(source.name))
         # the job-keyed tier streams the same way: one fold per
         # collection, so /job/{id} and the job_history table are O(read)
-        self.jobstore = JobHistoryStore()
+        self.jobstore = JobHistoryStore(
+            backend=storage.jobs if storage is not None else None)
         self.bus.subscribe(self.jobstore.subscriber(source.name))
+        if storage is not None:
+            self.recovered = {"history": self.store.recover(),
+                              "jobs": self.jobstore.recover()}
         self.privileged = privileged if privileged is not None else set()
         self.ttl_s = ttl_s
         self._started = time.monotonic()
@@ -143,8 +156,11 @@ class LLloadDaemon:
         return n
 
     def close(self):
-        """Stop the background sampler (idempotent)."""
+        """Stop the background sampler and, when durable storage is
+        attached, its compactor + segment writers (idempotent)."""
         self.bus.stop()
+        if self.storage is not None:
+            self.storage.close()
 
     # ------------------------------------------------------------ counters
     def counters(self) -> Dict[str, float]:
@@ -252,12 +268,15 @@ class LLloadDaemon:
                 "ttl_s": self.ttl_s})
         if path == "/stats":
             st = self.bus.stats(self.source.name)
-            return 200, JSON_CT, protocol.dumps({
+            payload = {
                 "bus": {"reads": st.reads, "cache_hits": st.cache_hits,
                         "collections": st.collections, "errors": st.errors},
                 "store": self.store.sizes(),
                 "jobstore": self.jobstore.sizes(),
-                "http": self.counters()})
+                "http": self.counters()}
+            if self.storage is not None:
+                payload["storage"] = self.storage.stats()
+            return 200, JSON_CT, protocol.dumps(payload)
         if path == "/snapshot":
             snap = self.bus.read(self.source.name)
             return 200, JSON_CT, protocol.dumps(
@@ -554,6 +573,27 @@ def serve_background(daemon: LLloadDaemon, *, host: str = "127.0.0.1",
 # --------------------------------------------------------------------------
 
 
+def backfill_sources(path: str):
+    """Resolve a ``--backfill`` argument into ``(label, replayable)``
+    pairs: a single TSV file, a flat directory of daily TSVs, or an
+    archive root holding one subdirectory per cluster."""
+    import os
+
+    from repro.core.archive import SnapshotArchive
+    from repro.monitor.source import ArchiveSource
+
+    if os.path.isfile(path):
+        return [(path, ArchiveSource([path]).frames())]
+    subdirs = [os.path.join(path, d) for d in sorted(os.listdir(path))
+               if os.path.isdir(os.path.join(path, d))]
+    out = []
+    for sub in (subdirs or [path]):
+        cluster = os.path.basename(sub)
+        out.append((sub, SnapshotArchive(os.path.dirname(sub) or ".",
+                                         cluster)))
+    return out
+
+
 def main(argv=None) -> int:
     """``python -m repro.daemon``: build the selected source, optionally
     backfill the history store from a TSV archive, start the sampler,
@@ -583,30 +623,64 @@ def main(argv=None) -> int:
     ap.add_argument("--interval", type=_positive_float, default=None,
                     metavar="S", help="background sampler period "
                                       "(default: source hint or TTL)")
-    ap.add_argument("--backfill", default=None, metavar="DIR",
+    ap.add_argument("--backfill", default=None, metavar="PATH",
                     help="replay a TSV archive into the history store at "
-                         "startup (the archive must share the source's "
-                         "clock: live snapshots older than the newest "
-                         "backfilled bucket are dropped from the tiers)")
+                         "startup: a single TSV file, a flat directory of "
+                         "daily TSVs, or an archive root of per-cluster "
+                         "subdirectories (the archive must share the "
+                         "source's clock: live snapshots older than the "
+                         "newest backfilled bucket are dropped from the "
+                         "tiers)")
+    ap.add_argument("--data-dir", default=None, metavar="DIR",
+                    help="durable storage root: history and job stores "
+                         "persist to append-only segment files and a "
+                         "restarted daemon recovers them (default: "
+                         "in-memory only)")
+    ap.add_argument("--retain-raw", type=_positive_float, default=86400.0,
+                    metavar="S", help="with --data-dir: keep compacted "
+                                      "raw segments this long")
+    ap.add_argument("--retain-tiers", type=_positive_float,
+                    default=90 * 86400.0, metavar="S",
+                    help="with --data-dir: keep downsampled tier / "
+                         "per-user / per-job segments this long")
+    ap.add_argument("--compact-interval", type=_positive_float,
+                    default=30.0, metavar="S",
+                    help="with --data-dir: background compaction period")
+    ap.add_argument("--segment-records", type=int, default=1024,
+                    metavar="N", help="with --data-dir: records per "
+                                      "segment before it seals")
     args = ap.parse_args(argv)
 
     from repro.core.cli import make_source_from_args
     source = make_source_from_args(args)
 
-    daemon = LLloadDaemon(source, ttl_s=args.ttl)
+    storage = None
+    if args.data_dir:
+        from repro.storage import open_storage
+        storage = open_storage(args.data_dir,
+                               segment_records=max(1, args.segment_records),
+                               retain_raw_s=args.retain_raw,
+                               retain_tier_s=args.retain_tiers,
+                               compact_interval_s=args.compact_interval)
+
+    daemon = LLloadDaemon(source, ttl_s=args.ttl, storage=storage)
+    if storage is not None:
+        rec = daemon.recovered
+        print(f"llload daemon: data dir {args.data_dir} "
+              f"(recovered {rec['history'].get('tier_points', 0)} tier "
+              f"points, {rec['history'].get('ring_refilled', 0) + rec['history'].get('replayed', 0)} "
+              f"raw snapshots, {rec['jobs'].get('jobs', 0)} jobs)",
+              flush=True)
     if args.backfill:
-        from repro.core.archive import SnapshotArchive
-        import os
         total = 0
-        root = args.backfill
-        subdirs = [os.path.join(root, d) for d in sorted(os.listdir(root))
-                   if os.path.isdir(os.path.join(root, d))]
-        for sub in (subdirs or [root]):
-            cluster = os.path.basename(sub)
-            archive = SnapshotArchive(os.path.dirname(sub) or ".", cluster)
-            total += daemon.backfill(archive)
+        for label, replayable in backfill_sources(args.backfill):
+            n = daemon.backfill(replayable)
+            print(f"backfilled {n} snapshots from {label}", flush=True)
+            total += n
         print(f"backfilled {total} snapshots into the history store",
               flush=True)
+    if storage is not None:
+        storage.start()
     daemon.start_sampler(args.interval)
 
     server = serve(daemon, host=args.host, port=args.port)

@@ -176,14 +176,20 @@ class _Tier:
         self.points: Deque[TierPoint] = collections.deque(
             maxlen=spec.capacity)
         self.current: Optional[TierPoint] = None
+        self.last_t: Optional[float] = None     # newest folded timestamp
 
     def fold(self, summary: _Summary) -> bool:
-        """Fold one summary; returns False when the snapshot is older
-        than the bucket already being filled (mixed clocks — e.g. an
-        epoch-stamped backfill followed by a sim-clock source).  Folding
-        it anyway would corrupt the open bucket's aggregates, so it is
-        dropped from this tier (the raw ring still holds it) and the
-        caller counts it."""
+        """Fold one summary; returns False when the snapshot is not
+        newer than the last one folded (mixed clocks — e.g. an
+        epoch-stamped backfill followed by a sim-clock source — or a
+        re-delivered snapshot).  Folding it anyway would corrupt the
+        open bucket's aggregates, so it is dropped from this tier (the
+        raw ring still holds out-of-order ones) and the caller counts
+        it.  The ``<=`` makes the fold restart-tolerant: replaying the
+        last folded snapshot after recovery is a no-op, the same policy
+        as :meth:`_JobSeries.fold`."""
+        if self.last_t is not None and summary.timestamp <= self.last_t:
+            return False
         start = math.floor(summary.timestamp / self.spec.bucket_s) \
             * self.spec.bucket_s
         cur = self.current
@@ -194,6 +200,7 @@ class _Tier:
                 self.points.append(cur)
             cur = self.current = TierPoint(bucket_start=start)
         cur.fold(summary, representative=cur.count == 0)
+        self.last_t = summary.timestamp
         return True
 
     def all_points(self) -> List[TierPoint]:
@@ -213,27 +220,58 @@ class HistoryStore:
 
     def __init__(self, *, raw_capacity: int = 256,
                  tiers: Iterable[TierSpec] = DEFAULT_TIERS,
-                 low_threshold: Optional[float] = None):
+                 low_threshold: Optional[float] = None,
+                 backend=None):
         self._raw: Deque[ClusterSnapshot] = collections.deque(
             maxlen=raw_capacity)
         self._tiers = [_Tier(spec) for spec in tiers]
         self._low = low_threshold
         self._appended = 0
         self._out_of_order = 0
+        self._duplicates = 0
+        self._last_t: Optional[float] = None    # last ring-appended t
         self._lock = threading.Lock()
+        # optional durable backend (repro.storage.HistoryBackend shape):
+        # every accepted append is write-ahead logged, recover() rebuilds
+        # the tiers + ring from disk
+        self._backend = backend
+        if backend is not None:
+            backend.configure(tiers=[t.spec for t in self._tiers],
+                              low_threshold=low_threshold,
+                              raw_capacity=raw_capacity)
 
     # ------------------------------------------------------------- writes
     def append(self, snap: ClusterSnapshot):
-        """Absorb one snapshot: raw ring + every downsampling tier
-        (out-of-order snapshots are dropped from tiers, counted in
-        :meth:`sizes`)."""
+        """Absorb one snapshot: raw ring + every downsampling tier.
+        Out-of-order snapshots are dropped from tiers; an exact repeat of
+        the previous timestamp (a re-delivered or frozen-clock snapshot)
+        is dropped entirely.  Both are counted in :meth:`sizes`."""
         summary = summarize(snap, self._low)
         with self._lock:
-            self._raw.append(snap)
-            self._appended += 1
-            for tier in self._tiers:
-                if not tier.fold(summary):
-                    self._out_of_order += 1
+            self._absorb(snap, summary, persist=True)
+
+    def _absorb(self, snap: ClusterSnapshot, summary: _Summary,
+                persist: bool):
+        """The fold under the lock; recovery replays through this with
+        ``persist=False`` so replayed records are not re-logged."""
+        if self._last_t is not None and snap.timestamp == self._last_t:
+            self._duplicates += 1
+            return
+        self._raw.append(snap)
+        self._appended += 1
+        self._last_t = snap.timestamp
+        for tier in self._tiers:
+            if not tier.fold(summary):
+                self._out_of_order += 1
+        if persist and self._backend is not None:
+            self._backend.append_snapshot(snap)
+
+    def recover(self) -> Dict[str, int]:
+        """Rebuild tiers, ring and counters from the durable backend
+        (no-op without one).  Returns the backend's recovery counts."""
+        if self._backend is None:
+            return {}
+        return self._backend.recover_history(self)
 
     def subscriber(self, source_name: Optional[str] = None):
         """A TelemetryBus subscriber feeding this store."""
@@ -260,7 +298,8 @@ class HistoryStore:
         (the ``/stats`` store section)."""
         with self._lock:
             out = {"raw": len(self._raw), "appended": self._appended,
-                   "out_of_order_dropped": self._out_of_order}
+                   "out_of_order_dropped": self._out_of_order,
+                   "duplicate_dropped": self._duplicates}
             for t in self._tiers:
                 out[t.spec.name] = len(t.all_points())
             return out
@@ -341,6 +380,18 @@ class HistoryStore:
         buckets = [(p.bucket_start, p.user_flags) for p in pts
                    if (start is None or p.bucket_start >= start)
                    and (end is None or p.bucket_start <= end)]
+        # an explicit window reaching past the in-memory tier answers the
+        # cold part from the backend's user-keyed flag shards (the finest
+        # tier is what compaction persisted, so cadence matches)
+        if (self._backend is not None and start is not None
+                and self._tiers and tier == self._tiers[0].spec.name):
+            first_mem = buckets[0][0] if buckets else None
+            if first_mem is None or start < first_mem:
+                disk = self._backend.weekly_flags(start, end)
+                buckets = sorted(
+                    [(t, uf) for t, uf in disk.items()
+                     if first_mem is None or t < first_mem] + buckets,
+                    key=lambda b: b[0])
         return weekly_from_buckets(buckets, emails=emails,
                                    interval_hours=interval_hours)
 
@@ -474,7 +525,7 @@ class JobHistoryStore:
 
     def __init__(self, *, raw_per_job: int = 64, bucket_s: float = 900.0,
                  buckets_per_job: int = 4 * 24 * 7,
-                 max_jobs: int = 4096):
+                 max_jobs: int = 4096, backend=None):
         self.raw_per_job = raw_per_job
         self.bucket_s = bucket_s
         self.buckets_per_job = buckets_per_job
@@ -484,7 +535,15 @@ class JobHistoryStore:
         self._appended = 0
         self._dropped = 0
         self._evicted = 0
+        self._reloaded = 0
         self._lock = threading.Lock()
+        # optional durable backend (repro.storage.JobHistoryBackend
+        # shape): accepted samples are write-ahead logged per job shard,
+        # evicted jobs reload from their shard on the next touch
+        self._backend = backend
+        if backend is not None:
+            backend.configure(bucket_s=bucket_s, raw_per_job=raw_per_job,
+                              buckets_per_job=buckets_per_job)
 
     # ------------------------------------------------------------- writes
     def observe(self, snap: ClusterSnapshot):
@@ -494,17 +553,68 @@ class JobHistoryStore:
             for s in samples:
                 series = self._jobs.get(s.job_id)
                 if series is None:
-                    series = self._jobs[s.job_id] = _JobSeries(
-                        self.raw_per_job, self.bucket_s,
-                        self.buckets_per_job)
+                    series = self._revive(s.job_id)
                 if series.fold(s):
                     self._appended += 1
+                    if self._backend is not None:
+                        self._backend.append_sample(s)
                 else:
                     self._dropped += 1
                 self._jobs.move_to_end(s.job_id)
-            while len(self._jobs) > self.max_jobs:
-                self._jobs.popitem(last=False)
-                self._evicted += 1
+            self._evict()
+
+    def _evict(self):
+        while len(self._jobs) > self.max_jobs:
+            self._jobs.popitem(last=False)
+            self._evicted += 1
+
+    def _revive(self, job_id: int) -> _JobSeries:
+        """A series for a job not in memory: reloaded from the backend
+        shard when one exists (evicted or pre-restart jobs come back with
+        their history), fresh otherwise.  Call under the lock."""
+        series = None
+        if self._backend is not None:
+            series = self._backend.load_series(
+                job_id, self.raw_per_job, self.bucket_s,
+                self.buckets_per_job)
+            if series is not None:
+                self._reloaded += 1
+        if series is None:
+            series = _JobSeries(self.raw_per_job, self.bucket_s,
+                                self.buckets_per_job)
+        self._jobs[job_id] = series
+        return series
+
+    def _series(self, job_id: int) -> Optional[_JobSeries]:
+        """Read-path lookup: memory first, then a cold reload from the
+        backend shard (which counts toward the LRS population and may
+        evict).  Call under the lock."""
+        series = self._jobs.get(job_id)
+        if series is not None:
+            return series
+        if self._backend is None or not self._backend.has_job(job_id):
+            return None
+        series = self._revive(job_id)
+        self._evict()
+        return series
+
+    def recover(self) -> Dict[str, int]:
+        """Load the most recently active jobs (up to ``max_jobs``) from
+        the durable backend; no-op without one."""
+        if self._backend is None:
+            return {}
+        ids = self._backend.recover_ids()[-self.max_jobs:]
+        n = 0
+        with self._lock:
+            for job_id, _ in ids:           # oldest first = LRS order
+                series = self._backend.load_series(
+                    job_id, self.raw_per_job, self.bucket_s,
+                    self.buckets_per_job)
+                if series is not None:
+                    self._jobs[job_id] = series
+                    self._reloaded += 1
+                    n += 1
+        return {"jobs": n}
 
     def subscriber(self, source_name: Optional[str] = None):
         """A TelemetryBus subscriber feeding this store."""
@@ -520,27 +630,35 @@ class JobHistoryStore:
             return list(self._jobs)
 
     def sizes(self) -> Dict[str, int]:
-        """Occupancy + append/drop/evict counters (``/stats``)."""
+        """Occupancy (job count, retained raw samples and buckets across
+        every in-memory series) + append/drop/evict/reload counters
+        (``/stats``)."""
         with self._lock:
-            return {"jobs": len(self._jobs), "appended": self._appended,
-                    "dropped": self._dropped, "evicted": self._evicted}
+            raw_samples = sum(len(s.raw) for s in self._jobs.values())
+            buckets = sum(
+                len(s.points) + (1 if s.current is not None else 0)
+                for s in self._jobs.values())
+            return {"jobs": len(self._jobs),
+                    "raw_samples": raw_samples, "buckets": buckets,
+                    "appended": self._appended, "dropped": self._dropped,
+                    "evicted": self._evicted, "reloaded": self._reloaded}
 
     def raw_points(self, job_id: int) -> List[JobSample]:
         """``job_id``'s raw ring, oldest first (empty when unknown)."""
         with self._lock:
-            series = self._jobs.get(job_id)
+            series = self._series(job_id)
             return list(series.raw) if series is not None else []
 
     def points(self, job_id: int) -> List[JobPoint]:
         """``job_id``'s 15-min buckets (empty when unknown)."""
         with self._lock:
-            series = self._jobs.get(job_id)
+            series = self._series(job_id)
             return series.all_points() if series is not None else []
 
     def lifetime(self, job_id: int) -> Optional[Dict[str, Agg]]:
         """Lifetime min/mean/max per sampled field, or ``None``."""
         with self._lock:
-            series = self._jobs.get(job_id)
+            series = self._series(job_id)
             if series is None:
                 return None
             return {f: copy.deepcopy(a)
@@ -549,5 +667,5 @@ class JobHistoryStore:
     def last_sample(self, job_id: int) -> Optional[JobSample]:
         """The newest retained sample of ``job_id``, or ``None``."""
         with self._lock:
-            series = self._jobs.get(job_id)
+            series = self._series(job_id)
             return series.last if series is not None else None

@@ -1,0 +1,102 @@
+"""Durable sharded history: append-only segment storage for the daemon.
+
+Enable it with ``llload-daemon --data-dir DIR``; without the flag the
+daemon keeps today's in-memory-only behavior.  Layout under ``DIR``::
+
+    MANIFEST.json        format versions + creation parameters
+    history/             cluster history (HistoryBackend)
+    jobs/                per-job shards (JobHistoryBackend)
+
+See DESIGN.md §12 for the segment format and the compaction state
+machine; docs/operator-guide.md §7 for retention flags and disk sizing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Optional
+
+from repro.storage import codec
+from repro.storage.backend import (DEFAULT_RETAIN_RAW_S,
+                                   DEFAULT_RETAIN_TIER_S, HistoryBackend,
+                                   JobHistoryBackend)
+from repro.storage.compact import CompactionDriver
+from repro.storage.segment import (FORMAT_VERSION, ScanResult, SegmentError,
+                                   SegmentIndex, SegmentWriter, frame_record,
+                                   iter_records, scan_segment)
+from repro.storage.shards import ShardManager, bucket_of, safe_key, unsafe_key
+from repro.storage.wal import SegmentInfo, SegmentLog, segment_name
+
+MANIFEST_NAME = "MANIFEST.json"
+
+__all__ = [
+    "CompactionDriver", "HistoryBackend", "JobHistoryBackend",
+    "ScanResult", "SegmentError", "SegmentIndex", "SegmentInfo",
+    "SegmentLog", "SegmentWriter", "ShardManager", "StorageRuntime",
+    "bucket_of", "frame_record", "iter_records", "open_storage",
+    "safe_key", "scan_segment", "segment_name", "unsafe_key",
+]
+
+
+@dataclasses.dataclass
+class StorageRuntime:
+    """One opened data directory: both backends plus their compactor."""
+    root: str
+    history: HistoryBackend
+    jobs: JobHistoryBackend
+    driver: CompactionDriver
+
+    def start(self) -> None:
+        """Start background compaction (after the stores have recovered)."""
+        self.driver.start()
+
+    def compact_once(self) -> int:
+        return self.driver.run_once()
+
+    def stats(self) -> Dict[str, object]:
+        return {"root": self.root, "history": self.history.stats(),
+                "jobs": self.jobs.stats(), "compactor": self.driver.stats()}
+
+    def close(self) -> None:
+        self.driver.stop()
+        self.history.close()
+        self.jobs.close()
+
+
+def open_storage(data_dir: str, *, segment_records: int = 1024,
+                 segment_bytes: int = 4 << 20,
+                 retain_raw_s: float = DEFAULT_RETAIN_RAW_S,
+                 retain_tier_s: float = DEFAULT_RETAIN_TIER_S,
+                 compact_interval_s: float = 30.0) -> StorageRuntime:
+    """Open (creating if needed) a daemon data directory.
+
+    The compaction driver is returned stopped; call
+    :meth:`StorageRuntime.start` once the stores are attached and
+    recovered, so the first background pass sees their tier specs.
+    """
+    os.makedirs(data_dir, exist_ok=True)
+    manifest_path = os.path.join(data_dir, MANIFEST_NAME)
+    if not os.path.exists(manifest_path):
+        tmp = manifest_path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(codec.dumps({
+                "segment_format": FORMAT_VERSION,
+                "codec_format": codec.CODEC_VERSION,
+                "segment_records": segment_records,
+                "segment_bytes": segment_bytes,
+            }))
+        os.replace(tmp, manifest_path)
+    history = HistoryBackend(os.path.join(data_dir, "history"),
+                             segment_records=segment_records,
+                             segment_bytes=segment_bytes,
+                             retain_raw_s=retain_raw_s,
+                             retain_tier_s=retain_tier_s)
+    jobs = JobHistoryBackend(os.path.join(data_dir, "jobs"),
+                             segment_records=max(32, segment_records // 4),
+                             segment_bytes=max(1 << 16, segment_bytes // 4),
+                             retain_raw_s=retain_raw_s,
+                             retain_tier_s=retain_tier_s)
+    driver = CompactionDriver([history, jobs],
+                              interval_s=compact_interval_s)
+    return StorageRuntime(root=data_dir, history=history, jobs=jobs,
+                          driver=driver)

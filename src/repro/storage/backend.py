@@ -1,0 +1,580 @@
+"""Durable backends for the daemon's history stores (DESIGN.md §12).
+
+Two backends share the same building blocks (segment files, write-ahead
+segment logs, shards, checkpoints):
+
+  * :class:`HistoryBackend` — cluster history.  Every appended snapshot
+    is written to a raw WAL in the daemon's versioned wire schema
+    (:mod:`repro.daemon.protocol`).  Compaction folds *sealed* raw
+    segments through a shadow copy of the store's downsampling tiers,
+    persisting finalized 15-min/hourly buckets as tier segments, per-user
+    weekly-utilization flags into user-keyed shards, and the open-bucket
+    state into an atomic ``CHECKPOINT.json``.  Recovery = load the
+    checkpoint + tier segments, then replay only the raw records the
+    checkpoint does not cover — so a cold start over a week of history
+    re-folds minutes of raw data, not the week.
+
+  * :class:`JobHistoryBackend` — per-job history, one shard directory per
+    job id.  Samples append to the job's raw log; per-shard compaction
+    persists 15-min buckets, lifetime aggregates and the dedup cursor.
+    An evicted (or never-loaded) job reloads from its shard on demand,
+    which is what keeps resident memory O(active jobs).
+
+Both folds are deterministic and every float survives the JSON round
+trip, so a restarted daemon's ``/trend``, ``/weekly`` and ``/job/{id}``
+responses are byte-identical to the pre-restart daemon's.
+"""
+from __future__ import annotations
+
+import collections
+import math
+import os
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from repro.daemon import protocol
+from repro.daemon.store import (  # noqa: F401 — _Tier/_JobSeries are the
+    DEFAULT_TIERS, TierSpec, _JobSeries, _Tier, summarize)
+# shared fold engine: the backend persists and restores their state
+from repro.storage import codec
+from repro.storage.segment import scan_segment
+from repro.storage.shards import ShardManager, bucket_of, safe_key
+from repro.storage.wal import SegmentLog
+
+CHECKPOINT_NAME = "CHECKPOINT.json"
+
+DEFAULT_RETAIN_RAW_S = 86400.0               # one day of raw snapshots
+DEFAULT_RETAIN_TIER_S = 90 * 86400.0         # one quarter of tier buckets
+
+
+def _write_json_atomic(path: str, obj) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(codec.dumps(obj))
+    os.replace(tmp, path)
+
+
+def _read_json(path: str):
+    try:
+        with open(path, "rb") as f:
+            return codec.loads(f.read())
+    except (OSError, ValueError):
+        return None
+
+
+def _tail_record_t(log: SegmentLog) -> Optional[float]:
+    """Timestamp of the newest record in ``log`` (None when empty)."""
+    infos = log.segments()
+    for info in reversed(infos):
+        recs = scan_segment(info.path).records
+        if recs:
+            return recs[-1][0]
+    return None
+
+
+def _load_points(log: SegmentLog, decode, cutoff: Optional[float],
+                 limit: int) -> List:
+    """Load finalized bucket records from a tier log in append order,
+    dropping duplicates (crash-window re-appends are identical, keep the
+    first) and anything at/after ``cutoff`` (the checkpoint's open
+    bucket — those buckets are rebuilt by replay).  Returns the last
+    ``limit`` points."""
+    out: List = []
+    last = -math.inf
+    for t, payload in log.replay():
+        if t <= last:
+            continue
+        if cutoff is not None and t >= cutoff:
+            continue
+        out.append(decode(codec.loads(payload)))
+        last = t
+    return out[-limit:] if limit else out
+
+
+# ---------------------------------------------------------------------------
+# Cluster history
+# ---------------------------------------------------------------------------
+
+
+class HistoryBackend:
+    """Durable backing for one :class:`~repro.daemon.store.HistoryStore`.
+
+    Layout under ``root``::
+
+        CHECKPOINT.json          compaction cursor + open-bucket state
+        raw/seg-*.log[.idx]      snapshot WAL (wire-schema payloads)
+        tiers/<name>/seg-*.log   finalized TierPoint records per tier
+        users/<xx>/<user>/seg-*  per-user weekly flag series (user-keyed)
+    """
+
+    def __init__(self, root: str, *, segment_records: int = 1024,
+                 segment_bytes: int = 4 << 20,
+                 retain_raw_s: float = DEFAULT_RETAIN_RAW_S,
+                 retain_tier_s: float = DEFAULT_RETAIN_TIER_S):
+        self.root = root
+        self.segment_records = segment_records
+        self.segment_bytes = segment_bytes
+        self.retain_raw_s = retain_raw_s
+        self.retain_tier_s = retain_tier_s
+        self.retain_raw_records = 256        # raised by the attached store
+        os.makedirs(root, exist_ok=True)
+        self.raw_log = SegmentLog(os.path.join(root, "raw"),
+                                  max_records=segment_records,
+                                  max_bytes=segment_bytes)
+        self.users = ShardManager(os.path.join(root, "users"),
+                                  max_records=segment_records,
+                                  max_bytes=segment_bytes)
+        self._tier_specs: Tuple[TierSpec, ...] = tuple(DEFAULT_TIERS)
+        self._low: Optional[float] = None
+        self._tier_logs: Dict[str, SegmentLog] = {}
+        self._lock = threading.Lock()
+        # shadow fold state (lazy; only the compactor needs it)
+        self._shadow: Optional[Dict[str, _Tier]] = None
+        self._shadow_last_t: Optional[float] = None
+        self._shadow_appended = 0
+        self._shadow_ooo = 0
+        self._through_seq = -1
+        self._last_logged: Dict[str, float] = {}
+        self.compactions = 0
+        self.compacted_records = 0
+
+    # ---------------------------------------------------------- attachment
+    def configure(self, *, tiers, low_threshold: Optional[float],
+                  raw_capacity: int) -> None:
+        """Adopt the attached store's tier specs / thresholds, so the
+        shadow fold and recovery reproduce its state exactly."""
+        self._tier_specs = tuple(tiers)
+        self._low = low_threshold
+        self.retain_raw_records = raw_capacity   # the ring-refill floor
+        self._shadow = None                  # respecified: rebuild lazily
+
+    def _tier_log(self, name: str) -> SegmentLog:
+        log = self._tier_logs.get(name)
+        if log is None:
+            log = self._tier_logs[name] = SegmentLog(
+                os.path.join(self.root, "tiers", name),
+                max_records=self.segment_records,
+                max_bytes=self.segment_bytes)
+        return log
+
+    # ------------------------------------------------------------- writing
+    def append_snapshot(self, snap) -> None:
+        """WAL one appended snapshot (called under the store lock, in
+        fold order — WAL order IS replay order)."""
+        payload = protocol.dumps(protocol.encode_snapshot(snap))
+        self.raw_log.append(snap.timestamp, payload)
+
+    # ---------------------------------------------------------- checkpoint
+    def _checkpoint_path(self) -> str:
+        return os.path.join(self.root, CHECKPOINT_NAME)
+
+    def _write_checkpoint(self) -> None:
+        tiers = {}
+        for spec in self._tier_specs:
+            tier = self._shadow[spec.name]
+            tiers[spec.name] = {
+                "current": codec.optional(codec.tier_point_to_dict,
+                                          tier.current),
+                "last_t": tier.last_t,
+            }
+        _write_json_atomic(self._checkpoint_path(), {
+            "format": codec.CODEC_VERSION,
+            "through_seq": self._through_seq,
+            "last_t": self._shadow_last_t,
+            "appended": self._shadow_appended,
+            "out_of_order": self._shadow_ooo,
+            "tiers": tiers,
+        })
+
+    def _read_checkpoint(self):
+        return _read_json(self._checkpoint_path())
+
+    # ---------------------------------------------------------- compaction
+    def _ensure_shadow(self) -> None:
+        if self._shadow is not None:
+            return
+        ckpt = self._read_checkpoint()
+        self._shadow = {}
+        for spec in self._tier_specs:
+            tier = _Tier(spec)
+            if ckpt is not None:
+                st = ckpt["tiers"].get(spec.name)
+                if st is not None:
+                    tier.current = codec.optional(
+                        codec.tier_point_from_dict, st["current"])
+                    tier.last_t = st["last_t"]
+            self._shadow[spec.name] = tier
+            logged = _tail_record_t(self._tier_log(spec.name))
+            self._last_logged[spec.name] = \
+                logged if logged is not None else -math.inf
+        if ckpt is not None:
+            self._through_seq = ckpt["through_seq"]
+            self._shadow_last_t = ckpt["last_t"]
+            self._shadow_appended = ckpt["appended"]
+            self._shadow_ooo = ckpt["out_of_order"]
+
+    def _log_point(self, name: str, point) -> None:
+        if point.bucket_start <= self._last_logged[name]:
+            return                           # crash-window re-append
+        self._tier_log(name).append(
+            point.bucket_start,
+            codec.dumps(codec.tier_point_to_dict(point)))
+        self._last_logged[name] = point.bucket_start
+        if name == self._tier_specs[0].name:
+            # the finest tier carries the weekly per-user flags: shard
+            # them user-keyed so multi-year windows answer from disk
+            for user, flags in point.user_flags.items():
+                self.users.log_for(user).append(
+                    point.bucket_start, codec.dumps(list(flags)))
+
+    def _shadow_fold(self, snap) -> None:
+        summary = summarize(snap, self._low)
+        if self._shadow_last_t is not None and \
+                snap.timestamp == self._shadow_last_t:
+            return                           # WAL never holds exact dups
+        self._shadow_last_t = snap.timestamp
+        self._shadow_appended += 1
+        for spec in self._tier_specs:
+            tier = self._shadow[spec.name]
+            old = tier.current
+            if not tier.fold(summary):
+                self._shadow_ooo += 1
+                continue
+            if old is not None and tier.current is not old:
+                self._log_point(spec.name, old)
+
+    def compact_once(self) -> int:
+        """Fold sealed raw segments beyond the checkpoint into tier +
+        user-shard segments, advance the checkpoint, apply retention.
+        Returns the number of raw segments compacted."""
+        with self._lock:
+            self._ensure_shadow()
+            done = 0
+            for info in self.raw_log.sealed_segments():
+                if info.seq <= self._through_seq:
+                    continue
+                for _, payload in scan_segment(info.path).records:
+                    self._shadow_fold(
+                        protocol.decode_snapshot(codec.loads(payload)))
+                    self.compacted_records += 1
+                self._through_seq = info.seq
+                done += 1
+            if done:
+                self._write_checkpoint()
+                self.compactions += 1
+            self._apply_retention()
+            return done
+
+    def _apply_retention(self) -> None:
+        newest = self.raw_log.record_range()[1]
+        if newest is None:
+            return
+        self.raw_log.prune_before(
+            newest - self.retain_raw_s,
+            keep_records=self.retain_raw_records,
+            max_seq=self._through_seq)
+        horizon = newest - self.retain_tier_s
+        for spec in self._tier_specs:
+            self._tier_log(spec.name).prune_before(horizon)
+        for _, log in self.users.iter_logs():
+            log.prune_before(horizon)
+
+    # ------------------------------------------------------------ recovery
+    def recover_history(self, store) -> Dict[str, int]:
+        """Rebuild ``store``'s tiers, raw ring and counters: checkpointed
+        state first, then replay of the raw records the checkpoint does
+        not cover (older retained records refill only the ring)."""
+        ckpt = self._read_checkpoint()
+        through = ckpt["through_seq"] if ckpt is not None else -1
+        n_points = 0
+        with store._lock:
+            for tier in store._tiers:
+                spec = tier.spec
+                st = (ckpt["tiers"].get(spec.name)
+                      if ckpt is not None else None)
+                current = codec.optional(codec.tier_point_from_dict,
+                                         st["current"]) if st else None
+                cutoff = current.bucket_start if current is not None \
+                    else None
+                pts = (_load_points(self._tier_log(spec.name),
+                                    codec.tier_point_from_dict, cutoff,
+                                    spec.capacity)
+                       if ckpt is not None else [])
+                tier.points = collections.deque(pts, maxlen=spec.capacity)
+                tier.current = current
+                tier.last_t = st["last_t"] if st else None
+                n_points += len(pts)
+            if ckpt is not None:
+                store._appended = ckpt["appended"]
+                store._out_of_order = ckpt["out_of_order"]
+                store._last_t = ckpt["last_t"]
+            n_ring = n_replayed = 0
+            for seq, t, payload in self.raw_log.replay(with_seq=True):
+                snap = protocol.decode_snapshot(codec.loads(payload))
+                if seq <= through:
+                    store._raw.append(snap)
+                    store._last_t = snap.timestamp
+                    n_ring += 1
+                else:
+                    store._absorb(snap, summarize(snap, store._low),
+                                  persist=False)
+                    n_replayed += 1
+        return {"checkpoint": int(ckpt is not None),
+                "tier_points": n_points, "ring_refilled": n_ring,
+                "replayed": n_replayed}
+
+    # ----------------------------------------------------------- cold reads
+    def weekly_flags(self, start: Optional[float], end: Optional[float]
+                     ) -> Dict[float, Dict[str, Tuple[int, int, int]]]:
+        """Per-bucket per-user utilization flags from the user-keyed
+        shards (the disk path behind ``/weekly?start=`` windows older
+        than the in-memory tiers)."""
+        buckets: Dict[float, Dict[str, Tuple[int, int, int]]] = {}
+        for user, log in self.users.iter_logs():
+            last = -math.inf
+            for info in log.segments():
+                if info.t_min is None:
+                    continue
+                if start is not None and info.t_max < start:
+                    continue
+                if end is not None and info.t_min > end:
+                    continue
+                for t, payload in scan_segment(info.path).records:
+                    if t <= last:
+                        continue             # crash-window duplicate
+                    last = t
+                    if start is not None and t < start:
+                        continue
+                    if end is not None and t > end:
+                        continue
+                    flags = codec.loads(payload)
+                    buckets.setdefault(t, {})[user] = \
+                        tuple(int(v) for v in flags)
+        return buckets
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, object]:
+        tiers = {name: log.stats() for name, log in self._tier_logs.items()}
+        return {
+            "raw": self.raw_log.stats(),
+            "tiers": tiers,
+            "users": self.users.stats(),
+            "compactions": self.compactions,
+            "compacted_records": self.compacted_records,
+            "through_seq": self._through_seq,
+        }
+
+    def flush(self) -> None:
+        pass                                 # appends flush per record
+
+    def close(self) -> None:
+        self.raw_log.close()
+        for log in self._tier_logs.values():
+            log.close()
+        self.users.close()
+
+
+# ---------------------------------------------------------------------------
+# Job history
+# ---------------------------------------------------------------------------
+
+
+class JobHistoryBackend:
+    """Durable backing for one :class:`~repro.daemon.store.JobHistoryStore`.
+
+    Layout under ``root`` (one shard directory per job id)::
+
+        <xx>/<job id>/CHECKPOINT.json   per-shard cursor + fold state
+        <xx>/<job id>/raw/seg-*         JobSample records
+        <xx>/<job id>/points/seg-*      finalized 15-min JobPoint records
+    """
+
+    def __init__(self, root: str, *, segment_records: int = 256,
+                 segment_bytes: int = 1 << 20,
+                 retain_raw_s: float = DEFAULT_RETAIN_RAW_S,
+                 retain_tier_s: float = DEFAULT_RETAIN_TIER_S,
+                 max_open: int = 64):
+        self.root = root
+        self.retain_raw_s = retain_raw_s
+        self.retain_tier_s = retain_tier_s
+        os.makedirs(root, exist_ok=True)
+        self.raw = ShardManager(root, subdir="raw", max_open=max_open,
+                                max_records=segment_records,
+                                max_bytes=segment_bytes)
+        self.points = ShardManager(root, subdir="points", max_open=max_open,
+                                   max_records=segment_records,
+                                   max_bytes=segment_bytes)
+        self.bucket_s = 900.0
+        self.raw_per_job = 64
+        self.buckets_per_job = 4 * 24 * 7
+        self._dirty: set = set()
+        self._scan_pending = True            # first run compacts all shards
+        self._lock = threading.Lock()
+        self.compactions = 0
+        self.compacted_records = 0
+
+    def configure(self, *, bucket_s: float, raw_per_job: int,
+                  buckets_per_job: int) -> None:
+        """Adopt the attached store's series parameters."""
+        self.bucket_s = bucket_s
+        self.raw_per_job = raw_per_job
+        self.buckets_per_job = buckets_per_job
+
+    # ------------------------------------------------------------- writing
+    def append_sample(self, sample) -> None:
+        key = str(sample.job_id)
+        self.raw.log_for(key).append(
+            sample.t, codec.dumps(codec.job_sample_to_dict(sample)))
+        with self._lock:
+            self._dirty.add(key)
+
+    # ---------------------------------------------------------- checkpoint
+    def _checkpoint_path(self, key: str) -> str:
+        return os.path.join(self.root, bucket_of(key), safe_key(key),
+                            CHECKPOINT_NAME)
+
+    def _write_checkpoint(self, key: str, through: int,
+                          series: _JobSeries) -> None:
+        _write_json_atomic(self._checkpoint_path(key), {
+            "format": codec.CODEC_VERSION,
+            "through_seq": through,
+            "current": codec.optional(codec.job_point_to_dict,
+                                      series.current),
+            "lifetime": {f: codec.agg_to_dict(a)
+                         for f, a in series.lifetime.items()},
+            "last": codec.optional(codec.job_sample_to_dict, series.last),
+        })
+
+    def _seed_series(self, ckpt, raw_capacity: int, bucket_s: float,
+                     bucket_capacity: int, *, with_points: bool,
+                     key: Optional[str] = None) -> Tuple[_JobSeries, int]:
+        """A series holding the checkpointed fold state (no raw replay);
+        returns (series, through_seq)."""
+        series = _JobSeries(raw_capacity, bucket_s, bucket_capacity)
+        if ckpt is None:
+            return series, -1
+        series.current = codec.optional(codec.job_point_from_dict,
+                                        ckpt["current"])
+        series.lifetime = {f: codec.agg_from_dict(a)
+                           for f, a in ckpt["lifetime"].items()}
+        series.last = codec.optional(codec.job_sample_from_dict,
+                                     ckpt["last"])
+        if with_points and key is not None:
+            cutoff = series.current.bucket_start \
+                if series.current is not None else None
+            pts = _load_points(self.points.log_for(key),
+                               codec.job_point_from_dict, cutoff,
+                               bucket_capacity)
+            series.points = collections.deque(pts, maxlen=bucket_capacity)
+        return series, ckpt["through_seq"]
+
+    # ------------------------------------------------------------ recovery
+    def has_job(self, job_id: int) -> bool:
+        return self.raw.has_shard(str(job_id))
+
+    def load_series(self, job_id: int, raw_capacity: int, bucket_s: float,
+                    bucket_capacity: int) -> Optional[_JobSeries]:
+        """Rebuild one job's series from its shard (checkpointed state +
+        raw replay), or ``None`` when the job has no shard."""
+        key = str(job_id)
+        if not self.raw.has_shard(key):
+            return None
+        ckpt = _read_json(self._checkpoint_path(key))
+        series, through = self._seed_series(
+            ckpt, raw_capacity, bucket_s, bucket_capacity,
+            with_points=True, key=key)
+        n = 0
+        for seq, t, payload in self.raw.log_for(key).replay(with_seq=True):
+            sample = codec.job_sample_from_dict(codec.loads(payload))
+            if seq <= through:
+                series.raw.append(sample)    # ring refill only
+            else:
+                series.fold(sample)
+            n += 1
+        if ckpt is None and n == 0:
+            return None
+        return series
+
+    def recover_ids(self) -> List[Tuple[int, float]]:
+        """Every job id on disk with its newest sample time, oldest
+        first (the LRS insertion order for a recovering store)."""
+        out: List[Tuple[int, float]] = []
+        for key in self.raw.keys():
+            try:
+                job_id = int(key)
+            except ValueError:
+                continue
+            t = _tail_record_t(self.raw.log_for(key))
+            if t is None:
+                ckpt = _read_json(self._checkpoint_path(key))
+                if ckpt and ckpt.get("last"):
+                    t = ckpt["last"]["t"]
+            out.append((job_id, t if t is not None else -math.inf))
+        out.sort(key=lambda it: (it[1], it[0]))
+        return out
+
+    # ---------------------------------------------------------- compaction
+    def compact_once(self) -> int:
+        """Per-shard compaction of every shard touched since the last
+        run (all shards on the first run after startup)."""
+        with self._lock:
+            dirty = self._dirty
+            self._dirty = set()
+            scan = self._scan_pending
+            self._scan_pending = False
+        if scan:
+            dirty = dirty | set(self.raw.keys())
+        compacted = 0
+        for key in sorted(dirty):
+            if self._compact_shard(key):
+                compacted += 1
+        return compacted
+
+    def _compact_shard(self, key: str) -> bool:
+        log = self.raw.log_for(key)
+        ckpt = _read_json(self._checkpoint_path(key))
+        through = ckpt["through_seq"] if ckpt is not None else -1
+        sealed = [s for s in log.sealed_segments() if s.seq > through]
+        if not sealed:
+            return False
+        shadow, _ = self._seed_series(ckpt, 1, self.bucket_s, 1,
+                                      with_points=False)
+        pts_log = self.points.log_for(key)
+        logged = _tail_record_t(pts_log)
+        last_logged = logged if logged is not None else -math.inf
+        for info in sealed:
+            for _, payload in scan_segment(info.path).records:
+                sample = codec.job_sample_from_dict(codec.loads(payload))
+                old = shadow.current
+                if shadow.fold(sample) and old is not None and \
+                        shadow.current is not old:
+                    if old.bucket_start > last_logged:
+                        pts_log.append(
+                            old.bucket_start,
+                            codec.dumps(codec.job_point_to_dict(old)))
+                        last_logged = old.bucket_start
+                self.compacted_records += 1
+            through = info.seq
+        self._write_checkpoint(key, through, shadow)
+        self.compactions += 1
+        newest = shadow.last.t if shadow.last is not None else None
+        if newest is not None:
+            log.prune_before(newest - self.retain_raw_s,
+                             keep_records=self.raw_per_job,
+                             max_seq=through)
+            pts_log.prune_before(newest - self.retain_tier_s)
+        return True
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, object]:
+        shard_stats = self.raw.stats()
+        return {
+            "shards": shard_stats,
+            "points_shards": self.points.stats(),
+            "compactions": self.compactions,
+            "compacted_records": self.compacted_records,
+        }
+
+    def close(self) -> None:
+        self.raw.close()
+        self.points.close()

@@ -1,0 +1,109 @@
+"""JSON codecs for persisted fold state (DESIGN.md §12).
+
+The storage subsystem persists two kinds of payload:
+
+  * **raw records** — whole snapshots in the daemon's versioned wire
+    schema (:mod:`repro.daemon.protocol`) and per-job samples; and
+  * **fold state** — finalized tier buckets, open-bucket checkpoints and
+    lifetime aggregates, so recovery can *restore* downsampled history
+    instead of re-folding a week of raw snapshots.
+
+Everything round-trips exactly: JSON serializes Python floats via
+``repr`` so every bit survives, dict insertion order is preserved, and
+the per-user flag tuples are rebuilt as tuples on decode.  That is what
+makes a restarted daemon's ``/trend`` and ``/weekly`` responses
+byte-identical to the pre-restart ones.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Optional
+
+from repro.daemon.store import (_AGG_FIELDS, _JOB_AGG_FIELDS, Agg, JobPoint,
+                                JobSample, TierPoint)
+
+CODEC_VERSION = 1
+
+
+def dumps(obj: Any) -> bytes:
+    """Compact UTF-8 JSON bytes (the segment payload encoding)."""
+    return json.dumps(obj, separators=(",", ":")).encode("utf-8")
+
+
+def loads(data: bytes) -> Any:
+    return json.loads(data.decode("utf-8"))
+
+
+# ----------------------------------------------------------------- aggregates
+
+
+def agg_to_dict(agg: Agg) -> Dict[str, float]:
+    return {"min": agg.min, "mean": agg.mean, "max": agg.max, "n": agg.n}
+
+
+def agg_from_dict(d: Dict[str, float]) -> Agg:
+    return Agg(min=float(d["min"]), mean=float(d["mean"]),
+               max=float(d["max"]), n=int(d["n"]))
+
+
+# ---------------------------------------------------------------- tier points
+
+
+def tier_point_to_dict(p: TierPoint) -> Dict[str, Any]:
+    """A finalized (or open) cluster-tier bucket, losslessly — including
+    the Agg sample counts ``to_wire`` omits and the per-user flags."""
+    return {
+        "t": p.bucket_start,
+        "count": p.count,
+        "aggs": {f: agg_to_dict(getattr(p, f)) for f in _AGG_FIELDS},
+        "users": {u: list(flags) for u, flags in p.user_flags.items()},
+    }
+
+
+def tier_point_from_dict(d: Dict[str, Any]) -> TierPoint:
+    p = TierPoint(bucket_start=float(d["t"]), count=int(d["count"]))
+    for f in _AGG_FIELDS:
+        setattr(p, f, agg_from_dict(d["aggs"][f]))
+    p.user_flags = {u: tuple(int(v) for v in flags)
+                    for u, flags in d["users"].items()}
+    return p
+
+
+# ----------------------------------------------------------------- job points
+
+
+def job_point_to_dict(p: JobPoint) -> Dict[str, Any]:
+    return {
+        "t": p.bucket_start,
+        "count": p.count,
+        "aggs": {f: agg_to_dict(getattr(p, f)) for f in _JOB_AGG_FIELDS},
+    }
+
+
+def job_point_from_dict(d: Dict[str, Any]) -> JobPoint:
+    p = JobPoint(bucket_start=float(d["t"]), count=int(d["count"]))
+    for f in _JOB_AGG_FIELDS:
+        setattr(p, f, agg_from_dict(d["aggs"][f]))
+    return p
+
+
+# ---------------------------------------------------------------- job samples
+
+_JOB_SAMPLE_FIELDS = ("t", "job_id", "username", "name", "state", "n_nodes",
+                      "gpu_duty", "cpu_load", "mem_used_gb", "mem_total_gb",
+                      "gpu_mem_used_gb", "gpu_mem_total_gb", "queue_wait_s",
+                      "step_time_s")
+
+
+def job_sample_to_dict(s: JobSample) -> Dict[str, Any]:
+    return {f: getattr(s, f) for f in _JOB_SAMPLE_FIELDS}
+
+
+def job_sample_from_dict(d: Dict[str, Any]) -> JobSample:
+    return JobSample(**{f: d[f] for f in _JOB_SAMPLE_FIELDS})
+
+
+def optional(codec, value) -> Optional[Any]:
+    """Apply ``codec`` unless ``value`` is None (checkpoint open buckets
+    and last-samples are nullable)."""
+    return None if value is None else codec(value)

@@ -1,0 +1,232 @@
+"""Append-only segment files: the on-disk record format (DESIGN.md §12).
+
+A segment is a header followed by length-prefixed, checksummed records::
+
+    header:  b"LLSG" | u16 format version | u16 reserved     (8 bytes)
+    record:  u32 payload length | u32 crc32 | f64 timestamp | payload
+
+The CRC covers the timestamp and the payload, so a torn write (process
+killed mid-record, disk full) is detected on read: scanning stops at the
+first frame whose length runs past EOF or whose checksum fails, and
+everything before it is intact.  Appends that reopen an existing tail
+segment first truncate it back to the last valid frame boundary, so one
+torn record can never corrupt the records appended after a restart.
+
+Sealed (finished) segments get a JSON sidecar index (``<name>.idx``)
+holding the record count, byte size and min/max record timestamp — a
+time-range query can skip whole segments without opening them.  Reads go
+through :func:`iter_records`, which maps the file when it is large enough
+for ``mmap`` to pay off and walks it strictly sequentially either way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import mmap
+import os
+import struct
+import zlib
+from typing import Iterator, List, Optional, Tuple
+
+MAGIC = b"LLSG"
+FORMAT_VERSION = 1
+HEADER = struct.Struct("<4sHH")          # magic, version, reserved
+FRAME = struct.Struct("<IId")            # payload length, crc32, timestamp
+_MMAP_MIN_BYTES = 1 << 16                # below this, a plain read is faster
+
+MAX_PAYLOAD_BYTES = 64 << 20             # sanity cap against garbage lengths
+
+
+class SegmentError(ValueError):
+    """A segment file that cannot be opened at all (bad magic, or a
+    format version newer than this reader understands)."""
+
+
+def _crc(t_bytes: bytes, payload: bytes) -> int:
+    return zlib.crc32(payload, zlib.crc32(t_bytes)) & 0xFFFFFFFF
+
+
+def frame_record(t: float, payload: bytes) -> bytes:
+    """One record as its on-disk frame bytes."""
+    t_bytes = struct.pack("<d", t)
+    return FRAME.pack(len(payload), _crc(t_bytes, payload), t) + payload
+
+
+def header_bytes() -> bytes:
+    """The 8-byte segment header every segment file starts with."""
+    return HEADER.pack(MAGIC, FORMAT_VERSION, 0)
+
+
+def check_header(buf: bytes) -> None:
+    """Validate a segment header; raises :class:`SegmentError` on a bad
+    magic or a format version newer than this reader."""
+    if len(buf) < HEADER.size:
+        raise SegmentError("segment shorter than its header")
+    magic, version, _ = HEADER.unpack_from(buf)
+    if magic != MAGIC:
+        raise SegmentError(f"bad segment magic {magic!r}")
+    if version > FORMAT_VERSION:
+        raise SegmentError(
+            f"segment format {version} is newer than supported "
+            f"({FORMAT_VERSION}); upgrade this reader")
+
+
+@dataclasses.dataclass
+class ScanResult:
+    """What a sequential scan of one segment found."""
+    records: List[Tuple[float, bytes]]   # (timestamp, payload), file order
+    valid_bytes: int                     # offset of the first invalid frame
+    torn: bool                           # scan stopped before EOF
+
+
+def _scan(buf, size: int) -> ScanResult:
+    check_header(bytes(buf[:HEADER.size]))
+    records: List[Tuple[float, bytes]] = []
+    off = HEADER.size
+    while off < size:
+        if off + FRAME.size > size:
+            return ScanResult(records, off, torn=True)
+        length, crc, t = FRAME.unpack_from(buf, off)
+        end = off + FRAME.size + length
+        if length > MAX_PAYLOAD_BYTES or end > size:
+            return ScanResult(records, off, torn=True)
+        payload = bytes(buf[off + FRAME.size:end])
+        if _crc(struct.pack("<d", t), payload) != crc:
+            return ScanResult(records, off, torn=True)
+        records.append((t, payload))
+        off = end
+    return ScanResult(records, off, torn=False)
+
+
+def scan_segment(path: str) -> ScanResult:
+    """Read every valid record of ``path`` sequentially, stopping at the
+    first torn/corrupt frame (``torn=True``); mmap-backed when the file
+    is large enough for the mapping to pay off."""
+    size = os.path.getsize(path)
+    with open(path, "rb") as f:
+        if size >= _MMAP_MIN_BYTES:
+            with mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ) as mm:
+                return _scan(mm, size)
+        return _scan(f.read(), size)
+
+
+def iter_records(path: str) -> Iterator[Tuple[float, bytes]]:
+    """Iterate ``(timestamp, payload)`` over a segment's valid records."""
+    return iter(scan_segment(path).records)
+
+
+# --------------------------------------------------------------------- index
+
+
+@dataclasses.dataclass
+class SegmentIndex:
+    """The sealed-segment sidecar: enough to answer "does this segment
+    overlap [start, end]" and "how many records" without opening it."""
+    count: int
+    bytes: int
+    t_min: float
+    t_max: float
+
+    def to_json(self) -> str:
+        return json.dumps({"format": FORMAT_VERSION, "count": self.count,
+                           "bytes": self.bytes, "t_min": self.t_min,
+                           "t_max": self.t_max})
+
+    @classmethod
+    def from_json(cls, text: str) -> "SegmentIndex":
+        d = json.loads(text)
+        return cls(count=int(d["count"]), bytes=int(d["bytes"]),
+                   t_min=float(d["t_min"]), t_max=float(d["t_max"]))
+
+    def overlaps(self, start: Optional[float], end: Optional[float]) -> bool:
+        """True when [t_min, t_max] intersects [start, end] (None bounds
+        are open)."""
+        if start is not None and self.t_max < start:
+            return False
+        if end is not None and self.t_min > end:
+            return False
+        return True
+
+
+def index_path(segment_path: str) -> str:
+    """The sidecar index path for a segment file."""
+    return segment_path + ".idx"
+
+
+def write_index(segment_path: str, index: SegmentIndex) -> None:
+    """Write the sidecar atomically (tmp + rename) so a crash can never
+    leave a half-written index next to a sealed segment."""
+    tmp = index_path(segment_path) + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(index.to_json())
+    os.replace(tmp, index_path(segment_path))
+
+
+def read_index(segment_path: str) -> Optional[SegmentIndex]:
+    """The sidecar index, or ``None`` when the segment is unsealed (or
+    the sidecar is unreadable — the segment scan is the fallback)."""
+    try:
+        with open(index_path(segment_path)) as f:
+            return SegmentIndex.from_json(f.read())
+    except (OSError, ValueError, KeyError):
+        return None
+
+
+class SegmentWriter:
+    """Append records to one segment file.
+
+    Opening an existing file scans it and truncates back to the last
+    valid frame (``torn_dropped`` counts the discarded frames), so the
+    writer always appends at a clean record boundary.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self.torn_dropped = 0
+        if os.path.exists(path) and os.path.getsize(path) > 0:
+            scan = scan_segment(path)
+            self.count = len(scan.records)
+            self.t_min = min((t for t, _ in scan.records), default=None)
+            self.t_max = max((t for t, _ in scan.records), default=None)
+            if scan.torn:
+                self.torn_dropped = 1
+                with open(path, "r+b") as f:
+                    f.truncate(scan.valid_bytes)
+            self._f = open(path, "ab")
+            self.bytes = scan.valid_bytes
+        else:
+            self._f = open(path, "wb")
+            self._f.write(header_bytes())
+            self._f.flush()
+            self.count = 0
+            self.bytes = HEADER.size
+            self.t_min = None
+            self.t_max = None
+
+    def append(self, t: float, payload: bytes) -> None:
+        """Append one record and flush it to the OS (the WAL discipline:
+        a process crash keeps every appended record; only the one being
+        written when the power goes can tear, and the reader drops it)."""
+        frame = frame_record(t, payload)
+        self._f.write(frame)
+        self._f.flush()
+        self.count += 1
+        self.bytes += len(frame)
+        self.t_min = t if self.t_min is None else min(self.t_min, t)
+        self.t_max = t if self.t_max is None else max(self.t_max, t)
+
+    def seal(self) -> SegmentIndex:
+        """Close the file and write its sidecar index."""
+        index = SegmentIndex(count=self.count, bytes=self.bytes,
+                             t_min=self.t_min if self.t_min is not None
+                             else 0.0,
+                             t_max=self.t_max if self.t_max is not None
+                             else 0.0)
+        self.close()
+        write_index(self.path, index)
+        return index
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.flush()
+            self._f.close()

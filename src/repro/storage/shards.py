@@ -1,0 +1,136 @@
+"""Key-based sharding: directory-per-shard, bounded open writers.
+
+A :class:`ShardManager` maps an arbitrary string key (a username, a job
+id) to its own segment-log directory under a common root.  Keys are
+sanitized for the filesystem (anything outside ``[A-Za-z0-9_-]`` is
+percent-hex-escaped, so ``..`` can never traverse), and keys are fanned
+out under 256 hash buckets (``<xx>/<key>/``) so a million shards never
+land in one directory.
+
+Only a bounded number of shards keep an *open* writer at a time (LRU of
+open :class:`~repro.storage.wal.SegmentLog` handles): resident state is
+O(active keys) while cold shards stay on disk until touched again.
+"""
+from __future__ import annotations
+
+import collections
+import os
+import threading
+import zlib
+from typing import Dict, Iterator, List, Optional
+
+from repro.storage.wal import SegmentLog
+
+_SAFE = frozenset(
+    "abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_-")
+
+
+def safe_key(key: str) -> str:
+    """A filesystem-safe, collision-free encoding of ``key``
+    (percent-hex over the UTF-8 bytes, so any unicode round-trips)."""
+    return "".join(chr(b) if chr(b) in _SAFE else f"%{b:02X}"
+                   for b in key.encode("utf-8"))
+
+
+def unsafe_key(name: str) -> str:
+    """Invert :func:`safe_key` (tolerant of malformed escapes: they
+    decode literally rather than raising on a tampered directory)."""
+    out, i = bytearray(), 0
+    while i < len(name):
+        if name[i] == "%" and i + 3 <= len(name):
+            try:
+                out.append(int(name[i + 1:i + 3], 16))
+                i += 3
+                continue
+            except ValueError:
+                pass
+        out.extend(name[i].encode("utf-8"))
+        i += 1
+    return out.decode("utf-8", errors="replace")
+
+
+def bucket_of(key: str) -> str:
+    """The 2-hex-digit fanout directory for ``key`` (stable hash)."""
+    return f"{zlib.crc32(key.encode('utf-8')) & 0xFF:02x}"
+
+
+class ShardManager:
+    """Per-key segment logs under ``root/<bucket>/<safe key>/[sub]``."""
+
+    def __init__(self, root: str, *, subdir: str = "",
+                 max_open: int = 64, max_records: int = 1024,
+                 max_bytes: int = 4 << 20):
+        self.root = root
+        self.subdir = subdir
+        self.max_open = max(1, max_open)
+        self.max_records = max_records
+        self.max_bytes = max_bytes
+        os.makedirs(root, exist_ok=True)
+        self._open: "collections.OrderedDict[str, SegmentLog]" = \
+            collections.OrderedDict()
+        self._lock = threading.Lock()
+        self.opened_total = 0
+        self.evicted_total = 0
+
+    # ------------------------------------------------------------- mapping
+    def dir_for(self, key: str) -> str:
+        safe = safe_key(key)
+        path = os.path.join(self.root, bucket_of(key), safe)
+        return os.path.join(path, self.subdir) if self.subdir else path
+
+    def log_for(self, key: str) -> SegmentLog:
+        """The shard's segment log, opening (and LRU-evicting) as
+        needed; an evicted log is flushed and closed, never deleted."""
+        with self._lock:
+            log = self._open.get(key)
+            if log is not None:
+                self._open.move_to_end(key)
+                return log
+            log = SegmentLog(self.dir_for(key),
+                             max_records=self.max_records,
+                             max_bytes=self.max_bytes)
+            self._open[key] = log
+            self.opened_total += 1
+            while len(self._open) > self.max_open:
+                _, cold = self._open.popitem(last=False)
+                cold.close()
+                self.evicted_total += 1
+            return log
+
+    def has_shard(self, key: str) -> bool:
+        return os.path.isdir(self.dir_for(key))
+
+    def keys(self) -> List[str]:
+        """Every shard key present on disk (decoded), sorted."""
+        out = []
+        try:
+            buckets = os.listdir(self.root)
+        except FileNotFoundError:
+            return []
+        for bucket in buckets:
+            bdir = os.path.join(self.root, bucket)
+            if not os.path.isdir(bdir):
+                continue
+            for name in os.listdir(bdir):
+                if os.path.isdir(os.path.join(bdir, name)):
+                    out.append(unsafe_key(name))
+        return sorted(out)
+
+    def iter_logs(self) -> Iterator[tuple]:
+        """Yield ``(key, SegmentLog)`` for every shard on disk (cold ones
+        are opened through the LRU and may evict others)."""
+        for key in self.keys():
+            yield key, self.log_for(key)
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self) -> None:
+        with self._lock:
+            for log in self._open.values():
+                log.close()
+            self._open.clear()
+
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            n_open = len(self._open)
+        return {"shards": len(self.keys()), "open": n_open,
+                "opened": self.opened_total, "evicted": self.evicted_total}

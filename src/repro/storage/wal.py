@@ -1,0 +1,224 @@
+"""Write-ahead segment log: a directory of append-only segments.
+
+One :class:`SegmentLog` owns one directory.  Appends go to the *tail*
+segment (``seg-<seq>.log``); when the tail reaches the record or byte
+limit it is *sealed* — closed, sidecar-indexed — and a new tail opens at
+the next sequence number.  Sealed segments are immutable: compaction
+reads them, retention deletes them, nothing ever rewrites them.
+
+Reopening a log after a crash resumes the old tail: the
+:class:`~repro.storage.segment.SegmentWriter` truncates a torn final
+record back to the last valid frame boundary, so recovery loses at most
+the record that was mid-write when the process died.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import threading
+from typing import Iterator, List, Optional, Tuple
+
+from repro.storage.segment import (SegmentIndex, SegmentWriter, index_path,
+                                   read_index, scan_segment)
+
+_SEG_RE = re.compile(r"^seg-(\d{8})\.log$")
+
+
+def segment_name(seq: int) -> str:
+    return f"seg-{seq:08d}.log"
+
+
+@dataclasses.dataclass
+class SegmentInfo:
+    """One segment as the log lists it (sealed ones carry their index)."""
+    seq: int
+    path: str
+    sealed: bool
+    count: int
+    bytes: int
+    t_min: Optional[float]
+    t_max: Optional[float]
+
+
+class SegmentLog:
+    """Appendable directory of segments; thread-safe for one writer plus
+    concurrent listers/readers (sealed segments are immutable)."""
+
+    def __init__(self, root: str, *, max_records: int = 1024,
+                 max_bytes: int = 4 << 20):
+        self.root = root
+        self.max_records = max(1, int(max_records))
+        self.max_bytes = int(max_bytes)
+        os.makedirs(root, exist_ok=True)
+        self._lock = threading.Lock()
+        self._writer: Optional[SegmentWriter] = None
+        self.sealed_total = 0
+        self.appended_total = 0
+        self.pruned_total = 0
+        self.torn_dropped = 0
+        seqs = self._list_seqs()
+        # the tail is the newest unsealed segment; older unsealed ones
+        # (a crash can leave at most the tail unsealed, but be tolerant)
+        # are sealed in place so compaction can consume them
+        self._tail_seq = seqs[-1] if seqs else 0
+        for seq in seqs[:-1]:
+            path = os.path.join(root, segment_name(seq))
+            if read_index(path) is None:
+                w = SegmentWriter(path)
+                self.torn_dropped += w.torn_dropped
+                w.seal()
+                self.sealed_total += 1
+
+    # ------------------------------------------------------------- listing
+    def _list_seqs(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.root):
+            m = _SEG_RE.match(name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def segments(self) -> List[SegmentInfo]:
+        """Every segment oldest-first; the unsealed tail (if any) last."""
+        with self._lock:
+            tail = self._writer
+            infos: List[SegmentInfo] = []
+            for seq in self._list_seqs():
+                path = os.path.join(self.root, segment_name(seq))
+                idx = read_index(path)
+                if idx is not None:
+                    infos.append(SegmentInfo(seq, path, True, idx.count,
+                                             idx.bytes, idx.t_min, idx.t_max))
+                elif tail is not None and tail.path == path:
+                    infos.append(SegmentInfo(seq, path, False, tail.count,
+                                             tail.bytes, tail.t_min,
+                                             tail.t_max))
+                else:
+                    scan = scan_segment(path)
+                    ts = [t for t, _ in scan.records]
+                    infos.append(SegmentInfo(
+                        seq, path, False, len(scan.records),
+                        scan.valid_bytes, min(ts) if ts else None,
+                        max(ts) if ts else None))
+            return infos
+
+    def sealed_segments(self) -> List[SegmentInfo]:
+        return [s for s in self.segments() if s.sealed]
+
+    # ------------------------------------------------------------- writing
+    def _open_tail(self) -> SegmentWriter:
+        path = os.path.join(self.root, segment_name(self._tail_seq))
+        w = SegmentWriter(path)
+        self.torn_dropped += w.torn_dropped
+        return w
+
+    def append(self, t: float, payload: bytes) -> None:
+        """Append one record, sealing and rolling the tail when it is
+        full."""
+        with self._lock:
+            if self._writer is None:
+                self._writer = self._open_tail()
+            w = self._writer
+            if w.count >= self.max_records or \
+                    (w.count > 0 and w.bytes >= self.max_bytes):
+                w.seal()
+                self.sealed_total += 1
+                self._tail_seq += 1
+                w = self._writer = self._open_tail()
+            w.append(t, payload)
+            self.appended_total += 1
+
+    def seal_tail(self) -> None:
+        """Seal the current tail (if it holds any records); mainly for
+        tests and deterministic compaction drills."""
+        with self._lock:
+            if self._writer is None:
+                self._writer = self._open_tail()
+            if self._writer.count == 0:
+                return
+            self._writer.seal()
+            self.sealed_total += 1
+            self._tail_seq += 1
+            self._writer = None
+
+    def close(self) -> None:
+        """Flush and close the tail writer (the tail stays unsealed — the
+        next open resumes it)."""
+        with self._lock:
+            if self._writer is not None:
+                self._writer.close()
+                self._writer = None
+
+    # ------------------------------------------------------------- reading
+    def replay(self, *, min_seq: int = 0,
+               with_seq: bool = False) -> Iterator:
+        """Yield records in append order across segments with
+        ``seq >= min_seq``: ``(t, payload)`` tuples, or
+        ``(seq, t, payload)`` when ``with_seq``."""
+        for info in self.segments():
+            if info.seq < min_seq:
+                continue
+            for t, payload in scan_segment(info.path).records:
+                yield (info.seq, t, payload) if with_seq else (t, payload)
+
+    # ----------------------------------------------------------- retention
+    def prune(self, seqs) -> int:
+        """Delete the given sealed segments (and their sidecars); the
+        unsealed tail is never deleted.  Returns how many were removed."""
+        removed = 0
+        with self._lock:
+            tail_path = self._writer.path if self._writer else \
+                os.path.join(self.root, segment_name(self._tail_seq))
+            for seq in sorted(seqs):
+                path = os.path.join(self.root, segment_name(seq))
+                if path == tail_path or not os.path.exists(path):
+                    continue
+                os.unlink(path)
+                try:
+                    os.unlink(index_path(path))
+                except FileNotFoundError:
+                    pass
+                removed += 1
+            self.pruned_total += removed
+        return removed
+
+    def prune_before(self, t: float, *, keep_records: int = 0,
+                     max_seq: Optional[int] = None) -> int:
+        """Delete sealed segments whose newest record is older than
+        ``t``, keeping enough trailing segments that at least
+        ``keep_records`` records survive (the raw-ring refill guarantee).
+        With ``max_seq``, only segments at or below that sequence number
+        are candidates (the compaction cursor: never drop raw data the
+        checkpoint has not folded yet)."""
+        infos = self.segments()
+        keep_from = len(infos)
+        remaining = 0
+        while keep_from > 0 and remaining < keep_records:
+            keep_from -= 1
+            remaining += infos[keep_from].count
+        victims = [s.seq for s in infos[:keep_from]
+                   if s.sealed and s.t_max is not None and s.t_max < t
+                   and (max_seq is None or s.seq <= max_seq)]
+        return self.prune(victims) if victims else 0
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """Occupancy + lifetime counters (the ``/stats`` storage rows)."""
+        infos = self.segments()
+        return {
+            "segments": len(infos),
+            "sealed": sum(1 for s in infos if s.sealed),
+            "records": sum(s.count for s in infos),
+            "bytes": sum(s.bytes for s in infos),
+            "appended": self.appended_total,
+            "pruned_segments": self.pruned_total,
+            "torn_dropped": self.torn_dropped,
+        }
+
+    def record_range(self) -> Tuple[Optional[float], Optional[float]]:
+        """(oldest, newest) record timestamp across the whole log."""
+        infos = [s for s in self.segments() if s.t_min is not None]
+        if not infos:
+            return None, None
+        return (min(s.t_min for s in infos), max(s.t_max for s in infos))
