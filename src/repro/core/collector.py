@@ -127,7 +127,7 @@ class JaxJobRegistry:
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._entries: Dict[str, DeviceUtilization] = {}
+        self._entries: Dict[str, DeviceUtilization] = {}  # guarded-by: _lock
 
     @classmethod
     def global_registry(cls) -> "JaxJobRegistry":

@@ -98,6 +98,7 @@ class LLloadDaemon:
         # history stores gain a write-ahead backend and recover their
         # pre-restart state before the sampler delivers anything
         self.storage = storage
+        # llcheck: ignore[LL001] written only during __init__ recovery, read-only once serving starts
         self.recovered: Dict[str, Dict[str, int]] = {}
         if store is not None:
             self.store = store
@@ -121,19 +122,20 @@ class LLloadDaemon:
         self.ttl_s = ttl_s
         self._started = time.monotonic()
         self._lock = threading.Lock()
-        self._requests: Dict[str, int] = {}
-        self._cache_hits = 0
-        self._errors = 0
+        self._requests: Dict[str, int] = {}          # guarded-by: _lock
+        self._cache_hits = 0                         # guarded-by: _lock
+        self._errors = 0                             # guarded-by: _lock
         # endpoint byte-cache: key -> (expires_monotonic, status, ct, body)
-        self._cache: Dict[str, Tuple[float, int, str, bytes]] = {}
-        self._build_locks: Dict[str, threading.Lock] = {}
+        self._cache: Dict[str, Tuple[float, int, str, bytes]] = {}  # guarded-by: _lock
+        self._build_locks: Dict[str, threading.Lock] = {}  # guarded-by: _lock
         # campaign results survive TTL expiry: a campaign is seeded and
         # deterministic, so re-running one on every cache window would be
         # pure waste — keyed by (spec JSON, cells), small FIFO, with a
         # per-key run lock (the byte-cache's single-flight keys on the
         # full query string, so format=table and format=csv of the same
         # campaign would otherwise run the sweep twice)
-        self._experiment_memo: Dict[Tuple[str, str], object] = {}
+        self._experiment_memo: Dict[Tuple[str, str], object] = {}  # guarded-by: _lock
+        # guarded-by: _lock
         self._experiment_locks: Dict[Tuple[str, str], threading.Lock] = {}
 
     # ----------------------------------------------------------- lifecycle
@@ -167,6 +169,7 @@ class LLloadDaemon:
         """HTTP + bus counters in Prometheus sample-name form (the
         ``/stats`` payload and ``/metrics`` counter section)."""
         with self._lock:
+            # llcheck: ignore[LL003] endpoint labels are bounded: handle() folds unknown paths into "other" via _KNOWN_ENDPOINTS
             out = {f'requests_total{{endpoint="{ep}"}}': float(n)
                    for ep, n in self._requests.items()}
             out["http_cache_hits_total"] = float(self._cache_hits)

@@ -222,14 +222,17 @@ class HistoryStore:
                  tiers: Iterable[TierSpec] = DEFAULT_TIERS,
                  low_threshold: Optional[float] = None,
                  backend=None):
+        # guarded-by: _lock
         self._raw: Deque[ClusterSnapshot] = collections.deque(
             maxlen=raw_capacity)
+        # llcheck: ignore[LL001] fixed after construction; the mutable per-tier state inside is only touched under _lock
         self._tiers = [_Tier(spec) for spec in tiers]
         self._low = low_threshold
-        self._appended = 0
-        self._out_of_order = 0
-        self._duplicates = 0
-        self._last_t: Optional[float] = None    # last ring-appended t
+        self._appended = 0                      # guarded-by: _lock
+        self._out_of_order = 0                  # guarded-by: _lock
+        self._duplicates = 0                    # guarded-by: _lock
+        # last ring-appended t
+        self._last_t: Optional[float] = None    # guarded-by: _lock
         self._lock = threading.Lock()
         # optional durable backend (repro.storage.HistoryBackend shape):
         # every accepted append is write-ahead logged, recover() rebuilds
@@ -251,7 +254,7 @@ class HistoryStore:
             self._absorb(snap, summary, persist=True)
 
     def _absorb(self, snap: ClusterSnapshot, summary: _Summary,
-                persist: bool):
+                persist: bool):                  # guarded-by: _lock
         """The fold under the lock; recovery replays through this with
         ``persist=False`` so replayed records are not re-logged."""
         if self._last_t is not None and snap.timestamp == self._last_t:
@@ -530,12 +533,13 @@ class JobHistoryStore:
         self.bucket_s = bucket_s
         self.buckets_per_job = buckets_per_job
         self.max_jobs = max_jobs
+        # guarded-by: _lock
         self._jobs: "collections.OrderedDict[int, _JobSeries]" = \
             collections.OrderedDict()
-        self._appended = 0
-        self._dropped = 0
-        self._evicted = 0
-        self._reloaded = 0
+        self._appended = 0                      # guarded-by: _lock
+        self._dropped = 0                       # guarded-by: _lock
+        self._evicted = 0                       # guarded-by: _lock
+        self._reloaded = 0                      # guarded-by: _lock
         self._lock = threading.Lock()
         # optional durable backend (repro.storage.JobHistoryBackend
         # shape): accepted samples are write-ahead logged per job shard,
@@ -563,12 +567,12 @@ class JobHistoryStore:
                 self._jobs.move_to_end(s.job_id)
             self._evict()
 
-    def _evict(self):
+    def _evict(self):                            # guarded-by: _lock
         while len(self._jobs) > self.max_jobs:
             self._jobs.popitem(last=False)
             self._evicted += 1
 
-    def _revive(self, job_id: int) -> _JobSeries:
+    def _revive(self, job_id: int) -> _JobSeries:  # guarded-by: _lock
         """A series for a job not in memory: reloaded from the backend
         shard when one exists (evicted or pre-restart jobs come back with
         their history), fresh otherwise.  Call under the lock."""
@@ -585,7 +589,7 @@ class JobHistoryStore:
         self._jobs[job_id] = series
         return series
 
-    def _series(self, job_id: int) -> Optional[_JobSeries]:
+    def _series(self, job_id: int) -> Optional[_JobSeries]:  # guarded-by: _lock
         """Read-path lookup: memory first, then a cold reload from the
         backend shard (which counts toward the LRS population and may
         evict).  Call under the lock."""

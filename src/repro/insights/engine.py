@@ -56,7 +56,8 @@ class InsightEngine:
                                   else default_rules())
         self.min_streak = max(int(min_streak), 1)
         self.clear_after = max(int(clear_after), 1)
-        self.observations = 0
+        self.observations = 0                       # guarded-by: _lock
+        # guarded-by: _lock
         self._states: Dict[Tuple[str, str], _State] = {}
         self._lock = threading.Lock()
 

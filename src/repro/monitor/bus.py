@@ -67,9 +67,10 @@ class TelemetryBus:
         self.ttl_s = ttl_s
         self.history = history
         self.ewma_alpha = ewma_alpha
-        self._entries: Dict[str, _Entry] = {}
-        self._subscribers: List[Subscriber] = []
+        self._entries: Dict[str, _Entry] = {}        # guarded-by: _lock
+        self._subscribers: List[Subscriber] = []     # guarded-by: _lock
         self._lock = threading.RLock()
+        # llcheck: ignore[LL001] lifecycle field: start()/stop() are only called from the owning thread
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
 

@@ -260,6 +260,7 @@ class MultiClusterSource:
                  timeout_s: Optional[float] = 30.0):
         if not sources:
             raise ValueError("MultiClusterSource needs >= 1 child source")
+        # llcheck: ignore[LL001] fixed after construction; children manage their own state
         self.sources = list(sources)
         self.name = name or "+".join(s.name for s in self.sources)
         self.timeout_s = timeout_s
@@ -267,14 +268,15 @@ class MultiClusterSource:
                  if s.interval_hint is not None]
         self.interval_hint = min(hints) if hints else None
         self._lock = threading.Lock()
-        self._last_good: Dict[str, ClusterSnapshot] = {}
-        self._last_good_at: Dict[str, float] = {}
-        self._errors: Dict[str, BaseException] = {}
+        self._last_good: Dict[str, ClusterSnapshot] = {}  # guarded-by: _lock
+        self._last_good_at: Dict[str, float] = {}    # guarded-by: _lock
+        self._errors: Dict[str, BaseException] = {}  # guarded-by: _lock
         # one persistent worker per child; a hung child's future stays
         # in-flight and is reused instead of stacking new threads per poll
         self._pool = concurrent.futures.ThreadPoolExecutor(
             max_workers=len(self.sources),
             thread_name_prefix=f"fanout-{self.name}")
+        # guarded-by: _lock
         self._inflight: Dict[str, concurrent.futures.Future] = {}
 
     # ------------------------------------------------------------- health
@@ -305,13 +307,18 @@ class MultiClusterSource:
 
     def snapshot(self) -> ClusterSnapshot:
         futs = {}
-        for src in self.sources:
-            prev = self._inflight.get(src.name)
-            if prev is not None and not prev.done():
-                futs[src.name] = prev      # child still hung: don't stack
-            else:
-                futs[src.name] = self._pool.submit(self._collect_child, src)
-            self._inflight[src.name] = futs[src.name]
+        # under the lock: concurrent snapshot() callers racing on the
+        # in-flight table would submit duplicate collections for a hung
+        # child — exactly the thread-stacking the table exists to prevent
+        with self._lock:
+            for src in self.sources:
+                prev = self._inflight.get(src.name)
+                if prev is not None and not prev.done():
+                    futs[src.name] = prev  # child still hung: don't stack
+                else:
+                    futs[src.name] = self._pool.submit(
+                        self._collect_child, src)
+                self._inflight[src.name] = futs[src.name]
         # one overall deadline for the whole fan-out, not N sequential waits
         concurrent.futures.wait(futs.values(), timeout=self.timeout_s)
         snaps = []
@@ -329,9 +336,11 @@ class MultiClusterSource:
         good = [(src, snap) for src, snap in zip(self.sources, snaps)
                 if snap is not None]
         if not good:
+            with self._lock:
+                errors = {n: str(e) for n, e in self._errors.items()}
             raise RuntimeError(
                 f"all {len(self.sources)} child sources failed: "
-                f"{ {n: str(e) for n, e in self._errors.items()} }")
+                f"{errors}")
         return merge_snapshots([s for _, s in good], name=self.name)
 
 

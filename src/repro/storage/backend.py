@@ -124,31 +124,33 @@ class HistoryBackend:
         self.users = ShardManager(os.path.join(root, "users"),
                                   max_records=segment_records,
                                   max_bytes=segment_bytes)
-        self._tier_specs: Tuple[TierSpec, ...] = tuple(DEFAULT_TIERS)
-        self._low: Optional[float] = None
-        self._tier_logs: Dict[str, SegmentLog] = {}
+        self._tier_specs: Tuple[TierSpec, ...] = \
+            tuple(DEFAULT_TIERS)                 # guarded-by: _lock
+        self._low: Optional[float] = None        # guarded-by: _lock
+        self._tier_logs: Dict[str, SegmentLog] = {}  # guarded-by: _lock
         self._lock = threading.Lock()
         # shadow fold state (lazy; only the compactor needs it)
-        self._shadow: Optional[Dict[str, _Tier]] = None
-        self._shadow_last_t: Optional[float] = None
-        self._shadow_appended = 0
-        self._shadow_ooo = 0
-        self._through_seq = -1
-        self._last_logged: Dict[str, float] = {}
-        self.compactions = 0
-        self.compacted_records = 0
+        self._shadow: Optional[Dict[str, _Tier]] = None  # guarded-by: _lock
+        self._shadow_last_t: Optional[float] = None  # guarded-by: _lock
+        self._shadow_appended = 0                # guarded-by: _lock
+        self._shadow_ooo = 0                     # guarded-by: _lock
+        self._through_seq = -1                   # guarded-by: _lock
+        self._last_logged: Dict[str, float] = {}  # guarded-by: _lock
+        self.compactions = 0                     # guarded-by: _lock
+        self.compacted_records = 0               # guarded-by: _lock
 
     # ---------------------------------------------------------- attachment
     def configure(self, *, tiers, low_threshold: Optional[float],
                   raw_capacity: int) -> None:
         """Adopt the attached store's tier specs / thresholds, so the
         shadow fold and recovery reproduce its state exactly."""
-        self._tier_specs = tuple(tiers)
-        self._low = low_threshold
-        self.retain_raw_records = raw_capacity   # the ring-refill floor
-        self._shadow = None                  # respecified: rebuild lazily
+        with self._lock:
+            self._tier_specs = tuple(tiers)
+            self._low = low_threshold
+            self.retain_raw_records = raw_capacity  # the ring-refill floor
+            self._shadow = None              # respecified: rebuild lazily
 
-    def _tier_log(self, name: str) -> SegmentLog:
+    def _tier_log(self, name: str) -> SegmentLog:  # guarded-by: _lock
         log = self._tier_logs.get(name)
         if log is None:
             log = self._tier_logs[name] = SegmentLog(
@@ -168,7 +170,7 @@ class HistoryBackend:
     def _checkpoint_path(self) -> str:
         return os.path.join(self.root, CHECKPOINT_NAME)
 
-    def _write_checkpoint(self) -> None:
+    def _write_checkpoint(self) -> None:         # guarded-by: _lock
         tiers = {}
         for spec in self._tier_specs:
             tier = self._shadow[spec.name]
@@ -190,7 +192,7 @@ class HistoryBackend:
         return _read_json(self._checkpoint_path())
 
     # ---------------------------------------------------------- compaction
-    def _ensure_shadow(self) -> None:
+    def _ensure_shadow(self) -> None:            # guarded-by: _lock
         if self._shadow is not None:
             return
         ckpt = self._read_checkpoint()
@@ -213,7 +215,7 @@ class HistoryBackend:
             self._shadow_appended = ckpt["appended"]
             self._shadow_ooo = ckpt["out_of_order"]
 
-    def _log_point(self, name: str, point) -> None:
+    def _log_point(self, name: str, point) -> None:  # guarded-by: _lock
         if point.bucket_start <= self._last_logged[name]:
             return                           # crash-window re-append
         self._tier_log(name).append(
@@ -227,7 +229,7 @@ class HistoryBackend:
                 self.users.log_for(user).append(
                     point.bucket_start, codec.dumps(list(flags)))
 
-    def _shadow_fold(self, snap) -> None:
+    def _shadow_fold(self, snap) -> None:        # guarded-by: _lock
         summary = summarize(snap, self._low)
         if self._shadow_last_t is not None and \
                 snap.timestamp == self._shadow_last_t:
@@ -265,7 +267,7 @@ class HistoryBackend:
             self._apply_retention()
             return done
 
-    def _apply_retention(self) -> None:
+    def _apply_retention(self) -> None:          # guarded-by: _lock
         newest = self.raw_log.record_range()[1]
         if newest is None:
             return
@@ -287,7 +289,11 @@ class HistoryBackend:
         ckpt = self._read_checkpoint()
         through = ckpt["through_seq"] if ckpt is not None else -1
         n_points = 0
-        with store._lock:
+        # both locks: _tier_log mutates this backend's log table while the
+        # store's tiers/ring/counters are rebuilt.  Ordering is safe: the
+        # compactor takes self._lock alone, appenders take store._lock
+        # alone — nothing acquires them in the opposite order.
+        with self._lock, store._lock:
             for tier in store._tiers:
                 spec = tier.spec
                 st = (ckpt["tiers"].get(spec.name)
@@ -354,14 +360,18 @@ class HistoryBackend:
 
     # --------------------------------------------------------------- stats
     def stats(self) -> Dict[str, object]:
-        tiers = {name: log.stats() for name, log in self._tier_logs.items()}
+        with self._lock:
+            tier_logs = dict(self._tier_logs)
+            compactions = self.compactions
+            compacted = self.compacted_records
+            through = self._through_seq
         return {
             "raw": self.raw_log.stats(),
-            "tiers": tiers,
+            "tiers": {name: log.stats() for name, log in tier_logs.items()},
             "users": self.users.stats(),
-            "compactions": self.compactions,
-            "compacted_records": self.compacted_records,
-            "through_seq": self._through_seq,
+            "compactions": compactions,
+            "compacted_records": compacted,
+            "through_seq": through,
         }
 
     def flush(self) -> None:
@@ -369,7 +379,9 @@ class HistoryBackend:
 
     def close(self) -> None:
         self.raw_log.close()
-        for log in self._tier_logs.values():
+        with self._lock:
+            tier_logs = list(self._tier_logs.values())
+        for log in tier_logs:
             log.close()
         self.users.close()
 
@@ -407,11 +419,12 @@ class JobHistoryBackend:
         self.bucket_s = 900.0
         self.raw_per_job = 64
         self.buckets_per_job = 4 * 24 * 7
-        self._dirty: set = set()
-        self._scan_pending = True            # first run compacts all shards
+        self._dirty: set = set()                 # guarded-by: _lock
+        # first run compacts all shards
+        self._scan_pending = True                # guarded-by: _lock
         self._lock = threading.Lock()
-        self.compactions = 0
-        self.compacted_records = 0
+        self.compactions = 0                     # guarded-by: _lock
+        self.compacted_records = 0               # guarded-by: _lock
 
     def configure(self, *, bucket_s: float, raw_per_job: int,
                   buckets_per_job: int) -> None:
@@ -542,6 +555,7 @@ class JobHistoryBackend:
         pts_log = self.points.log_for(key)
         logged = _tail_record_t(pts_log)
         last_logged = logged if logged is not None else -math.inf
+        n_records = 0
         for info in sealed:
             for _, payload in scan_segment(info.path).records:
                 sample = codec.job_sample_from_dict(codec.loads(payload))
@@ -553,10 +567,12 @@ class JobHistoryBackend:
                             old.bucket_start,
                             codec.dumps(codec.job_point_to_dict(old)))
                         last_logged = old.bucket_start
-                self.compacted_records += 1
+                n_records += 1
             through = info.seq
         self._write_checkpoint(key, through, shadow)
-        self.compactions += 1
+        with self._lock:
+            self.compacted_records += n_records
+            self.compactions += 1
         newest = shadow.last.t if shadow.last is not None else None
         if newest is not None:
             log.prune_before(newest - self.retain_raw_s,
@@ -568,11 +584,14 @@ class JobHistoryBackend:
     # --------------------------------------------------------------- stats
     def stats(self) -> Dict[str, object]:
         shard_stats = self.raw.stats()
+        with self._lock:
+            compactions = self.compactions
+            compacted = self.compacted_records
         return {
             "shards": shard_stats,
             "points_shards": self.points.stats(),
-            "compactions": self.compactions,
-            "compacted_records": self.compacted_records,
+            "compactions": compactions,
+            "compacted_records": compacted,
         }
 
     def close(self) -> None:

@@ -66,11 +66,12 @@ class ShardManager:
         self.max_records = max_records
         self.max_bytes = max_bytes
         os.makedirs(root, exist_ok=True)
+        # guarded-by: _lock
         self._open: "collections.OrderedDict[str, SegmentLog]" = \
             collections.OrderedDict()
         self._lock = threading.Lock()
-        self.opened_total = 0
-        self.evicted_total = 0
+        self.opened_total = 0                    # guarded-by: _lock
+        self.evicted_total = 0                   # guarded-by: _lock
 
     # ------------------------------------------------------------- mapping
     def dir_for(self, key: str) -> str:
@@ -132,5 +133,7 @@ class ShardManager:
     def stats(self) -> Dict[str, float]:
         with self._lock:
             n_open = len(self._open)
+            opened = self.opened_total
+            evicted = self.evicted_total
         return {"shards": len(self.keys()), "open": n_open,
-                "opened": self.opened_total, "evicted": self.evicted_total}
+                "opened": opened, "evicted": evicted}

@@ -52,16 +52,16 @@ class SegmentLog:
         self.max_bytes = int(max_bytes)
         os.makedirs(root, exist_ok=True)
         self._lock = threading.Lock()
-        self._writer: Optional[SegmentWriter] = None
-        self.sealed_total = 0
-        self.appended_total = 0
-        self.pruned_total = 0
-        self.torn_dropped = 0
+        self._writer: Optional[SegmentWriter] = None  # guarded-by: _lock
+        self.sealed_total = 0                    # guarded-by: _lock
+        self.appended_total = 0                  # guarded-by: _lock
+        self.pruned_total = 0                    # guarded-by: _lock
+        self.torn_dropped = 0                    # guarded-by: _lock
         seqs = self._list_seqs()
         # the tail is the newest unsealed segment; older unsealed ones
         # (a crash can leave at most the tail unsealed, but be tolerant)
         # are sealed in place so compaction can consume them
-        self._tail_seq = seqs[-1] if seqs else 0
+        self._tail_seq = seqs[-1] if seqs else 0  # guarded-by: _lock
         for seq in seqs[:-1]:
             path = os.path.join(root, segment_name(seq))
             if read_index(path) is None:
@@ -107,7 +107,7 @@ class SegmentLog:
         return [s for s in self.segments() if s.sealed]
 
     # ------------------------------------------------------------- writing
-    def _open_tail(self) -> SegmentWriter:
+    def _open_tail(self) -> SegmentWriter:       # guarded-by: _lock
         path = os.path.join(self.root, segment_name(self._tail_seq))
         w = SegmentWriter(path)
         self.torn_dropped += w.torn_dropped
@@ -206,14 +206,18 @@ class SegmentLog:
     def stats(self) -> dict:
         """Occupancy + lifetime counters (the ``/stats`` storage rows)."""
         infos = self.segments()
+        with self._lock:
+            appended = self.appended_total
+            pruned = self.pruned_total
+            torn = self.torn_dropped
         return {
             "segments": len(infos),
             "sealed": sum(1 for s in infos if s.sealed),
             "records": sum(s.count for s in infos),
             "bytes": sum(s.bytes for s in infos),
-            "appended": self.appended_total,
-            "pruned_segments": self.pruned_total,
-            "torn_dropped": self.torn_dropped,
+            "appended": appended,
+            "pruned_segments": pruned,
+            "torn_dropped": torn,
         }
 
     def record_range(self) -> Tuple[Optional[float], Optional[float]]:

@@ -1,0 +1,24 @@
+"""Known-bad lock discipline: unclassified state and unlocked access."""
+import threading
+
+
+class Bad:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = []              # guarded-by: _lock
+        self.pending = {}
+
+    def add(self, x):
+        self._items.append(x)
+
+    def drain(self):
+        with self._lock:
+            out = list(self._items)
+        self._items.clear()
+        return out
+
+    def nested_resets(self):
+        with self._lock:
+            def inner():
+                return len(self._items)
+            return inner()

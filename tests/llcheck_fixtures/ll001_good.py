@@ -1,0 +1,24 @@
+"""Known-good lock discipline: every guarded access is under the lock."""
+import threading
+
+
+class Good:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = []              # guarded-by: _lock
+        self.count = 0                # guarded-by: _lock
+        # llcheck: ignore[LL001] fixed after construction, read-only later
+        self.config = {}
+
+    def add(self, x):
+        with self._lock:
+            self._items.append(x)
+            self.count += 1
+
+    # guarded-by: _lock
+    def _locked_len(self):
+        return len(self._items)
+
+    def snapshot(self):
+        with self._lock:
+            return list(self._items)

@@ -1,0 +1,24 @@
+"""Known-bad metric emission: unresolvable names, off-vocabulary keys,
+f-string values, non-literal label lists, raw label injection."""
+
+
+class _Writer:
+    def __init__(self):
+        self.lines = []
+
+    def header(self, name, help_text, kind):
+        self.lines.append(name)
+
+    def sample(self, name, labels, value):
+        self.lines.append(name)
+
+
+def render(snapshot, metric_name):
+    w = _Writer()
+    w.header(metric_name, "dynamic name", "gauge")
+    w.sample("nodes_total", [("cluster", "main")], 1.0)
+    w.sample("llload_hosts", [("hostname", "h1")], 1.0)
+    w.sample("llload_users", [("user", f"{snapshot.user}")], 1.0)
+    w.sample("llload_flat", snapshot.pairs, 1.0)
+    line = f'cluster="{snapshot.name}"'
+    return w.lines + [line]

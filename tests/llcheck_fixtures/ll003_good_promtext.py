@@ -1,0 +1,26 @@
+"""Known-good metric emission: names resolve statically, keys in vocab."""
+
+_GAUGES = [
+    ("hosts", "number of hosts"),
+    ("users", "number of users"),
+]
+
+
+class _Writer:
+    def __init__(self):
+        self.lines = []
+
+    def header(self, name, help_text, kind):
+        self.lines.append(name)
+
+    def sample(self, name, labels, value):
+        self.lines.append(name)
+
+
+def render(snapshot, prefix="llload_"):
+    w = _Writer()
+    for name, help_text in _GAUGES:
+        w.header(f"{prefix}{name}", help_text, "gauge")
+        w.sample(f"{prefix}{name}", [("cluster", "main")], 1.0)
+    w.sample(prefix + "up", [("cluster", "main"), ("kind", "gauge")], 1.0)
+    return w.lines

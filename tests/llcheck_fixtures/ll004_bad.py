@@ -1,0 +1,18 @@
+"""Known-bad exit codes: nonzero pipe exit, swallowed env error,
+out-of-convention codes, stray sys.exit in a helper."""
+import sys
+
+
+def main(argv=None):
+    try:
+        work()
+    except BrokenPipeError:
+        return 1
+    except OSError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 0
+    return 64
+
+
+def work():
+    sys.exit(7)

@@ -1,0 +1,21 @@
+"""Known-good exit codes: pipe exits 0, env errors exit 1, helpers may
+return sentinel ints that are not process exit codes."""
+import sys
+
+
+def main(argv=None):
+    try:
+        print("ok")
+    except BrokenPipeError:
+        return 0
+    except OSError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def parse_retries(raw):
+    try:
+        return int(raw)
+    except ValueError:
+        return 124

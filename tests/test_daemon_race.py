@@ -1,0 +1,102 @@
+"""Runtime twin of llcheck's LL001: hammer a live daemon from 32 threads
+while the short TTL keeps snapshots ingesting, then reconcile the
+/stats request counters against a client-side ledger — a lost or torn
+counter update shows up as an exact-count mismatch, a race in the
+cache/build-lock path shows up as a 500.
+"""
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.daemon import LLloadDaemon, decode_snapshot, serve_background
+from repro.monitor import build_source
+
+N_THREADS = 32
+ROUNDS = 6
+
+
+@pytest.fixture()
+def racing_daemon():
+    # TTL shorter than the run: reads keep triggering fresh collections,
+    # so ingestion (store/jobstore/insight folds) races the serving path
+    daemon = LLloadDaemon(build_source("sim"), ttl_s=0.05)
+    server, thread = serve_background(daemon)
+    host, port = server.server_address[:2]
+    yield f"http://{host}:{port}", daemon
+    server.shutdown()
+    server.server_close()
+    daemon.close()
+    thread.join(timeout=5)
+    assert not thread.is_alive()
+
+
+def test_concurrent_mixed_endpoints_exact_counters(racing_daemon):
+    url, daemon = racing_daemon
+
+    ledger_lock = threading.Lock()
+    sent = {"/snapshot": 0, "/query": 0, "/job": 0, "/stats": 0}
+    statuses = []
+
+    def get(path, endpoint):
+        with ledger_lock:
+            sent[endpoint] += 1
+        try:
+            with urllib.request.urlopen(url + path, timeout=30) as rsp:
+                body, status = rsp.read(), rsp.status
+        except urllib.error.HTTPError as exc:
+            body, status = exc.read(), exc.code
+        with ledger_lock:
+            statuses.append((path, status))
+        return status, body
+
+    # job ids that exist in the snapshot *and* the job history tier
+    # (the store folds each collection, so after one read they're there)
+    _, body = get("/snapshot", "/snapshot")
+    snap = decode_snapshot(json.loads(body))
+    job_ids = [j.job_id for j in snap.jobs[:4]]
+    assert job_ids, "sim source must expose jobs"
+
+    barrier = threading.Barrier(N_THREADS)
+    errors = []
+
+    def worker(i):
+        barrier.wait()
+        try:
+            for r in range(ROUNDS):
+                get("/snapshot", "/snapshot")
+                get("/query?table=nodes&limit=5", "/query")
+                get(f"/job/{job_ids[(i + r) % len(job_ids)]}", "/job")
+                get("/stats", "/stats")
+        except Exception as exc:  # noqa: BLE001 — surfaced below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errors == []
+
+    # no handler may 500 under concurrency (the handle() contract);
+    # /job of a just-rotated id may legitimately 404 — nothing else may
+    fine = {s for p, s in statuses if s < 400}
+    assert fine <= {200}
+    client_errors = [(p, s) for p, s in statuses if s >= 400]
+    assert all(p.startswith("/job/") and s == 404
+               for p, s in client_errors), client_errors
+
+    # the final /stats read counts itself: increment-then-serve
+    status, body = get("/stats", "/stats")
+    assert status == 200
+    http = json.loads(body)["http"]
+    for endpoint, n in sent.items():
+        assert http[f'requests_total{{endpoint="{endpoint}"}}'] == float(n)
+    assert http["http_errors_total"] == float(len(client_errors))
+    # every request we sent is accounted for — none lost, none doubled
+    total = sum(v for k, v in http.items()
+                if k.startswith("requests_total"))
+    assert total == float(sum(sent.values()))

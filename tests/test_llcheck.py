@@ -1,0 +1,346 @@
+"""llcheck: the AST invariant checker (DESIGN.md §13).
+
+Each checker is proven twice: it *fires* on a known-bad fixture at the
+exact codes/lines, and it is *silent* on the known-good twin.  A final
+repo-wide run pins the tree clean (zero unbaselined findings) and under
+the 2-second budget that keeps it a pre-commit-grade gate.
+"""
+import json
+import os
+import sys
+import time
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_TOOLS = os.path.join(REPO_ROOT, "tools")
+if _TOOLS not in sys.path:
+    sys.path.insert(0, _TOOLS)
+
+import llcheck                                             # noqa: E402
+from llcheck import cli, core, wire_schema                 # noqa: E402
+
+FIXTURES = os.path.join(REPO_ROOT, "tests", "llcheck_fixtures")
+
+
+def run_on(*names):
+    paths = [os.path.join(FIXTURES, n) for n in names]
+    findings, _ = llcheck.run(paths, FIXTURES)
+    return findings
+
+
+def keys(findings):
+    return [(f.code, f.line) for f in findings]
+
+
+# ------------------------------------------------------------ LL001 corpus
+
+
+def test_ll001_good_is_silent():
+    assert run_on("ll001_good.py") == []
+
+
+def test_ll001_bad_exact_codes_and_lines():
+    findings = run_on("ll001_bad.py")
+    assert keys(findings) == [
+        ("LL001", 9),    # self.pending: mutable container, unclassified
+        ("LL001", 12),   # write path touches _items outside the lock
+        ("LL001", 17),   # .clear() after the with-block ended
+        ("LL001", 23),   # nested def does not inherit the held lock
+    ]
+    assert all(f.path == "ll001_bad.py" for f in findings)
+    assert "not classified" in findings[0].message
+    assert "outside 'with self._lock:'" in findings[1].message
+
+
+# ------------------------------------------------------------ LL003 corpus
+
+
+def test_ll003_good_is_silent():
+    """Names built from the prefix default + a module-level literal table
+    resolve statically; vocabulary keys and plain values pass."""
+    assert run_on("ll003_good_promtext.py") == []
+
+
+def test_ll003_bad_exact_codes_and_lines():
+    findings = run_on("ll003_bad_promtext.py")
+    assert keys(findings) == [
+        ("LL003", 18),   # metric name from an unresolvable parameter
+        ("LL003", 19),   # resolves, but outside the llload_* family
+        ("LL003", 20),   # label key off the fixed vocabulary
+        ("LL003", 21),   # f-string label value (unbounded cardinality)
+        ("LL003", 22),   # labels not a literal (key, value) list
+        ("LL003", 23),   # raw …="{value}" injection skeleton
+    ]
+
+
+def test_ll003_scope_is_basename_matched():
+    """The same bad code outside a promtext.py/server.py basename is out
+    of scope — LL003 polices the emitters, not arbitrary code."""
+    bad = open(os.path.join(FIXTURES, "ll003_bad_promtext.py"),
+               encoding="utf-8").read()
+    mod = core.SourceModule(os.path.join(FIXTURES, "other.py"),
+                            FIXTURES, text=bad)
+    ctx = core.Context(repo_root=FIXTURES, modules=[mod])
+    from llcheck import prom_labels
+    assert list(prom_labels.check(ctx)) == []
+
+
+# ------------------------------------------------------------ LL004 corpus
+
+
+def test_ll004_good_is_silent():
+    """Pipe→0, env→1 pass; a helper's sentinel return (124) is not an
+    exit code and must not be flagged."""
+    assert run_on("ll004_good.py") == []
+
+
+def test_ll004_bad_exact_codes_and_lines():
+    findings = run_on("ll004_bad.py")
+    assert keys(findings) == [
+        ("LL004", 10),   # BrokenPipeError path exits nonzero
+        ("LL004", 13),   # env-error handler swallows the failure (0)
+        ("LL004", 14),   # 64 is outside the 0/1/2 convention
+        ("LL004", 18),   # sys.exit(7) anywhere in the module
+    ]
+
+
+# -------------------------------------------------- annotation grammars
+
+
+def _mod(text, name="frag.py"):
+    return core.SourceModule(os.path.join(FIXTURES, name), FIXTURES,
+                             text=text)
+
+
+def test_guard_grammar_trailing_and_own_line():
+    mod = _mod("x = 1  # guarded-by: _lock\n"
+               "# guarded-by: _mu\n"
+               "y = 2\n")
+    assert mod.guards == {1: "_lock", 3: "_mu"}
+
+
+def test_ignore_requires_reason_to_suppress():
+    mod = _mod("a = 1  # llcheck: ignore[LL001] config, set once\n"
+               "b = 2  # llcheck: ignore[LL001]\n"
+               "c = 3  # llcheck: ignore[]\n")
+    assert mod.ignored(1, "LL001")
+    assert not mod.ignored(1, "LL002")     # only the named codes
+    assert not mod.ignored(2, "LL001")     # reasonless does not suppress
+    lls = core.suppression_findings([mod])
+    assert [(f.code, f.line) for f in lls] == [("LL000", 2), ("LL000", 3)]
+
+
+def test_reasonless_ignore_leaves_underlying_finding():
+    text = open(os.path.join(FIXTURES, "ll001_bad.py"),
+                encoding="utf-8").read()
+    # slap a reasonless ignore on the unlocked access: both the LL000
+    # (bad suppression) and the LL001 (still unsuppressed) must fire
+    text = text.replace("self._items.append(x)",
+                        "self._items.append(x)  # llcheck: ignore[LL001]")
+    mod = _mod(text, name="ll001_bad_variant.py")
+    ctx = core.Context(repo_root=FIXTURES, modules=[mod])
+    from llcheck import lock_discipline
+    codes = {f.code for f in core.suppression_findings([mod])}
+    codes |= {f.code for f in lock_discipline.check(ctx)
+              if f.line == 12}
+    assert codes == {"LL000", "LL001"}
+
+
+# ----------------------------------------------------------------- LL002
+
+
+_PROTOCOL = """\
+WIRE_VERSION = 1
+_NODE_FIELDS = ["hostname", "load"]
+_JOB_FIELDS = ["job_id", "username"]
+"""
+
+_METRICS = """\
+import dataclasses
+
+
+@dataclasses.dataclass
+class JobRecord:
+    job_id: str
+    username: str = ""
+    nodes: int = 1
+    state: str = "R"
+"""
+
+
+def _schema(protocol=_PROTOCOL, metrics=_METRICS):
+    p = core.SourceModule(os.path.join(FIXTURES, "daemon/protocol.py"),
+                          FIXTURES, text=protocol)
+    m = core.SourceModule(os.path.join(FIXTURES, "core/metrics.py"),
+                          FIXTURES, text=metrics)
+    return wire_schema.extract_schema(p, m)
+
+
+def test_ll002_extract_schema():
+    schema = _schema()
+    assert schema["wire_version"] == 1
+    assert schema["node_fields"] == ["hostname", "load"]
+    assert schema["job_fields"] == ["job_id", "username"]
+    assert schema["job_record"]["username"] == {"type": "str",
+                                               "default": "''"}
+
+
+def test_ll002_clean_round_trip():
+    schema = _schema()
+    lock = wire_schema.build_lock(schema)
+    assert wire_schema.diff_schema(schema, lock, "p.py", "lock.json") == []
+
+
+def test_ll002_v1_removal_is_always_an_error():
+    lock = wire_schema.build_lock(_schema())
+    removed = _schema(protocol=_PROTOCOL.replace(', "username"', ""))
+    msgs = [f.message for f in
+            wire_schema.diff_schema(removed, lock, "p.py", "lock.json")]
+    assert any("'username'" in m and "never be dropped" in m for m in msgs)
+
+
+def test_ll002_regenerating_cannot_launder_a_v1_removal():
+    """frozen_v1 is copied verbatim: even a freshly regenerated lock
+    still flags the removal of a field that shipped in v1."""
+    lock = wire_schema.build_lock(_schema())
+    removed = _schema(protocol=_PROTOCOL.replace(', "username"', ""))
+    regenerated = wire_schema.build_lock(removed, previous=lock)
+    assert regenerated["frozen_v1"] == lock["frozen_v1"]
+    msgs = [f.message for f in wire_schema.diff_schema(
+        removed, regenerated, "p.py", "lock.json")]
+    assert any("never be dropped" in m for m in msgs)
+
+
+def test_ll002_addition_requires_lock_regen():
+    lock = wire_schema.build_lock(_schema())
+    grown = _schema(protocol=_PROTOCOL.replace(
+        '"username"]', '"username", "state"]'))
+    msgs = [f.message for f in
+            wire_schema.diff_schema(grown, lock, "p.py", "lock.json")]
+    assert any("'state'" in m and "--update-schema-lock" in m for m in msgs)
+    # ...and regenerating resolves it (additive change, deliberate act)
+    regenerated = wire_schema.build_lock(grown, previous=lock)
+    assert wire_schema.diff_schema(grown, regenerated,
+                                   "p.py", "lock.json") == []
+
+
+def test_ll002_v1_retype_is_always_an_error():
+    lock = wire_schema.build_lock(_schema())
+    retyped = _schema(metrics=_METRICS.replace("nodes: int = 1",
+                                               "nodes: float = 1"))
+    msgs = [f.message for f in
+            wire_schema.diff_schema(retyped, lock, "p.py", "lock.json")]
+    assert any("JobRecord.nodes" in m for m in msgs)
+
+
+def test_ll002_version_downgrade():
+    lock = wire_schema.build_lock(_schema())
+    old = _schema(protocol=_PROTOCOL.replace("WIRE_VERSION = 1",
+                                             "WIRE_VERSION = 0"))
+    msgs = [f.message for f in
+            wire_schema.diff_schema(old, lock, "p.py", "lock.json")]
+    assert any("backwards" in m for m in msgs)
+
+
+def test_ll002_job_fields_must_exist_on_job_record():
+    schema = _schema(protocol=_PROTOCOL.replace(
+        '"username"]', '"username", "ghost"]'))
+    lock = wire_schema.build_lock(schema)
+    msgs = [f.message for f in
+            wire_schema.diff_schema(schema, lock, "p.py", "lock.json")]
+    assert any("ghost" in m and "AttributeError" in m for m in msgs)
+
+
+def test_deleting_a_job_record_wire_field_fails_ci(tmp_path):
+    """The acceptance drill: drop 'gpu_duty' from the real protocol's
+    _JOB_FIELDS and the real checked-in schema lock must flag it."""
+    for rel in ("daemon/protocol.py", "core/metrics.py"):
+        src = os.path.join(REPO_ROOT, "src", "repro", rel)
+        dst = tmp_path / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        text = open(src, encoding="utf-8").read()
+        if rel.endswith("protocol.py"):
+            assert '"gpu_duty", ' in text
+            text = text.replace('"gpu_duty", ', "")
+        dst.write_text(text, encoding="utf-8")
+    findings, _ = llcheck.run([str(tmp_path)], str(tmp_path),
+                              schema_lock_path=cli.DEFAULT_LOCK)
+    ll002 = [f for f in findings if f.code == "LL002"]
+    assert any("gpu_duty" in f.message and "never be dropped" in f.message
+               for f in ll002)
+
+
+def test_checked_in_lock_matches_the_code():
+    """CI's regen check, as a unit test: regenerating the lock from the
+    current tree must be a byte-identical no-op."""
+    assert cli._check_lock_regen(cli.DEFAULT_LOCK)
+
+
+# --------------------------------------------------------------- full tree
+
+
+def test_repo_is_clean_and_fast():
+    """Zero unbaselined findings over src/ + tools/, in under 2 seconds
+    (the pre-commit budget from DESIGN.md §13)."""
+    started = time.monotonic()
+    findings, n_modules = llcheck.run(
+        [os.path.join(REPO_ROOT, "src"), os.path.join(REPO_ROOT, "tools")],
+        REPO_ROOT, schema_lock_path=cli.DEFAULT_LOCK)
+    elapsed = time.monotonic() - started
+    baseline = core.load_baseline(cli.DEFAULT_BASELINE)
+    fresh, _ = core.apply_baseline(findings, baseline)
+    assert fresh == [], "\n" + core.render_findings_table(fresh)
+    assert n_modules > 50          # it really scanned the tree
+    assert elapsed < 2.0, f"llcheck took {elapsed:.2f}s (budget: 2s)"
+
+
+# --------------------------------------------------------------------- CLI
+
+
+def test_cli_exit_codes(capsys):
+    assert cli.main([os.path.join(FIXTURES, "ll001_good.py")]) == 0
+    assert cli.main([os.path.join(FIXTURES, "ll001_bad.py")]) == 1
+    assert cli.main([os.path.join(FIXTURES, "nope.py")]) == 1
+    capsys.readouterr()
+
+
+def test_cli_table_output(capsys):
+    rc = cli.main([os.path.join(FIXTURES, "ll004_bad.py")])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert out.splitlines()[0].split() == ["code", "location", "message"]
+    assert "(4 findings)" in out
+    assert "llcheck: 4 findings" in out
+
+
+def test_cli_json_output(capsys):
+    rc = cli.main(["--format", "json",
+                   os.path.join(FIXTURES, "ll004_bad.py")])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert [f["line"] for f in payload["findings"]] == [10, 13, 14, 18]
+    assert all(f["code"] == "LL004" for f in payload["findings"])
+    assert payload["modules"] == 1
+
+
+def test_cli_baseline_suppresses(tmp_path, capsys):
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps(
+        [{"code": "LL004", "path": "tests/llcheck_fixtures/ll004_bad.py"}]))
+    rc = cli.main(["--baseline", str(baseline),
+                   os.path.join(FIXTURES, "ll004_bad.py")])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "0 findings (4 baselined)" in out
+
+
+def test_cli_update_schema_lock_round_trip(tmp_path, capsys):
+    lock = tmp_path / "schema_lock.json"
+    assert cli.main(["--update-schema-lock",
+                     "--schema-lock", str(lock)]) == 0
+    out = capsys.readouterr().out
+    assert "wire version 1" in out
+    fresh = json.loads(lock.read_text())
+    checked_in = json.loads(open(cli.DEFAULT_LOCK).read())
+    assert fresh == checked_in

@@ -1,0 +1,184 @@
+"""Regression tests for the races llcheck (LL001) flagged and this tree
+fixed: stats() paths reading counters unlocked, and the multi-cluster
+fan-out mutating its in-flight table outside the lock.
+
+These are behavioural pins, not schedulers: each drives the fixed path
+from many threads and asserts the *exact* final counter values — a torn
+or lost update shows up as an off-by-N, a re-introduced unlocked access
+shows up under `python -m llcheck`.
+"""
+import concurrent.futures
+import threading
+import time
+
+from repro.daemon.store import HistoryStore
+from repro.monitor import build_source
+from repro.monitor.source import MultiClusterSource
+from repro.storage import SegmentLog, open_storage
+from repro.storage.shards import ShardManager
+
+
+def _hammer(n_threads, fn):
+    barrier = threading.Barrier(n_threads)
+    errors = []
+
+    def run(i):
+        barrier.wait()
+        try:
+            fn(i)
+        except Exception as exc:  # noqa: BLE001 — surfaced below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=run, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errors == []
+
+
+# ----------------------------------------------------------- wal.stats()
+
+
+def test_wal_stats_exact_under_concurrent_appends(tmp_path):
+    log = SegmentLog(str(tmp_path), max_records=32)
+    per_thread, n_threads = 200, 4
+
+    def work(i):
+        if i == 0:                       # one thread polls stats
+            for _ in range(100):
+                st = log.stats()
+                assert 0 <= st["appended"] <= per_thread * (n_threads - 1)
+        else:
+            for j in range(per_thread):
+                log.append(float(j), b"x")
+
+    _hammer(n_threads, work)
+    st = log.stats()
+    assert st["appended"] == per_thread * (n_threads - 1)
+    assert st["records"] == per_thread * (n_threads - 1)
+    log.close()
+
+
+# --------------------------------------------------------- shards.stats()
+
+
+def test_shard_stats_exact_under_concurrent_opens(tmp_path):
+    mgr = ShardManager(str(tmp_path), max_open=8)
+    keys = [f"user{i}" for i in range(32)]
+
+    def work(i):
+        for key in keys[i * 8:(i + 1) * 8]:
+            mgr.log_for(key).append(1.0, b"x")
+        for _ in range(50):
+            st = mgr.stats()
+            assert st["open"] <= 8
+
+    _hammer(4, work)
+    st = mgr.stats()
+    assert st["opened"] == len(keys)     # each key opened exactly once
+    assert st["opened"] - st["evicted"] == st["open"]
+    mgr.close()
+
+
+# -------------------------------------------------------- backend.stats()
+
+
+def test_history_backend_stats_while_appending_and_compacting(tmp_path):
+    rt = open_storage(str(tmp_path / "data"), compact_interval_s=9999.0)
+    try:
+        store = HistoryStore(backend=rt.history)
+        from tests.test_storage import _snaps
+        snaps = _snaps(40)
+
+        def work(i):
+            if i == 0:
+                for snap in snaps:
+                    store.append(snap)
+            elif i == 1:
+                rt.compact_once()
+            else:
+                for _ in range(50):
+                    st = rt.stats()
+                    assert st["history"]["raw"]["records"] >= 0
+
+        _hammer(4, work)
+        rt.compact_once()                # fold whatever the race left
+        st = rt.stats()
+        assert st["history"]["raw"]["records"] == len(snaps)
+    finally:
+        rt.close()
+
+
+# ---------------------------------------------- multi-cluster fan-out
+
+
+class _SlowChild:
+    """A child whose collection blocks until released."""
+    interval_hint = None
+
+    def __init__(self, name, snap, hold):
+        self.name = name
+        self.snap = snap
+        self.hold = hold
+        self.calls = 0
+        self._calls_lock = threading.Lock()
+
+    def snapshot(self):
+        with self._calls_lock:
+            self.calls += 1
+        assert self.hold.wait(timeout=10)
+        return self.snap
+
+
+def test_fanout_concurrent_snapshots_never_stack_collections():
+    """N racing snapshot() callers reuse ONE in-flight collection per
+    child (the _inflight table is read-modify-write under the lock)."""
+    base = build_source("sim").snapshot()
+    hold = threading.Event()
+    child = _SlowChild("slow", base, hold)
+    ms = MultiClusterSource([child], timeout_s=10.0)
+    results = []
+
+    def work(_):
+        results.append(ms.snapshot())
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    time.sleep(0.3)                      # let every caller hit the table
+    hold.set()
+    for t in threads:
+        t.join()
+    assert child.calls == 1
+    assert len(results) == 8
+    assert all(set(r.nodes) == set(base.nodes) for r in results)
+    ms._pool.shutdown(wait=False)
+
+
+class _FailingChild:
+    interval_hint = None
+
+    def __init__(self, name):
+        self.name = name
+
+    def snapshot(self):
+        raise ValueError(f"boom from {self.name}")
+
+
+def test_fanout_all_failed_reports_errors_consistently():
+    ms = MultiClusterSource([_FailingChild("a"), _FailingChild("b")],
+                            timeout_s=5.0)
+    with concurrent.futures.ThreadPoolExecutor(4) as pool:
+        futs = [pool.submit(ms.snapshot) for _ in range(4)]
+        for fut in futs:
+            try:
+                fut.result()
+                raise AssertionError("expected RuntimeError")
+            except RuntimeError as exc:
+                msg = str(exc)
+                assert "all 2 child sources failed" in msg
+                assert "boom from a" in msg and "boom from b" in msg
+    assert isinstance(ms.last_error("a"), ValueError)
+    ms._pool.shutdown(wait=False)

@@ -104,7 +104,8 @@ def run_block(block: Block, timeout_s: float = 300.0) -> int:
                               stdout=subprocess.PIPE,
                               stderr=subprocess.STDOUT)
     except subprocess.TimeoutExpired:
-        print(f"TIMEOUT after {timeout_s:.0f}s", flush=True)
+        print(f"TIMEOUT after {timeout_s:.0f}s: "
+              f"{block.path}:{block.lineno}", flush=True)
         return 124
     sys.stdout.buffer.write(proc.stdout)
     sys.stdout.flush()
@@ -120,7 +121,8 @@ def main(argv=None) -> int:
                     help="per-block timeout (seconds)")
     args = ap.parse_args(argv)
 
-    ran = failed = 0
+    ran = 0
+    failures: List[str] = []
     for path in args.files:
         for block in extract_blocks(path):
             if not is_runnable(block):
@@ -130,11 +132,16 @@ def main(argv=None) -> int:
             print(f"--- {where} [{block.lang}] ---", flush=True)
             rc = run_block(block, args.timeout)
             if rc != 0:
-                failed += 1
+                failures.append(f"{where} [{block.lang}] exit {rc}")
                 print(f"FAILED (exit {rc}): {where}\n{block.code}",
                       flush=True)
-    print(f"doc snippets: {ran} ran, {failed} failed")
-    return 1 if failed else 0
+    print(f"doc snippets: {ran} ran, {len(failures)} failed")
+    # the per-block output can be thousands of lines; repeat every
+    # failing fence's file:line at the very end so the culprit is the
+    # last thing in the log, not buried in the middle of it
+    for failure in failures:
+        print(f"FAILED {failure}")
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":

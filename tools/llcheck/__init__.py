@@ -1,0 +1,77 @@
+"""llcheck: the repo's AST-based invariant checker (DESIGN.md §13).
+
+Four checkers encode invariants the codebase established by convention:
+
+========  ===========================================================
+LL001     lock discipline: guarded attributes only touched under lock
+LL002     wire-schema drift vs. the checked-in schema lock
+LL003     Prometheus label cardinality / no f-string label injection
+LL004     CLI exit-code conventions (1=environment, 2=usage, pipe=0)
+========  ===========================================================
+
+(LL000 is reserved for meta findings: unparseable files and malformed
+``llcheck: ignore`` suppressions.)
+
+Checkers self-register via :func:`register`; each is a generator over
+:class:`~llcheck.core.Finding` given a :class:`~llcheck.core.Context`.
+Everything is stdlib-only so the analyzer can gate CI and pre-commit
+without an environment beyond the interpreter.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+from typing import Callable, Iterable, Iterator, List, Tuple
+
+from llcheck.core import (Context, Finding, SourceModule, load_modules,
+                          suppression_findings)
+
+CheckerFn = Callable[[Context], Iterator[Finding]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Checker:
+    code: str
+    title: str
+    fn: CheckerFn
+
+
+CHECKERS: "collections.OrderedDict[str, Checker]" = collections.OrderedDict()
+
+
+def register(code: str, title: str) -> Callable[[CheckerFn], CheckerFn]:
+    """Class decorator-style registration: ``@register("LL001", ...)``."""
+    def deco(fn: CheckerFn) -> CheckerFn:
+        CHECKERS[code] = Checker(code, title, fn)
+        return fn
+    return deco
+
+
+def _load_checkers() -> None:
+    # importing the modules runs their @register decorators
+    from llcheck import cli_exits       # noqa: F401
+    from llcheck import lock_discipline  # noqa: F401
+    from llcheck import prom_labels     # noqa: F401
+    from llcheck import wire_schema     # noqa: F401
+
+
+def run(paths: Iterable[str], repo_root: str,
+        schema_lock_path: str = "") -> Tuple[List[Finding], int]:
+    """Run every registered checker over ``paths``.
+
+    Returns ``(findings, modules_scanned)``; findings are sorted by
+    (path, line, code) and already filtered through inline ignores
+    (each checker consults them) — baseline filtering is the caller's.
+    """
+    _load_checkers()
+    modules, findings = load_modules(paths, repo_root)
+    findings.extend(suppression_findings(modules))
+    ctx = Context(repo_root=repo_root, modules=modules,
+                  schema_lock_path=schema_lock_path or
+                  os.path.join(os.path.dirname(__file__),
+                               "schema_lock.json"))
+    for checker in CHECKERS.values():
+        findings.extend(checker.fn(ctx))
+    findings.sort(key=lambda f: (f.path, f.line, f.code, f.message))
+    return findings, len(modules)

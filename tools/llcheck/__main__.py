@@ -1,0 +1,7 @@
+"""Entry point: ``PYTHONPATH=tools python -m llcheck``."""
+import sys
+
+from llcheck.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,141 @@
+"""``python -m llcheck`` — run the invariant checkers over the tree.
+
+Exit codes follow the repo convention LL004 itself enforces: 0 when
+clean, 1 when findings exist or the environment is broken (missing
+path), 2 for usage errors (argparse).  Default scan set is ``src/`` +
+``tools/`` under the repo root, mirroring the CI job.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import List, Optional
+
+import llcheck
+from llcheck import core, wire_schema
+
+REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), os.pardir, os.pardir))
+DEFAULT_LOCK = os.path.join(os.path.dirname(__file__), "schema_lock.json")
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+def _default_paths() -> List[str]:
+    return [os.path.join(REPO_ROOT, "src"), os.path.join(REPO_ROOT, "tools")]
+
+
+def _update_schema_lock(lock_path: str) -> int:
+    paths = [os.path.join(REPO_ROOT, "src")]
+    modules, parse_findings = core.load_modules(paths, REPO_ROOT)
+    ctx = core.Context(repo_root=REPO_ROOT, modules=modules,
+                       schema_lock_path=lock_path)
+    protocol = ctx.module(wire_schema.PROTOCOL_SUFFIX)
+    if protocol is None or parse_findings:
+        print("llcheck: cannot extract schema (protocol module missing "
+              "or unparseable)", file=sys.stderr)
+        return 1
+    schema = wire_schema.extract_schema(
+        protocol, ctx.module(wire_schema.METRICS_SUFFIX))
+    previous = None
+    if os.path.exists(lock_path):
+        with open(lock_path, "r", encoding="utf-8") as fh:
+            previous = json.load(fh)
+    wire_schema.write_lock(lock_path,
+                           wire_schema.build_lock(schema, previous))
+    rel = os.path.relpath(lock_path, REPO_ROOT)
+    print(f"llcheck: wrote {rel} (wire version {schema['wire_version']}, "
+          f"{len(schema['node_fields'])} node fields, "
+          f"{len(schema['job_fields'])} job fields)")
+    return 0
+
+
+def _check_lock_regen(lock_path: str) -> bool:
+    """True when regenerating the schema lock would be a no-op (the CI
+    guarantee that the checked-in lock matches the code)."""
+    modules, _ = core.load_modules([os.path.join(REPO_ROOT, "src")],
+                                   REPO_ROOT)
+    ctx = core.Context(repo_root=REPO_ROOT, modules=modules,
+                       schema_lock_path=lock_path)
+    protocol = ctx.module(wire_schema.PROTOCOL_SUFFIX)
+    if protocol is None or not os.path.exists(lock_path):
+        return False
+    schema = wire_schema.extract_schema(
+        protocol, ctx.module(wire_schema.METRICS_SUFFIX))
+    with open(lock_path, "r", encoding="utf-8") as fh:
+        current = json.load(fh)
+    return wire_schema.build_lock(schema, current) == current
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="llcheck",
+        description="AST-based invariant checker: lock discipline "
+                    "(LL001), wire-schema drift (LL002), label "
+                    "cardinality (LL003), exit-code conventions (LL004)")
+    parser.add_argument("paths", nargs="*",
+                        help="files or directories (default: src/ tools/)")
+    parser.add_argument("--format", choices=("table", "json"),
+                        default="table")
+    parser.add_argument("--ci", action="store_true",
+                        help="CI mode: default paths, verify the schema "
+                             "lock regenerates to itself, print timing")
+    parser.add_argument("--update-schema-lock", action="store_true",
+                        help="regenerate tools/llcheck/schema_lock.json "
+                             "from the current code and exit")
+    parser.add_argument("--schema-lock", default=DEFAULT_LOCK,
+                        help=argparse.SUPPRESS)
+    parser.add_argument("--baseline", default=DEFAULT_BASELINE,
+                        help="baseline JSON of acknowledged findings")
+    args = parser.parse_args(argv)
+
+    if args.update_schema_lock:
+        return _update_schema_lock(args.schema_lock)
+
+    paths = args.paths or _default_paths()
+    for p in paths:
+        if not os.path.exists(p):
+            print(f"llcheck: no such path: {p}", file=sys.stderr)
+            return 1
+
+    started = time.monotonic()
+    findings, n_modules = llcheck.run(paths, REPO_ROOT,
+                                      schema_lock_path=args.schema_lock)
+    if args.ci and not _check_lock_regen(args.schema_lock):
+        findings.append(core.Finding(
+            "LL002", os.path.relpath(args.schema_lock, REPO_ROOT), 1,
+            "schema_lock.json does not match a fresh regeneration — "
+            "run 'python -m llcheck --update-schema-lock' and commit"))
+    try:
+        baseline = core.load_baseline(args.baseline)
+    except (ValueError, json.JSONDecodeError) as exc:
+        print(f"llcheck: bad baseline: {exc}", file=sys.stderr)
+        return 1
+    findings, baselined = core.apply_baseline(findings, baseline)
+    elapsed = time.monotonic() - started
+
+    try:
+        if args.format == "json":
+            print(json.dumps({
+                "findings": [f.as_dict() for f in findings],
+                "baselined": baselined,
+                "modules": n_modules,
+                "elapsed_s": round(elapsed, 3),
+            }, indent=2))
+        else:
+            if findings:
+                sys.stdout.write(core.render_findings_table(findings))
+            summary = (f"llcheck: {len(findings)} finding"
+                       f"{'s' if len(findings) != 1 else ''} "
+                       f"({baselined} baselined) across {n_modules} "
+                       f"modules in {elapsed:.2f}s")
+            print(summary)
+    except BrokenPipeError:
+        return 0
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,137 @@
+"""LL004: CLI exit-code conventions (pinned by the PR 2–3 tests).
+
+Applies to any module defining a top-level ``main`` function:
+
+* exit codes are 0/1/2 only — 1 for environment errors (unreachable
+  daemon, unknown host/job, I/O), 2 for usage errors (argparse raises
+  it for us), anything else is a convention break;
+* an ``except BrokenPipeError`` path must exit 0: piping a one-shot
+  view into ``head`` is success, not failure;
+* a handler that reports an environment-error type to stderr (the CLI
+  error idiom) and returns an integer must return 1 — returning 0
+  swallows the failure (cron jobs and scrapers read the exit code),
+  returning 2 lies about whose fault it was.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Set
+
+from llcheck import register
+from llcheck.core import Context, Finding, SourceModule
+
+ENV_ERROR_TYPES = frozenset({
+    "OSError", "IOError", "FileNotFoundError", "PermissionError",
+    "ConnectionError", "TimeoutError", "URLError", "HTTPError",
+    "QueryError", "RemoteError", "CampaignError", "WireError",
+})
+ALLOWED_EXITS = frozenset({0, 1, 2})
+
+
+def _has_main(mod: SourceModule) -> bool:
+    return any(isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+               and node.name == "main" for node in mod.tree.body)
+
+
+def _handler_type_names(handler: ast.ExceptHandler) -> Set[str]:
+    names: Set[str] = set()
+    types = handler.type
+    if types is None:
+        return names
+    for node in (types.elts if isinstance(types, ast.Tuple) else [types]):
+        if isinstance(node, ast.Name):
+            names.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            names.add(node.attr)
+    return names
+
+
+def _prints_stderr(body: List[ast.stmt]) -> bool:
+    """True when the handler reports to stderr (the CLI error idiom):
+    ``print(..., file=sys.stderr)`` or ``sys.stderr.write(...)``."""
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if isinstance(fn, ast.Name) and fn.id == "print":
+                for kw in node.keywords:
+                    if kw.arg == "file" and isinstance(kw.value,
+                                                       ast.Attribute) \
+                            and kw.value.attr == "stderr":
+                        return True
+            elif (isinstance(fn, ast.Attribute) and fn.attr == "write"
+                  and isinstance(fn.value, ast.Attribute)
+                  and fn.value.attr == "stderr"):
+                return True
+    return False
+
+
+def _int_exits(body: List[ast.stmt], returns: bool = True
+               ) -> Iterator[ast.AST]:
+    """Yield ``(node, value)`` for every constant-int exit in ``body``:
+    ``return N`` (when ``returns``), ``sys.exit(N)``, ``SystemExit(N)``."""
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if (returns and isinstance(node, ast.Return)
+                    and isinstance(node.value, ast.Constant)
+                    and isinstance(node.value.value, int)
+                    and not isinstance(node.value.value, bool)):
+                yield node, node.value.value
+            elif isinstance(node, ast.Call):
+                fn = node.func
+                name = fn.attr if isinstance(fn, ast.Attribute) else (
+                    fn.id if isinstance(fn, ast.Name) else "")
+                if name in ("exit", "SystemExit", "_exit") and node.args:
+                    arg = node.args[0]
+                    if (isinstance(arg, ast.Constant)
+                            and isinstance(arg.value, int)
+                            and not isinstance(arg.value, bool)):
+                        yield node, arg.value
+
+
+@register("LL004", "cli exit-code conventions")
+def check(ctx: Context) -> Iterator[Finding]:
+    for mod in ctx.modules:
+        if not _has_main(mod):
+            continue
+        # only exit codes 0/1/2 exist: returns are checked inside main()
+        # (helpers may return sentinel ints that are not exit codes);
+        # sys.exit()/SystemExit are process exits wherever they appear
+        mains = [n for n in mod.tree.body
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                 and n.name == "main"]
+        exits = [e for m in mains for e in _int_exits(m.body)]
+        exits.extend(_int_exits(mod.tree.body, returns=False))
+        seen = set()
+        for node, value in exits:
+            if id(node) in seen:
+                continue
+            seen.add(id(node))
+            if value not in ALLOWED_EXITS and not mod.ignored(
+                    node.lineno, "LL004"):
+                yield Finding(
+                    "LL004", mod.rel, node.lineno,
+                    f"exit code {value} is outside the convention "
+                    f"(0=ok, 1=environment error, 2=usage error)")
+        for handler in (n for n in ast.walk(mod.tree)
+                        if isinstance(n, ast.ExceptHandler)):
+            names = _handler_type_names(handler)
+            if "BrokenPipeError" in names:
+                for node, value in _int_exits(handler.body):
+                    if value != 0 and not mod.ignored(node.lineno, "LL004"):
+                        yield Finding(
+                            "LL004", mod.rel, node.lineno,
+                            f"BrokenPipeError path exits {value}; a "
+                            f"truncated pipe (| head) is success — exit 0")
+                continue
+            # only handlers that *report* an environment error to stderr
+            # are exit-code paths; helpers returning sentinel ints are not
+            if names & ENV_ERROR_TYPES and _prints_stderr(handler.body):
+                for node, value in _int_exits(handler.body):
+                    if value != 1 and not mod.ignored(node.lineno, "LL004"):
+                        yield Finding(
+                            "LL004", mod.rel, node.lineno,
+                            f"environment-error handler "
+                            f"({', '.join(sorted(names & ENV_ERROR_TYPES))})"
+                            f" exits {value}; environment errors exit 1")

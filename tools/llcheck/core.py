@@ -1,0 +1,219 @@
+"""Core model for llcheck: parsed modules, annotation grammars, findings.
+
+llcheck reads two comment grammars (DESIGN.md §13):
+
+``# guarded-by: <lock>``
+    On an attribute assignment: the attribute is mutable shared state
+    protected by ``self.<lock>``.  On a ``def`` line: the whole method
+    runs with ``self.<lock>`` already held (callers acquire it).
+
+``# llcheck: ignore[LL001] <reason>``
+    Suppress the listed finding codes on this line.  The reason is
+    mandatory: an ignore without one is itself a finding (LL000), so
+    every suppression documents *why* the invariant does not apply.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import os
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+GUARD_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_][A-Za-z0-9_]*)\s*$")
+IGNORE_RE = re.compile(r"#\s*llcheck:\s*ignore\[([A-Za-z0-9,\s]*)\]\s*(.*)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer hit: a code, a location, and a human sentence."""
+    code: str
+    path: str          # repo-relative
+    line: int
+    message: str
+
+    def key(self) -> Tuple[str, str, int]:
+        return (self.code, self.path, self.line)
+
+    def as_dict(self) -> Dict[str, object]:
+        return {"code": self.code, "path": self.path,
+                "line": self.line, "message": self.message}
+
+
+class SourceModule:
+    """A parsed source file plus its llcheck comment annotations."""
+
+    def __init__(self, path: str, repo_root: str,
+                 text: Optional[str] = None):
+        self.path = os.path.abspath(path)
+        self.rel = os.path.relpath(self.path, repo_root).replace(os.sep, "/")
+        if text is None:
+            with open(self.path, "r", encoding="utf-8") as fh:
+                text = fh.read()
+        self.text = text
+        self.tree = ast.parse(text, filename=self.path)
+        # lineno -> lock attribute name   (# guarded-by: _lock)
+        self.guards: Dict[int, str] = {}
+        # lineno -> (codes, reason)       (# llcheck: ignore[...] reason)
+        self.ignores: Dict[int, Tuple[Set[str], str]] = {}
+        self._scan_comments()
+
+    def _scan_comments(self) -> None:
+        try:
+            tokens = tokenize.generate_tokens(io.StringIO(self.text).readline)
+            for tok in tokens:
+                if tok.type != tokenize.COMMENT:
+                    continue
+                # a comment alone on its line annotates the NEXT line
+                # (trailing form annotates its own line) — long statements
+                # cannot always fit a trailing comment
+                lineno = tok.start[0]
+                if tok.line.strip().startswith("#"):
+                    lineno += 1
+                m = GUARD_RE.search(tok.string)
+                if m:
+                    self.guards[lineno] = m.group(1)
+                    continue
+                m = IGNORE_RE.search(tok.string)
+                if m:
+                    codes = {c.strip() for c in m.group(1).split(",")
+                             if c.strip()}
+                    self.ignores[lineno] = (codes, m.group(2).strip())
+        except tokenize.TokenError:
+            pass  # ast.parse already succeeded; truncated trailing token
+
+    # ------------------------------------------------------------ queries
+    def ignored(self, lineno: int, code: str) -> bool:
+        """True when ``code`` is suppressed on ``lineno`` *with* a reason
+        (reasonless ignores do not suppress — they are LL000 findings)."""
+        entry = self.ignores.get(lineno)
+        return bool(entry and code in entry[0] and entry[1])
+
+    def span_ignored(self, node: ast.AST, code: str) -> bool:
+        """True when any physical line of ``node`` carries a valid ignore."""
+        end = getattr(node, "end_lineno", None) or node.lineno
+        return any(self.ignored(ln, code)
+                   for ln in range(node.lineno, end + 1))
+
+    def guard_on(self, node: ast.AST) -> Optional[str]:
+        """The ``# guarded-by:`` lock named on any physical line of
+        ``node`` (for a def, its header lines up to the first body stmt)."""
+        end = getattr(node, "end_lineno", None) or node.lineno
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            end = node.body[0].lineno - 1 if node.body else end
+            end = max(end, node.lineno)
+        for ln in range(node.lineno, end + 1):
+            if ln in self.guards:
+                return self.guards[ln]
+        return None
+
+
+@dataclasses.dataclass
+class Context:
+    """Everything a checker gets: the module set plus repo paths."""
+    repo_root: str
+    modules: List[SourceModule]
+    schema_lock_path: str = ""
+
+    def module(self, rel_suffix: str) -> Optional[SourceModule]:
+        for mod in self.modules:
+            if mod.rel.endswith(rel_suffix):
+                return mod
+        return None
+
+
+def load_modules(paths: Iterable[str], repo_root: str
+                 ) -> Tuple[List[SourceModule], List[Finding]]:
+    """Parse every ``.py`` under ``paths`` (files or directories).
+    Unparseable files become findings, not crashes."""
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if not d.startswith(".")
+                                     and d != "__pycache__")
+                files.extend(os.path.join(dirpath, f)
+                             for f in sorted(filenames) if f.endswith(".py"))
+        else:
+            files.append(p)
+    modules, findings = [], []
+    for path in files:
+        try:
+            modules.append(SourceModule(path, repo_root))
+        except (SyntaxError, UnicodeDecodeError, OSError) as exc:
+            rel = os.path.relpath(path, repo_root).replace(os.sep, "/")
+            line = getattr(exc, "lineno", None) or 1
+            findings.append(Finding("LL000", rel, line,
+                                    f"could not parse: {exc}"))
+    return modules, findings
+
+
+def suppression_findings(modules: Iterable[SourceModule]) -> List[Finding]:
+    """LL000: every ``llcheck: ignore`` must name codes and give a reason."""
+    out = []
+    for mod in modules:
+        for lineno, (codes, reason) in sorted(mod.ignores.items()):
+            if not codes:
+                out.append(Finding(
+                    "LL000", mod.rel, lineno,
+                    "ignore[] names no finding codes"))
+            elif not reason:
+                out.append(Finding(
+                    "LL000", mod.rel, lineno,
+                    "ignore[%s] has no reason; suppressions must say why"
+                    % ",".join(sorted(codes))))
+    return out
+
+
+# ----------------------------------------------------------------- baseline
+
+def load_baseline(path: str) -> List[Dict[str, object]]:
+    """The baseline file: a JSON list of ``{code, path[, line]}`` entries
+    for historical findings that are acknowledged but not yet fixed."""
+    if not os.path.exists(path):
+        return []
+    with open(path, "r", encoding="utf-8") as fh:
+        data = json.load(fh)
+    if not isinstance(data, list):
+        raise ValueError(f"baseline {path}: expected a JSON list")
+    return data
+
+
+def apply_baseline(findings: List[Finding],
+                   baseline: List[Dict[str, object]]
+                   ) -> Tuple[List[Finding], int]:
+    """Split findings into (unbaselined, baselined-count)."""
+    def matches(f: Finding, entry: Dict[str, object]) -> bool:
+        if entry.get("code") != f.code or entry.get("path") != f.path:
+            return False
+        return "line" not in entry or entry["line"] == f.line
+
+    fresh, suppressed = [], 0
+    for f in findings:
+        if any(matches(f, e) for e in baseline):
+            suppressed += 1
+        else:
+            fresh.append(f)
+    return fresh, suppressed
+
+
+# ------------------------------------------------------------------ output
+
+def render_findings_table(findings: List[Finding]) -> str:
+    """Findings in the repo's table idiom (query/render.py): left-aligned
+    string columns, two-space gutters, an ``(N findings)`` footer."""
+    header = ["code", "location", "message"]
+    rows = [[f.code, f"{f.path}:{f.line}", f.message] for f in findings]
+    widths = [len(h) for h in header]
+    for row in rows:
+        widths = [max(w, len(c)) for w, c in zip(widths, row)]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(header, widths)).rstrip()]
+    for row in rows:
+        lines.append("  ".join(c.ljust(w)
+                               for c, w in zip(row, widths)).rstrip())
+    lines.append(f"({len(findings)} finding{'s' if len(findings) != 1 else ''})")
+    return "\n".join(lines) + "\n"

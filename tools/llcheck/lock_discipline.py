@@ -1,0 +1,191 @@
+"""LL001: lock discipline for classes holding a ``threading.Lock``.
+
+Scope rules (DESIGN.md §13):
+
+* A class is in scope when any of its methods assigns
+  ``self.X = threading.Lock()`` / ``threading.RLock()``.
+* Attributes annotated ``# guarded-by: <lock>`` on their assignment are
+  *guarded*: any ``self.<attr>`` read or write outside a
+  ``with self.<lock>:`` block is a finding.  ``__init__`` is exempt
+  (the object is not yet published to other threads).
+* A ``# guarded-by: <lock>`` on a ``def`` line declares a
+  caller-holds-the-lock helper: its whole body is treated as locked.
+* Mutable container attributes created in ``__init__`` of an in-scope
+  class must be classified — either ``# guarded-by:`` or an explicit
+  ``# llcheck: ignore[LL001] <reason>`` — so new state cannot slip in
+  unexamined.
+* Only ``self.``-attribute accesses are analyzed: cross-object accesses
+  (``other._attr``) and class-level state reached via ``cls.`` are out
+  of scope, as are nested functions/lambdas (they run later, so the
+  lock held at definition time proves nothing — annotate the def line
+  if the closure really does run under the lock).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set
+
+from llcheck import register
+from llcheck.core import Context, Finding, SourceModule
+
+_LOCK_FACTORIES = {"Lock", "RLock"}
+_MUTABLE_CALLS = {"dict", "list", "set", "bytearray", "deque",
+                  "OrderedDict", "defaultdict", "Counter"}
+
+
+def _is_self(node: ast.AST) -> bool:
+    return isinstance(node, ast.Name) and node.id == "self"
+
+
+def _is_lock_factory(call: ast.AST) -> bool:
+    if not isinstance(call, ast.Call):
+        return False
+    fn = call.func
+    name = fn.attr if isinstance(fn, ast.Attribute) else (
+        fn.id if isinstance(fn, ast.Name) else "")
+    return name in _LOCK_FACTORIES
+
+
+def _is_mutable_container(expr: ast.AST) -> bool:
+    if isinstance(expr, (ast.Dict, ast.List, ast.Set,
+                         ast.ListComp, ast.SetComp, ast.DictComp)):
+        return True
+    if isinstance(expr, ast.Call):
+        fn = expr.func
+        name = fn.attr if isinstance(fn, ast.Attribute) else (
+            fn.id if isinstance(fn, ast.Name) else "")
+        return name in _MUTABLE_CALLS
+    return False
+
+
+def _self_attr_assigns(method: ast.AST):
+    """Yield ``(stmt, attr_name, value)`` for ``self.X = ...`` statements
+    directly inside ``method`` (not inside nested defs)."""
+    for node in ast.walk(method):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Attribute) and _is_self(tgt.value):
+                    yield node, tgt.attr, node.value
+        elif isinstance(node, ast.AnnAssign):
+            tgt = node.target
+            if isinstance(tgt, ast.Attribute) and _is_self(tgt.value):
+                yield node, tgt.attr, node.value
+
+
+class _ClassAuditor:
+    """Audit one lock-holding class."""
+
+    def __init__(self, mod: SourceModule, cls: ast.ClassDef):
+        self.mod = mod
+        self.cls = cls
+        self.methods = [n for n in cls.body
+                        if isinstance(n, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef))]
+        self.locks: Set[str] = set()
+        self.guarded: Dict[str, str] = {}   # attr -> lock attr
+        self.findings: List[Finding] = []
+        self._collect_locks_and_guards()
+
+    def _collect_locks_and_guards(self) -> None:
+        for method in self.methods:
+            for stmt, attr, value in _self_attr_assigns(method):
+                if value is not None and _is_lock_factory(value):
+                    self.locks.add(attr)
+                lock = self.mod.guard_on(stmt)
+                if lock is not None:
+                    self.guarded[attr] = lock
+
+    # --------------------------------------------------------------- audit
+    def audit(self) -> List[Finding]:
+        if not self.locks:
+            return []
+        for attr, lock in sorted(self.guarded.items()):
+            if lock not in self.locks:
+                self.findings.append(Finding(
+                    "LL001", self.mod.rel, self.cls.lineno,
+                    f"{self.cls.name}.{attr} is guarded-by {lock!r} but "
+                    f"the class holds no such lock attribute"))
+        for method in self.methods:
+            if method.name == "__init__":
+                self._audit_init(method)
+            else:
+                held = self._def_holds(method)
+                for stmt in method.body:
+                    self._visit(stmt, held)
+        return self.findings
+
+    def _def_holds(self, fn: ast.AST) -> frozenset:
+        lock = self.mod.guard_on(fn)
+        return frozenset((lock,)) if lock else frozenset()
+
+    def _audit_init(self, init: ast.FunctionDef) -> None:
+        """Completeness: every mutable container attribute must be
+        classified (guarded or explicitly ignored with a reason).  Only
+        the first assignment of each attribute is audited — classifying
+        an attribute once classifies it everywhere."""
+        seen: Set[str] = set()
+        for stmt, attr, value in _self_attr_assigns(init):
+            if attr in seen:
+                continue
+            seen.add(attr)
+            if attr in self.guarded or attr in self.locks:
+                continue
+            if value is None or not _is_mutable_container(value):
+                continue
+            if self.mod.span_ignored(stmt, "LL001"):
+                continue
+            self.findings.append(Finding(
+                "LL001", self.mod.rel, stmt.lineno,
+                f"{self.cls.name}.{attr} is a mutable container in a "
+                f"lock-holding class but is not classified: add "
+                f"'# guarded-by: <lock>' or "
+                f"'# llcheck: ignore[LL001] <reason>'"))
+
+    # ------------------------------------------------------ access walking
+    def _visit(self, node: ast.AST, held: frozenset) -> None:
+        if isinstance(node, ast.With):
+            acquired = set()
+            for item in node.items:
+                expr = item.context_expr
+                if (isinstance(expr, ast.Attribute) and _is_self(expr.value)
+                        and expr.attr in self.locks):
+                    acquired.add(expr.attr)
+                self._visit(expr, held)
+                if item.optional_vars is not None:
+                    self._visit(item.optional_vars, held)
+            inner = frozenset(held | acquired)
+            for stmt in node.body:
+                self._visit(stmt, inner)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # a nested function runs later: the lock held where it is
+            # *defined* proves nothing about where it is *called*
+            inner = self._def_holds(node)
+            for stmt in node.body:
+                self._visit(stmt, inner)
+            return
+        if isinstance(node, ast.Lambda):
+            self._visit(node.body, frozenset())
+            return
+        if (isinstance(node, ast.Attribute) and _is_self(node.value)
+                and node.attr in self.guarded):
+            lock = self.guarded[node.attr]
+            if lock not in held and not self.mod.ignored(node.lineno,
+                                                         "LL001"):
+                verb = ("write to"
+                        if isinstance(node.ctx, (ast.Store, ast.Del))
+                        else "read of")
+                self.findings.append(Finding(
+                    "LL001", self.mod.rel, node.lineno,
+                    f"{verb} {self.cls.name}.{node.attr} outside "
+                    f"'with self.{lock}:'"))
+        for child in ast.iter_child_nodes(node):
+            self._visit(child, held)
+
+
+@register("LL001", "lock discipline")
+def check(ctx: Context) -> Iterator[Finding]:
+    for mod in ctx.modules:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef):
+                yield from _ClassAuditor(mod, node).audit()

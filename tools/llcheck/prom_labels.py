@@ -1,0 +1,259 @@
+"""LL003: Prometheus label cardinality stays bounded at the source.
+
+Applies to the metric-emitting modules (``daemon/promtext.py`` and
+``daemon/server.py`` — matched by basename so fixture corpora work):
+
+* every ``.sample(name, labels, ...)`` / ``.header(name, ...)`` call
+  must have a metric name that *statically* resolves to ``llload_*``
+  strings (through literals, the ``prefix`` parameter default, local
+  assignments and loops over module-level literal tables);
+* label lists must be literal ``[(key, value), ...]`` displays whose
+  keys are string literals drawn from the fixed vocabulary;
+* no f-string label injection: a ``FormattedValue`` directly after a
+  ``...="`` literal mints one label value per distinct input — the
+  cardinality explosion PR 2 bounded with ``JOB_LABEL_BUDGET`` and the
+  ``_KNOWN_ENDPOINTS`` fold.  Trusted sinks (the escaped ``_labels``
+  formatter, the bounded endpoint counter) carry explicit
+  ``llcheck: ignore[LL003]`` reasons.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set
+
+from llcheck import register
+from llcheck.core import Context, Finding, SourceModule
+
+SCOPE_BASENAMES = ("promtext.py", "server.py")
+LABEL_VOCAB = frozenset(
+    {"cluster", "host", "user", "job", "kind", "severity", "endpoint"})
+METRIC_PREFIX = "llload_"
+_MAX_CHOICES = 256
+
+
+def _in_scope(mod: SourceModule) -> bool:
+    base = mod.rel.rsplit("/", 1)[-1]
+    return any(base.endswith(s) for s in SCOPE_BASENAMES)
+
+
+# ------------------------------------------------------- static resolution
+
+class _Resolver:
+    """Resolve an expression to its possible string values, through
+    literals, parameter defaults, local assignments, and for-loops over
+    module-level tables of literal tuples.  ``None`` = unresolvable."""
+
+    def __init__(self, mod: SourceModule):
+        self.tables: Dict[str, List[tuple]] = {}
+        self.consts: Dict[str, object] = {}
+        for node in mod.tree.body:
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                continue
+            name = node.targets[0].id
+            if isinstance(node.value, ast.Constant):
+                self.consts[name] = node.value.value
+            else:
+                table = self._literal_table(node.value)
+                if table is not None:
+                    self.tables[name] = table
+
+    @staticmethod
+    def _literal_table(expr: ast.expr) -> Optional[List[tuple]]:
+        if not isinstance(expr, (ast.List, ast.Tuple)):
+            return None
+        rows = []
+        for elt in expr.elts:
+            if isinstance(elt, ast.Constant):
+                rows.append((elt.value,))
+            elif isinstance(elt, (ast.Tuple, ast.List)):
+                if not all(isinstance(c, ast.Constant) for c in elt.elts):
+                    return None
+                rows.append(tuple(c.value for c in elt.elts))
+            else:
+                return None
+        return rows
+
+    def function_env(self, fn: ast.AST) -> Dict[str, ast.expr]:
+        """name -> defining expression (or a synthetic choice set)."""
+        env: Dict[str, object] = {}
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = fn.args
+            defaults = args.defaults
+            params = args.posonlyargs + args.args
+            for param, default in zip(params[len(params) - len(defaults):],
+                                      defaults):
+                env[param.arg] = default
+            for param, default in zip(args.kwonlyargs, args.kw_defaults):
+                if default is not None:
+                    env[param.arg] = default
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                env[node.targets[0].id] = node.value
+            elif isinstance(node, ast.For):
+                self._bind_loop(env, node.target, node.iter)
+        return env
+
+    def _bind_loop(self, env: Dict[str, object], target: ast.expr,
+                   it: ast.expr) -> None:
+        if not (isinstance(it, ast.Name) and it.id in self.tables):
+            return
+        table = self.tables[it.id]
+        if isinstance(target, ast.Name):
+            env[target.id] = {row[0] for row in table if len(row) == 1}
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for i, tgt in enumerate(target.elts):
+                if isinstance(tgt, ast.Name):
+                    env[tgt.id] = {row[i] for row in table if len(row) > i}
+
+    def resolve(self, expr: ast.expr, env: Dict[str, object],
+                _seen: Optional[Set[str]] = None) -> Optional[Set[str]]:
+        seen = _seen or set()
+        if isinstance(expr, ast.Constant):
+            return {expr.value} if isinstance(expr.value, str) else None
+        if isinstance(expr, ast.Name):
+            if expr.id in seen:
+                return None
+            bound = env.get(expr.id, self.consts.get(expr.id))
+            if isinstance(bound, set):
+                return bound if all(isinstance(v, str) for v in bound) \
+                    else None
+            if isinstance(bound, ast.expr):
+                return self.resolve(bound, env, seen | {expr.id})
+            if isinstance(bound, str):
+                return {bound}
+            return None
+        if isinstance(expr, ast.JoinedStr):
+            choices: Set[str] = {""}
+            for part in expr.values:
+                if isinstance(part, ast.Constant):
+                    piece = {str(part.value)}
+                elif isinstance(part, ast.FormattedValue):
+                    if part.format_spec is not None:
+                        return None
+                    piece = self.resolve(part.value, env, seen)
+                    if piece is None:
+                        return None
+                else:
+                    return None
+                choices = {a + b for a in choices for b in piece}
+                if len(choices) > _MAX_CHOICES:
+                    return None
+            return choices
+        if isinstance(expr, ast.BinOp) and isinstance(expr.op, ast.Add):
+            left = self.resolve(expr.left, env, seen)
+            right = self.resolve(expr.right, env, seen)
+            if left is None or right is None:
+                return None
+            out = {a + b for a in left for b in right}
+            return out if len(out) <= _MAX_CHOICES else None
+        return None
+
+
+# --------------------------------------------------------------- checking
+
+def _has_fstring_value(expr: ast.expr) -> bool:
+    return any(isinstance(n, ast.FormattedValue) for n in ast.walk(expr))
+
+
+def _check_call(mod: SourceModule, resolver: _Resolver,
+                env: Dict[str, object], call: ast.Call) -> Iterator[Finding]:
+    fn = call.func
+    if not (isinstance(fn, ast.Attribute)
+            and fn.attr in ("sample", "header")):
+        return
+    if not call.args:
+        return
+    name_arg = call.args[0]
+    names = resolver.resolve(name_arg, env)
+    if names is None:
+        if not mod.ignored(name_arg.lineno, "LL003"):
+            yield Finding(
+                "LL003", mod.rel, name_arg.lineno,
+                f".{fn.attr}() metric name is not statically resolvable "
+                f"to a fixed string set")
+    else:
+        bad = sorted(n for n in names if not n.startswith(METRIC_PREFIX))
+        if bad and not mod.ignored(name_arg.lineno, "LL003"):
+            yield Finding(
+                "LL003", mod.rel, name_arg.lineno,
+                f".{fn.attr}() metric name may resolve to {bad[0]!r}, "
+                f"outside the {METRIC_PREFIX}* family")
+    if fn.attr != "sample" or len(call.args) < 2:
+        return
+    labels = call.args[1]
+    if not isinstance(labels, (ast.List, ast.Tuple)):
+        if not mod.ignored(labels.lineno, "LL003"):
+            yield Finding(
+                "LL003", mod.rel, labels.lineno,
+                ".sample() labels must be a literal list of "
+                "(key, value) pairs so the key set is auditable")
+        return
+    for pair in labels.elts:
+        if not (isinstance(pair, (ast.Tuple, ast.List))
+                and len(pair.elts) == 2):
+            if not mod.ignored(pair.lineno, "LL003"):
+                yield Finding("LL003", mod.rel, pair.lineno,
+                              ".sample() label entry is not a "
+                              "(key, value) pair literal")
+            continue
+        key, value = pair.elts
+        if not (isinstance(key, ast.Constant) and isinstance(key.value, str)):
+            if not mod.ignored(key.lineno, "LL003"):
+                yield Finding("LL003", mod.rel, key.lineno,
+                              ".sample() label key is not a string "
+                              "literal")
+        elif key.value not in LABEL_VOCAB:
+            if not mod.ignored(key.lineno, "LL003"):
+                yield Finding(
+                    "LL003", mod.rel, key.lineno,
+                    f".sample() label key {key.value!r} is outside the "
+                    f"fixed vocabulary {sorted(LABEL_VOCAB)}")
+        if _has_fstring_value(value) and not mod.ignored(value.lineno,
+                                                         "LL003"):
+            yield Finding(
+                "LL003", mod.rel, value.lineno,
+                ".sample() label value is an f-string — every distinct "
+                "input mints a new label value (unbounded cardinality)")
+
+
+def _check_injection(mod: SourceModule, node: ast.JoinedStr
+                     ) -> Iterator[Finding]:
+    prev = None
+    for part in node.values:
+        if (isinstance(part, ast.FormattedValue)
+                and isinstance(prev, ast.Constant)
+                and isinstance(prev.value, str)
+                and prev.value.endswith('="')):
+            if not mod.ignored(part.lineno, "LL003"):
+                yield Finding(
+                    "LL003", mod.rel, part.lineno,
+                    'f-string label injection (…="{value}"): label values '
+                    "must come from a bounded vocabulary or an escaped, "
+                    "budget-folded sink")
+        prev = part
+
+
+@register("LL003", "prometheus label cardinality")
+def check(ctx: Context) -> Iterator[Finding]:
+    for mod in ctx.modules:
+        if not _in_scope(mod):
+            continue
+        resolver = _Resolver(mod)
+        scopes = [(mod.tree, {})]
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scopes.append((node, resolver.function_env(node)))
+        # ast.walk is breadth-first, so deeper (more specific) scopes come
+        # later; visiting in reverse lets the innermost env claim each call
+        emitted = set()
+        for scope, env in reversed(scopes):
+            for node in ast.walk(scope):
+                if isinstance(node, ast.Call) and id(node) not in emitted:
+                    emitted.add(id(node))
+                    yield from _check_call(mod, resolver, env, node)
+                elif (isinstance(node, ast.JoinedStr)
+                      and id(node) not in emitted):
+                    emitted.add(id(node))
+                    yield from _check_injection(mod, node)
