@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows (one per benchmark).
 | snapshot_tsv_2048        | 15-min archive write format (§V-A)           |
 | bus_read_{cached,uncached} | TelemetryBus snapshot-query throughput     |
 | daemon_snapshot_*        | HTTP /snapshot requests/s, cached vs collect |
+| stream_fanout_512n_64w   | /stream delta fan-out bytes vs polling (§14) |
 | query_{table,json}_512n  | query engine filter+sort+render (§7)         |
 | insights_{replay,incremental} | §V-B advise: streaming engine vs replay |
 | experiments_low_duty_8g  | §V-B campaign: fixed vs closed-loop NPPN     |
@@ -190,6 +191,111 @@ def bench_daemon():
         "cached_requests_per_s": round(cached_rps, 1),
         "uncached_requests_per_s": round(uncached_rps, 1),
         "cache_speedup_x": round(speedup, 2),
+    })
+
+
+def bench_stream():
+    """Push-based streaming fan-out (DESIGN.md §14) at 512 simulated
+    nodes, 64 live HTTP watchers, ~5% node churn per tick: bytes on the
+    wire for a /stream subscriber (keyframe + deltas) vs the same
+    watcher polling full /snapshot bodies every tick.  Emits
+    ``BENCH_stream.json`` for CI / acceptance (byte reduction >= 10x)."""
+    import dataclasses
+    import threading
+    import urllib.request
+
+    from repro.core.metrics import ClusterSnapshot
+    from repro.daemon import LLloadDaemon, protocol, serve_background
+
+    n_watchers, n_ticks, churn = 64, 64, 0.05
+    base = _sim(512).snapshot()
+    hosts = list(base.nodes)
+    rng = random.Random(0)
+
+    class ChurnSource:
+        """~5% of the fleet moves per collection; one job rotates."""
+        name = "churn"
+        interval_hint = None
+
+        def __init__(self):
+            self._snap = base
+            self._next_job = max(j.job_id for j in base.jobs) + 1
+
+        def snapshot(self):
+            snap = self._snap
+            nodes = dict(snap.nodes)
+            for h in rng.sample(hosts, int(len(hosts) * churn)):
+                n = nodes[h]
+                nodes[h] = dataclasses.replace(
+                    n, load=round(rng.uniform(0.0, n.cores_total), 3),
+                    mem_used_gb=round(rng.uniform(0.0, n.mem_total_gb), 3))
+            jobs = list(snap.jobs)[1:]
+            jobs.append(dataclasses.replace(snap.jobs[0],
+                                            job_id=self._next_job))
+            self._next_job += 1
+            self._snap = ClusterSnapshot(snap.cluster,
+                                         snap.timestamp + 15.0, nodes,
+                                         jobs, dict(snap.user_emails))
+            return self._snap
+
+    # what one polling watcher would transfer: the full encoded snapshot
+    # of every tick (the byte-cache serves exactly these bytes)
+    polling_bytes = []
+    daemon = LLloadDaemon(ChurnSource(), ttl_s=1e9)
+    daemon.bus.subscribe(lambda name, snap: polling_bytes.append(
+        len(protocol.dumps(protocol.encode_snapshot(snap)))))
+    server, _ = serve_background(daemon)
+    host, port = server.server_address[:2]
+    url = f"http://{host}:{port}/stream?frames={n_ticks + 1}"
+
+    per_watcher = [0] * n_watchers
+    frames_seen = [0] * n_watchers
+
+    def watch(i):
+        with urllib.request.urlopen(url, timeout=120) as rsp:
+            for line in rsp:
+                line = line.strip()
+                if line:
+                    per_watcher[i] += len(line) + 1   # wire newline
+                    frames_seen[i] += 1
+
+    threads = [threading.Thread(target=watch, args=(i,))
+               for i in range(n_watchers)]
+    try:
+        for t in threads:
+            t.start()
+        deadline = time.monotonic() + 60.0
+        while daemon.hub.stats()["subscribers"] < n_watchers:
+            assert time.monotonic() < deadline, "watchers failed to join"
+            time.sleep(0.005)
+        t0 = time.perf_counter()
+        for _ in range(n_ticks):
+            daemon.bus.poll("churn")   # one encode, 64 enqueues
+        publish_dt = time.perf_counter() - t0
+        for t in threads:
+            t.join(timeout=120)
+    finally:
+        server.shutdown()
+        server.server_close()
+        daemon.close()
+
+    assert frames_seen == [n_ticks + 1] * n_watchers
+    assert len(set(per_watcher)) == 1     # byte-equal fan-out
+    assert len(polling_bytes) == n_ticks + 1
+    stream_b, poll_b = per_watcher[0], sum(polling_bytes)
+    reduction = poll_b / stream_b
+    tick_us = publish_dt / n_ticks * 1e6
+    _row("stream_fanout_512n_64w", tick_us,
+         f"frames={n_ticks + 1};byte_reduction={reduction:.1f}x")
+    _emit("stream", {
+        "nodes": 512,
+        "watchers": n_watchers,
+        "frames_per_watcher": n_ticks + 1,
+        "churn_node_frac": churn,
+        "stream_bytes_per_watcher": stream_b,
+        "polling_bytes_per_watcher": poll_b,
+        "byte_reduction_x": round(reduction, 2),
+        "publish_us_per_tick": round(tick_us, 1),
     })
 
 
@@ -710,6 +816,7 @@ BENCHES = [
     bench_snapshot_tsv,
     bench_bus_reads,
     bench_daemon,
+    bench_stream,
     bench_query,
     bench_insights,
     bench_experiments,

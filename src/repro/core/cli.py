@@ -179,13 +179,22 @@ def make_source_from_args(args):
                 f"--source remote: --cluster must name each --url "
                 f"one-to-one (got {len(clusters)} names for "
                 f"{len(urls)} URLs)")
+        # persistent consumers subscribe to the daemon's /stream push
+        # channel instead of re-polling full snapshots: --watch here,
+        # and the daemon's own fan-in (it sets args.stream); one-shots
+        # keep polling — a subscription for a single read buys nothing
+        stream = bool(getattr(args, "stream",
+                              getattr(args, "watch", False)))
         registry = default_registry()
-        sources = [registry.create("remote", url=u, cluster=c)
+        sources = [registry.create("remote", url=u, cluster=c,
+                                   stream=stream)
                    for u, c in zip(urls, clusters or [None] * len(urls))]
         if len(sources) == 1:
             return sources[0]
         from repro.monitor import MultiClusterSource
-        return MultiClusterSource(sources)
+        return MultiClusterSource(
+            sources,
+            max_staleness_s=getattr(args, "max_staleness", None))
     if getattr(args, "watch", False) and args.source == "sim":
         # advance simulated time on each poll so the stream evolves
         kwargs["advance_s"] = 60.0

@@ -9,17 +9,23 @@ daemons — consume it like any local source.
 """
 from repro.daemon.client import RemoteClient, RemoteError, RemoteSource
 from repro.daemon.promtext import parse_prometheus, render_prometheus
-from repro.daemon.protocol import (WIRE_VERSION, WireError, decode_snapshot,
+from repro.daemon.protocol import (STREAM_KEYFRAME_EVERY, WIRE_VERSION,
+                                   DeltaCodec, StreamDecoder,
+                                   StreamGapError, WireError, apply_delta,
+                                   decode_snapshot, diff_snapshot,
                                    encode_snapshot)
 from repro.daemon.server import (LLloadDaemon, serve, serve_background)
 from repro.daemon.store import (DEFAULT_TIERS, HistoryStore,
                                 JobHistoryStore, JobPoint, JobSample,
                                 TierPoint, TierSpec, job_sample)
+from repro.daemon.stream import StreamHub, StreamSubscription
 
 __all__ = [
-    "DEFAULT_TIERS", "HistoryStore", "JobHistoryStore", "JobPoint",
-    "JobSample", "LLloadDaemon", "RemoteClient",
-    "RemoteError", "RemoteSource", "TierPoint", "TierSpec", "WIRE_VERSION",
-    "WireError", "decode_snapshot", "encode_snapshot", "job_sample",
+    "DEFAULT_TIERS", "DeltaCodec", "HistoryStore", "JobHistoryStore",
+    "JobPoint", "JobSample", "LLloadDaemon", "RemoteClient",
+    "RemoteError", "RemoteSource", "STREAM_KEYFRAME_EVERY",
+    "StreamDecoder", "StreamGapError", "StreamHub", "StreamSubscription",
+    "TierPoint", "TierSpec", "WIRE_VERSION", "WireError", "apply_delta",
+    "decode_snapshot", "diff_snapshot", "encode_snapshot", "job_sample",
     "parse_prometheus", "render_prometheus", "serve", "serve_background",
 ]

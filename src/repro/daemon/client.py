@@ -12,17 +12,29 @@ Only stdlib ``urllib`` is used; the wire format is
 """
 from __future__ import annotations
 
+import threading
+import time
 import urllib.error
 import urllib.parse
 import urllib.request
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Iterator, Optional
 
 from repro.core.metrics import ClusterSnapshot
 from repro.daemon import protocol
 
 
 class RemoteError(RuntimeError):
-    """The daemon was unreachable or answered with an error."""
+    """The daemon was unreachable or answered with an error.
+
+    ``status`` carries the HTTP status when the daemon *answered* with an
+    error (e.g. 404 from an old daemon without ``/stream`` — the signal
+    for the streaming client to fall back to polling permanently), and is
+    ``None`` for transport failures.
+    """
+
+    def __init__(self, message: str, *, status: Optional[int] = None):
+        super().__init__(message)
+        self.status = status
 
 
 class RemoteClient:
@@ -49,8 +61,8 @@ class RemoteClient:
                 detail = f": {err.get('error', {}).get('message', '')}"
             except Exception:  # noqa: BLE001 — best-effort error detail
                 pass
-            raise RemoteError(
-                f"GET {url} -> HTTP {exc.code}{detail}") from exc
+            raise RemoteError(f"GET {url} -> HTTP {exc.code}{detail}",
+                              status=exc.code) from exc
         except (urllib.error.URLError, OSError) as exc:
             raise RemoteError(f"GET {url} failed: {exc}") from exc
 
@@ -113,6 +125,39 @@ class RemoteClient:
         not a traceback)."""
         return self._get(f"/job/{int(job_id)}").decode("utf-8")
 
+    def stream(self, *, frames: Optional[int] = None,
+               timeout_s: Optional[float] = None
+               ) -> Iterator[Dict[str, Any]]:
+        """GET /stream — yield parsed frame envelopes (DESIGN.md §14)
+        until the daemon ends the subscription (``frames=N`` bounds it
+        server-side) or the connection drops.  Feed the envelopes to a
+        :class:`~repro.daemon.protocol.StreamDecoder`; an old daemon
+        without the endpoint raises :class:`RemoteError` with
+        ``status=404`` (the polling-fallback signal)."""
+        url = self.url + "/stream"
+        if frames is not None:
+            url += f"?frames={int(frames)}"
+        try:
+            rsp = urllib.request.urlopen(
+                url, timeout=timeout_s if timeout_s is not None
+                else self.timeout_s)
+        except urllib.error.HTTPError as exc:
+            exc.read()
+            raise RemoteError(f"GET {url} -> HTTP {exc.code}",
+                              status=exc.code) from exc
+        except (urllib.error.URLError, OSError) as exc:
+            raise RemoteError(f"GET {url} failed: {exc}") from exc
+        try:
+            with rsp:
+                # HTTPResponse undoes the chunked transfer encoding;
+                # iteration yields the newline-terminated JSON lines
+                for line in rsp:
+                    line = line.strip()
+                    if line:
+                        yield protocol.loads(line)
+        except (urllib.error.URLError, OSError, ValueError) as exc:
+            raise RemoteError(f"stream from {url} died: {exc}") from exc
+
     def experiments(self, **params) -> str:
         """GET /experiments with the params passed through verbatim —
         a §V-B overloading campaign run (and memoized) server-side
@@ -123,7 +168,8 @@ class RemoteClient:
 
 
 class RemoteSource:
-    """A daemon as a :class:`MetricSource` — collection is a GET.
+    """A daemon as a :class:`MetricSource` — collection is a GET, or,
+    with ``stream=True``, a push subscription.
 
     ``interval_hint`` stays ``None`` unless the caller sets it: probing
     the daemon for its TTL would add a blocking round-trip to one-shot
@@ -131,16 +177,148 @@ class RemoteSource:
     its failure-isolating thread fan-out can help), while over-polling
     is already harmless — requests inside the daemon's TTL window are
     answered from its byte-cache.
+
+    **Streaming mode** (``stream=True``, what ``--watch`` and
+    daemon-over-daemon fan-in use): a background reader consumes
+    ``GET /stream`` through a :class:`~repro.daemon.protocol.
+    StreamDecoder`, so ``snapshot()`` returns the latest pushed state
+    without a per-poll round trip — byte-identical (under
+    ``encode_snapshot``) to what polling would have fetched.  A sequence
+    gap or torn frame triggers an automatic resubscribe (keyframe
+    resync, counted in :attr:`resyncs`); a daemon without ``/stream``
+    (HTTP 404) flips the source to polling permanently; and when the
+    connection is down *and* the last good frame is older than
+    ``stale_after_s``, ``snapshot()`` raises :class:`RemoteError`
+    instead of serving an unboundedly stale frame — the caller
+    (``MultiClusterSource``) decides what staleness policy to apply,
+    never a silently frozen view.
     """
+
+    # reconnect pause after a dropped stream: long enough not to spin
+    # against a dead daemon, short enough that a restarted one is
+    # re-joined within a frame interval
+    RETRY_DELAY_S = 0.2
 
     def __init__(self, url: str, *, name: Optional[str] = None,
                  timeout_s: float = 10.0,
-                 interval_hint: Optional[float] = None):
+                 interval_hint: Optional[float] = None,
+                 stream: bool = False,
+                 stale_after_s: float = 10.0):
         self.client = RemoteClient(url, timeout_s=timeout_s)
         host = urllib.parse.urlsplit(self.client.url).netloc
         self.name = name or f"remote:{host}"
         self.interval_hint = interval_hint
+        self.stream = bool(stream)
+        self.stale_after_s = stale_after_s
+        self._lock = threading.Lock()
+        self._reader: Optional[threading.Thread] = None  # guarded-by: _lock
+        self._snap: Optional[ClusterSnapshot] = None     # guarded-by: _lock
+        self._last_frame_at: Optional[float] = None      # guarded-by: _lock
+        self._connected = False                          # guarded-by: _lock
+        self._unsupported = False                        # guarded-by: _lock
+        self._closed = False                             # guarded-by: _lock
+        self._last_stream_error: Optional[Exception] = None  # guarded-by: _lock
+        self.resyncs = 0                                 # guarded-by: _lock
+        self._first_frame = threading.Event()
 
+    # ------------------------------------------------------------ streaming
+    def _ensure_reader(self) -> None:
+        with self._lock:
+            if self._closed:
+                raise RemoteError(f"source {self.name!r} is closed")
+            if self._reader is None or not self._reader.is_alive():
+                self._reader = threading.Thread(
+                    target=self._read_stream,
+                    name=f"stream-{self.name}", daemon=True)
+                self._reader.start()
+
+    def _read_stream(self) -> None:
+        decoder = protocol.StreamDecoder()
+        while True:
+            with self._lock:
+                if self._closed:
+                    return
+            try:
+                for obj in self.client.stream(
+                        timeout_s=self.client.timeout_s):
+                    try:
+                        snap = decoder.feed(obj)
+                    except protocol.StreamGapError as exc:
+                        # missed at least one delta: resubscribe — the
+                        # new subscription starts with a keyframe
+                        decoder.reset()
+                        with self._lock:
+                            self.resyncs += 1
+                            self._last_stream_error = exc
+                        break
+                    with self._lock:
+                        if self._closed:
+                            return
+                        self._connected = True
+                        self._snap = snap
+                        self._last_frame_at = time.monotonic()
+                    self._first_frame.set()
+                else:
+                    # clean end of subscription (daemon drained on
+                    # SIGTERM, or a bounded test subscription): resync
+                    decoder.reset()
+                    with self._lock:
+                        self.resyncs += 1
+            except RemoteError as exc:
+                decoder.reset()
+                with self._lock:
+                    self._last_stream_error = exc
+                    if exc.status == 404:
+                        # old daemon without /stream: poll forever after
+                        self._unsupported = True
+                        self._first_frame.set()
+                        return
+            except protocol.WireError as exc:     # torn / garbage frame
+                decoder.reset()
+                with self._lock:
+                    self.resyncs += 1
+                    self._last_stream_error = exc
+            with self._lock:
+                self._connected = False
+                if self._closed:
+                    return
+            time.sleep(self.RETRY_DELAY_S)
+
+    def close(self) -> None:
+        """Stop the background stream reader (idempotent; the thread is
+        a daemon thread, so this is for deterministic tests)."""
+        with self._lock:
+            self._closed = True
+            self._connected = False
+        self._first_frame.set()
+
+    # -------------------------------------------------------------- collect
     def snapshot(self) -> ClusterSnapshot:
-        """One collection == one GET /snapshot round trip."""
-        return self.client.snapshot()
+        """One collection: a GET /snapshot round trip (polling), or the
+        latest pushed frame (streaming)."""
+        if not self.stream:
+            return self.client.snapshot()
+        self._ensure_reader()
+        deadline = time.monotonic() + self.client.timeout_s
+        while True:
+            with self._lock:
+                unsupported = self._unsupported
+                snap = self._snap
+                connected = self._connected
+                at = self._last_frame_at
+                err = self._last_stream_error
+            if unsupported:
+                return self.client.snapshot()
+            if snap is not None:
+                if connected or (time.monotonic() - at
+                                 <= self.stale_after_s):
+                    return snap
+                raise RemoteError(
+                    f"stream from {self.client.url} has been down for "
+                    f"{time.monotonic() - at:.1f}s (> stale_after_s="
+                    f"{self.stale_after_s}); last error: {err}")
+            if time.monotonic() >= deadline:
+                raise RemoteError(
+                    f"no stream frame from {self.client.url} within "
+                    f"{self.client.timeout_s}s; last error: {err}")
+            self._first_frame.wait(0.05)

@@ -15,11 +15,23 @@ The snapshot codec is **lossless**: ``decode_snapshot(encode_snapshot(s))``
 reproduces every node, job, email and float bit-for-bit (JSON round-trips
 Python floats exactly via ``repr``), which is what makes a remote
 ``LLload`` render byte-identical views.
+
+The streaming layer (DESIGN.md §14) rides on the same envelope as
+``kind="frame"``: a ``full`` keyframe carries a whole snapshot payload, a
+``delta`` frame carries only the nodes/jobs/emails that changed since the
+previous frame, and every frame carries a monotonic ``seq`` so a consumer
+detects a dropped frame as a gap and resyncs from the next keyframe.
+:class:`DeltaCodec` produces frames (one keyframe every
+``keyframe_every`` frames), :class:`StreamDecoder` consumes them; the
+contract — property-tested in ``tests/test_stream_delta.py`` — is that
+applying a delta reproduces the next snapshot **byte-identically**
+(``dumps(encode_snapshot(...))`` equality), so a streaming client renders
+the exact bytes a polling client would.
 """
 from __future__ import annotations
 
 import json
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 from repro.core.metrics import ClusterSnapshot, JobRecord, NodeSnapshot
 
@@ -41,9 +53,30 @@ _JOB_FIELDS = [
     "submit_time", "gpu_duty", "cpu_load", "mem_used_gb", "step_time_s",
 ]
 
+# stream frame payload fields (kind="frame"; locked by llcheck LL002).
+# A full keyframe carries "snapshot"; a delta carries the *_upsert /
+# *_remove sets.  Optional fields are omitted when empty — decoders use
+# .get(), so absence and emptiness are indistinguishable (by design:
+# omitting empty sets is where the ≤5%-churn byte reduction comes from).
+_FRAME_FIELDS = ["type", "seq", "snapshot"]
+_DELTA_FIELDS = [
+    "type", "seq", "cluster", "timestamp",
+    "nodes_upsert", "nodes_remove", "node_order",
+    "jobs_upsert", "jobs_remove", "job_order", "emails",
+]
+
+# keyframe cadence: a full snapshot every N frames bounds how far a
+# resyncing client can lag while keeping the steady state delta-sized
+STREAM_KEYFRAME_EVERY = 32
+
 
 class WireError(ValueError):
     """Malformed or incompatible wire payload."""
+
+
+class StreamGapError(WireError):
+    """A frame arrived out of sequence — the consumer missed at least one
+    delta and must resync from a keyframe (resubscribe)."""
 
 
 # ------------------------------------------------------------------ encode
@@ -54,21 +87,32 @@ def envelope(kind: str, payload: Any) -> Dict[str, Any]:
     return {"v": WIRE_VERSION, "kind": kind, kind: payload}
 
 
-def encode_snapshot(snap: ClusterSnapshot) -> Dict[str, Any]:
-    """A snapshot as its wire envelope (losslessly: every node, job,
-    email and float survives the round trip)."""
-    payload = {
+def _node_dict(n: NodeSnapshot) -> Dict[str, Any]:
+    return {f: getattr(n, f) for f in _NODE_FIELDS}
+
+
+def _job_dict(j: JobRecord) -> Dict[str, Any]:
+    return {f: getattr(j, f) for f in _JOB_FIELDS}
+
+
+def _snapshot_payload(snap: ClusterSnapshot) -> Dict[str, Any]:
+    """The bare snapshot payload (shared by ``kind="snapshot"`` envelopes
+    and the ``"snapshot"`` field of full stream keyframes)."""
+    return {
         "cluster": snap.cluster,
         "timestamp": snap.timestamp,
         # insertion order is preserved through JSON objects, so node
         # iteration order survives the round trip
-        "nodes": [{f: getattr(n, f) for f in _NODE_FIELDS}
-                  for n in snap.nodes.values()],
-        "jobs": [{f: getattr(j, f) for f in _JOB_FIELDS}
-                 for j in snap.jobs],
+        "nodes": [_node_dict(n) for n in snap.nodes.values()],
+        "jobs": [_job_dict(j) for j in snap.jobs],
         "user_emails": dict(snap.user_emails),
     }
-    return envelope("snapshot", payload)
+
+
+def encode_snapshot(snap: ClusterSnapshot) -> Dict[str, Any]:
+    """A snapshot as its wire envelope (losslessly: every node, job,
+    email and float survives the round trip)."""
+    return envelope("snapshot", _snapshot_payload(snap))
 
 
 def encode_error(message: str, status: int = 500) -> Dict[str, Any]:
@@ -99,19 +143,21 @@ def _check_envelope(obj: Any, kind: str) -> Dict[str, Any]:
     return obj[kind]
 
 
-def decode_snapshot(obj: Any) -> ClusterSnapshot:
-    """Decode a snapshot envelope back to a typed ClusterSnapshot;
-    unknown fields are ignored, malformed payloads raise WireError."""
-    payload = _check_envelope(obj, "snapshot")
+def _decode_node(nd: Dict[str, Any]) -> NodeSnapshot:
+    return NodeSnapshot(**{f: nd[f] for f in _NODE_FIELDS})
+
+
+def _decode_job(jd: Dict[str, Any]) -> JobRecord:
+    return JobRecord(**{f: jd[f] for f in _JOB_FIELDS if f in jd})
+
+
+def _decode_snapshot_payload(payload: Dict[str, Any]) -> ClusterSnapshot:
     try:
         nodes: Dict[str, NodeSnapshot] = {}
         for nd in payload["nodes"]:
-            node = NodeSnapshot(**{f: nd[f] for f in _NODE_FIELDS})
+            node = _decode_node(nd)
             nodes[node.hostname] = node
-        jobs: List[JobRecord] = []
-        for jd in payload["jobs"]:
-            jobs.append(JobRecord(**{f: jd[f] for f in _JOB_FIELDS
-                                     if f in jd}))
+        jobs: List[JobRecord] = [_decode_job(jd) for jd in payload["jobs"]]
         return ClusterSnapshot(
             cluster=payload["cluster"],
             timestamp=payload["timestamp"],
@@ -121,9 +167,220 @@ def decode_snapshot(obj: Any) -> ClusterSnapshot:
         raise WireError(f"malformed snapshot payload: {exc}") from exc
 
 
+def decode_snapshot(obj: Any) -> ClusterSnapshot:
+    """Decode a snapshot envelope back to a typed ClusterSnapshot;
+    unknown fields are ignored, malformed payloads raise WireError."""
+    return _decode_snapshot_payload(_check_envelope(obj, "snapshot"))
+
+
 def loads(data: bytes) -> Any:
     """Parse response bytes as JSON; raises WireError when not JSON."""
     try:
         return json.loads(data.decode("utf-8"))
     except (UnicodeDecodeError, json.JSONDecodeError) as exc:
         raise WireError(f"not JSON: {exc}") from exc
+
+
+# ----------------------------------------------------------------- stream
+
+def _patched_order(prev_keys: List, removed: set,
+                   upsert_keys: List) -> List:
+    """The key order a delta consumer derives without an explicit order
+    list: previous order minus removals, new keys appended in upsert
+    order.  The producer emits ``node_order``/``job_order`` only when the
+    real order disagrees with this derivation (it almost never does —
+    fleets are stable, job ids grow), which keeps deltas small."""
+    prev_set = set(prev_keys)
+    return ([k for k in prev_keys if k not in removed]
+            + [k for k in upsert_keys if k not in prev_set])
+
+
+def diff_snapshot(prev: ClusterSnapshot,
+                  cur: ClusterSnapshot) -> Optional[Dict[str, Any]]:
+    """The delta payload fields turning ``prev`` into ``cur`` (without
+    ``type``/``seq`` — the codec adds those), or ``None`` when the pair
+    is not delta-representable (duplicate job ids: merged multi-cluster
+    snapshots may repeat an id, and a keyed upsert would corrupt them —
+    the codec falls back to a full keyframe)."""
+    prev_job_ids = [j.job_id for j in prev.jobs]
+    cur_job_ids = [j.job_id for j in cur.jobs]
+    if (len(set(prev_job_ids)) != len(prev_job_ids)
+            or len(set(cur_job_ids)) != len(cur_job_ids)):
+        return None
+
+    out: Dict[str, Any] = {"cluster": cur.cluster,
+                           "timestamp": cur.timestamp}
+
+    nodes_remove = [h for h in prev.nodes if h not in cur.nodes]
+    nodes_upsert = [_node_dict(n) for h, n in cur.nodes.items()
+                    if h not in prev.nodes or prev.nodes[h] != n]
+    if nodes_upsert:
+        out["nodes_upsert"] = nodes_upsert
+    if nodes_remove:
+        out["nodes_remove"] = nodes_remove
+    derived = _patched_order(list(prev.nodes), set(nodes_remove),
+                             [nd["hostname"] for nd in nodes_upsert])
+    if derived != list(cur.nodes):
+        out["node_order"] = list(cur.nodes)
+
+    prev_jobs = {j.job_id: j for j in prev.jobs}
+    cur_jobs = {j.job_id: j for j in cur.jobs}
+    jobs_remove = [i for i in prev_job_ids if i not in cur_jobs]
+    jobs_upsert = [_job_dict(j) for j in cur.jobs
+                   if j.job_id not in prev_jobs
+                   or prev_jobs[j.job_id] != j]
+    if jobs_upsert:
+        out["jobs_upsert"] = jobs_upsert
+    if jobs_remove:
+        out["jobs_remove"] = jobs_remove
+    derived = _patched_order(prev_job_ids, set(jobs_remove),
+                             [jd["job_id"] for jd in jobs_upsert])
+    if derived != cur_job_ids:
+        out["job_order"] = cur_job_ids
+
+    # emails are small (one entry per user): ship the whole dict when
+    # anything — value *or insertion order* — changed, else omit it
+    if (list(prev.user_emails.items())
+            != list(cur.user_emails.items())):
+        out["emails"] = dict(cur.user_emails)
+    return out
+
+
+def apply_delta(prev: ClusterSnapshot,
+                delta: Dict[str, Any]) -> ClusterSnapshot:
+    """Apply a delta payload to ``prev``; the result is byte-identical
+    (under ``dumps(encode_snapshot(...))``) to the snapshot the producer
+    diffed against.  Malformed or inapplicable deltas raise WireError."""
+    prev_job_ids = [j.job_id for j in prev.jobs]
+    if len(set(prev_job_ids)) != len(prev_job_ids):
+        raise WireError("cannot apply a delta over duplicate job ids")
+    try:
+        cluster = delta["cluster"]
+        timestamp = delta["timestamp"]
+        node_upserts = {nd["hostname"]: _decode_node(nd)
+                        for nd in delta.get("nodes_upsert", [])}
+        job_upserts = {jd["job_id"]: _decode_job(jd)
+                       for jd in delta.get("jobs_upsert", [])}
+    except (KeyError, TypeError) as exc:
+        raise WireError(f"malformed delta payload: {exc}") from exc
+
+    removed = set(delta.get("nodes_remove", []))
+    order = delta.get("node_order")
+    if order is None:
+        order = _patched_order(list(prev.nodes), removed,
+                               list(node_upserts))
+    nodes: Dict[str, NodeSnapshot] = {}
+    for host in order:
+        node = node_upserts.get(host)
+        if node is None:
+            node = prev.nodes.get(host)
+        if node is None or host in removed and host not in node_upserts:
+            raise WireError(f"delta references unknown node {host!r}")
+        nodes[host] = node
+
+    prev_jobs = {j.job_id: j for j in prev.jobs}
+    jremoved = set(delta.get("jobs_remove", []))
+    jorder = delta.get("job_order")
+    if jorder is None:
+        jorder = _patched_order(prev_job_ids, jremoved, list(job_upserts))
+    jobs: List[JobRecord] = []
+    for job_id in jorder:
+        job = job_upserts.get(job_id)
+        if job is None:
+            job = prev_jobs.get(job_id)
+        if job is None or job_id in jremoved and job_id not in job_upserts:
+            raise WireError(f"delta references unknown job {job_id!r}")
+        jobs.append(job)
+
+    emails = delta.get("emails")
+    if emails is None:
+        emails = dict(prev.user_emails)
+    return ClusterSnapshot(cluster=cluster, timestamp=timestamp,
+                           nodes=nodes, jobs=jobs,
+                           user_emails=dict(emails))
+
+
+class DeltaCodec:
+    """Stateful frame producer: a ``full`` keyframe first and every
+    ``keyframe_every`` frames, ``delta`` frames between, each carrying a
+    monotonic ``seq``.  Pairs that are not delta-representable (see
+    :func:`diff_snapshot`) fall back to keyframes transparently.
+
+    Not thread-safe: the :class:`~repro.daemon.stream.StreamHub` owns one
+    codec and serializes ``encode`` under its lock.
+    """
+
+    def __init__(self, *, keyframe_every: int = STREAM_KEYFRAME_EVERY):
+        self.keyframe_every = max(1, int(keyframe_every))
+        self.seq = 0
+        self._prev: Optional[ClusterSnapshot] = None
+        self._since_keyframe = 0
+
+    def encode(self, snap: ClusterSnapshot) -> Dict[str, Any]:
+        """The next frame envelope for ``snap`` (full or delta)."""
+        self.seq += 1
+        delta = None
+        if (self._prev is not None
+                and self._since_keyframe < self.keyframe_every):
+            delta = diff_snapshot(self._prev, snap)
+        self._prev = snap
+        if delta is None:
+            self._since_keyframe = 1
+            return envelope("frame", {
+                "type": "full", "seq": self.seq,
+                "snapshot": _snapshot_payload(snap)})
+        self._since_keyframe += 1
+        payload: Dict[str, Any] = {"type": "delta", "seq": self.seq}
+        payload.update(delta)
+        return envelope("frame", payload)
+
+    def keyframe(self) -> Optional[Dict[str, Any]]:
+        """A full frame at the **current** seq — what a subscriber joining
+        (or resyncing after a gap) receives so the deltas that follow
+        apply contiguously.  ``None`` before the first ``encode``."""
+        if self._prev is None:
+            return None
+        return envelope("frame", {
+            "type": "full", "seq": self.seq,
+            "snapshot": _snapshot_payload(self._prev)})
+
+
+class StreamDecoder:
+    """Stateful frame consumer: keyframes (re)set the state, deltas must
+    arrive with contiguous ``seq`` — a gap raises
+    :class:`StreamGapError`, telling the caller to resubscribe for a
+    keyframe instead of silently rendering a corrupted snapshot."""
+
+    def __init__(self):
+        self.seq: Optional[int] = None
+        self.snapshot: Optional[ClusterSnapshot] = None
+
+    def reset(self) -> None:
+        """Forget all state (before resubscribing for a keyframe)."""
+        self.seq = None
+        self.snapshot = None
+
+    def feed(self, obj: Any) -> ClusterSnapshot:
+        """Consume one frame envelope; returns the up-to-date snapshot."""
+        payload = _check_envelope(obj, "frame")
+        seq = payload.get("seq")
+        if not isinstance(seq, int):
+            raise WireError(f"frame without integer seq: {seq!r}")
+        ftype = payload.get("type")
+        if ftype == "full":
+            if "snapshot" not in payload:
+                raise WireError("full frame without a snapshot payload")
+            snap = _decode_snapshot_payload(payload["snapshot"])
+            self.seq, self.snapshot = seq, snap
+            return snap
+        if ftype == "delta":
+            if self.snapshot is None or self.seq is None:
+                raise StreamGapError(
+                    f"delta seq {seq} arrived before any keyframe")
+            if seq != self.seq + 1:
+                raise StreamGapError(
+                    f"sequence gap: have {self.seq}, got {seq}")
+            snap = apply_delta(self.snapshot, payload)
+            self.seq, self.snapshot = seq, snap
+            return snap
+        raise WireError(f"unknown frame type {ftype!r}")

@@ -28,15 +28,22 @@ Endpoints (all GET):
                          table; deterministic per spec, memoized
     /trend?window=S      downsampled series from the history store
     /weekly              weekly low/over-utilization report from tiers
+    /stream?frames=N     chunked JSON-lines frame stream (DESIGN.md §14):
+                         a full keyframe on subscribe, deltas after, each
+                         with a monotonic seq; ?frames bounds the
+                         subscription server-side
     /healthz             liveness + wire version
-    /stats               bus / store / request counters (JSON)
+    /stats               bus / store / request / stream counters (JSON)
     /metrics             Prometheus text exposition
 
 This is the repo's first request-serving hot path: responses for the
 cacheable endpoints are encoded **once** per TTL window and the same
 bytes are handed to every concurrent reader — N readers cost one
 collection *and* one JSON encode (`/stats` shows ``http_cache_hits``
-doing the work).
+doing the work).  ``/stream`` extends the same amortization to watchers:
+one delta encode per collection is fanned out to every subscriber by the
+:class:`~repro.daemon.stream.StreamHub`, so steady-state watch traffic
+is O(changed nodes), not O(nodes), per interval.
 """
 from __future__ import annotations
 
@@ -51,6 +58,7 @@ from repro.core import formatting
 from repro.daemon import promtext, protocol
 from repro.daemon.store import (HistoryStore, JobHistoryStore,
                                 as_snapshots, job_sample)
+from repro.daemon.stream import DEFAULT_QUEUE_MAX, StreamHub
 from repro.insights import InsightEngine
 from repro.monitor import TelemetryBus, build_source
 from repro.query import (Query, QueryError, advise_query, apply_modifiers,
@@ -72,8 +80,10 @@ _CACHEABLE = ("/snapshot", "/query", "/view/", "/metrics", "/trend",
 _KNOWN_ENDPOINTS = frozenset([
     "/snapshot", "/query", "/view/user", "/view/top", "/view/nodes",
     "/insights", "/experiments", "/trend", "/weekly", "/healthz",
-    "/stats", "/metrics", "/job",
+    "/stats", "/metrics", "/job", "/stream",
 ])
+
+STREAM_CT = "application/x-ndjson; charset=utf-8"
 
 
 class HTTPError(Exception):
@@ -90,7 +100,10 @@ class LLloadDaemon:
     def __init__(self, source, *, ttl_s: float = 2.0,
                  store: Optional[HistoryStore] = None,
                  privileged: Optional[set] = None,
-                 history: int = 64, storage=None):
+                 history: int = 64, storage=None,
+                 stream_keyframe_every: int =
+                 protocol.STREAM_KEYFRAME_EVERY,
+                 stream_queue_max: int = DEFAULT_QUEUE_MAX):
         self.bus = TelemetryBus(ttl_s=ttl_s, history=history)
         self.bus.register(source)
         self.source = source
@@ -115,6 +128,11 @@ class LLloadDaemon:
         self.jobstore = JobHistoryStore(
             backend=storage.jobs if storage is not None else None)
         self.bus.subscribe(self.jobstore.subscriber(source.name))
+        # the stream hub subscribes like the stores: every new collection
+        # is delta-encoded once and fanned out to /stream subscribers
+        self.hub = StreamHub(keyframe_every=stream_keyframe_every,
+                             queue_max=stream_queue_max)
+        self.bus.subscribe(self.hub.publish)
         if storage is not None:
             self.recovered = {"history": self.store.recover(),
                               "jobs": self.jobstore.recover()}
@@ -158,11 +176,30 @@ class LLloadDaemon:
         return n
 
     def close(self):
-        """Stop the background sampler and, when durable storage is
-        attached, its compactor + segment writers (idempotent)."""
+        """Stop the background sampler, wake every /stream subscriber
+        with a sentinel (SIGTERM drains cleanly) and, when durable
+        storage is attached, stop its compactor + segment writers
+        (idempotent)."""
         self.bus.stop()
+        self.hub.close()
         if self.storage is not None:
             self.storage.close()
+
+    # -------------------------------------------------------------- stream
+    def stream_subscribe(self, *, frames: Optional[int] = None):
+        """Register a ``/stream`` subscriber: primes the hub with a
+        current snapshot if nothing was ever published (a frozen daemon
+        still owes the subscriber one keyframe), then subscribes — the
+        first delivered frame is always a keyframe at the current seq."""
+        if self.hub.empty():
+            try:
+                # reading the bus publishes through the subscriber chain
+                # when it collects; prime() covers the cached-read case
+                self.hub.prime(self.bus.read(self.source.name))
+            except Exception as exc:  # noqa: BLE001 — surfaced as HTTP 503
+                raise HTTPError(
+                    503, f"source collection failed: {exc}") from exc
+        return self.hub.subscribe(frames=frames)
 
     # ------------------------------------------------------------ counters
     def counters(self) -> Dict[str, float]:
@@ -177,7 +214,23 @@ class LLloadDaemon:
         st = self.bus.stats(self.source.name)
         out["bus_collections_total"] = float(st.collections)
         out["bus_reads_total"] = float(st.reads)
+        hub = self.hub.stats()
+        out["stream_frames_sent_total"] = hub["frames_sent"]
+        out["stream_evicted_total"] = hub["evicted"]
+        out["stream_resyncs_total"] = hub["resyncs"]
         return out
+
+    def count_request(self, endpoint: str) -> None:
+        """Count one request against a bounded endpoint label (the
+        ``/stream`` handler bypasses :meth:`handle`, so it counts here)."""
+        endpoint = endpoint if endpoint in _KNOWN_ENDPOINTS else "other"
+        with self._lock:
+            self._requests[endpoint] = self._requests.get(endpoint, 0) + 1
+
+    def count_error(self) -> None:
+        """Count one HTTP error response (``/stream`` handler path)."""
+        with self._lock:
+            self._errors += 1
 
     # ------------------------------------------------------------- handle
     def handle(self, path: str,
@@ -276,9 +329,19 @@ class LLloadDaemon:
                         "collections": st.collections, "errors": st.errors},
                 "store": self.store.sizes(),
                 "jobstore": self.jobstore.sizes(),
+                "stream": self.hub.stats(),
                 "http": self.counters()}
             if self.storage is not None:
                 payload["storage"] = self.storage.stats()
+            if hasattr(self.source, "stale_children"):
+                # fan-in daemon: surface per-child health so an operator
+                # sees a severed child as a count, not a frozen merge
+                stale = self.source.stale_children()
+                payload["fanin"] = {
+                    "stale_children": len(stale),
+                    "stale": {k: round(v, 3) for k, v in stale.items()},
+                    "staleness": {k: round(v, 3) for k, v in
+                                  self.source.staleness().items()}}
             return 200, JSON_CT, protocol.dumps(payload)
         if path == "/snapshot":
             snap = self.bus.read(self.source.name)
@@ -530,6 +593,9 @@ class _Handler(BaseHTTPRequestHandler):
         parsed = urllib.parse.urlsplit(self.path)
         query = {k: v[-1] for k, v in
                  urllib.parse.parse_qs(parsed.query).items()}
+        if parsed.path == "/stream":
+            self._do_stream(query)
+            return
         status, ctype, body = self.server.daemon.handle(parsed.path, query)
         self.send_response(status)
         self.send_header("Content-Type", ctype)
@@ -539,6 +605,61 @@ class _Handler(BaseHTTPRequestHandler):
             self.wfile.write(body)
         except (BrokenPipeError, ConnectionResetError):
             pass                       # client went away mid-response
+
+    def _do_stream(self, query: Dict[str, str]):
+        """Serve ``GET /stream``: subscribe to the hub and relay frames
+        as chunked JSON lines until the subscription ends (hub close,
+        slow-consumer eviction, ?frames delivered) or the client hangs
+        up.  This is the one endpoint that holds its connection open, so
+        it bypasses the byte-cache/Content-Length path entirely."""
+        daemon = self.server.daemon
+        daemon.count_request("/stream")
+        try:
+            frames = None
+            if "frames" in query:
+                try:
+                    frames = int(query["frames"])
+                except ValueError as exc:
+                    raise HTTPError(400,
+                                    "?frames must be an integer") from exc
+                if frames <= 0:
+                    raise HTTPError(400, "?frames must be > 0")
+            sub = daemon.stream_subscribe(frames=frames)
+        except HTTPError as exc:
+            daemon.count_error()
+            body = protocol.dumps(protocol.encode_error(exc.message,
+                                                        exc.status))
+            self.send_response(exc.status)
+            self.send_header("Content-Type", JSON_CT)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            try:
+                self.wfile.write(body)
+            except (BrokenPipeError, ConnectionResetError):
+                pass
+            return
+        self.send_response(200)
+        self.send_header("Content-Type", STREAM_CT)
+        self.send_header("Transfer-Encoding", "chunked")
+        self.send_header("Cache-Control", "no-store")
+        self.end_headers()
+        try:
+            while True:
+                item = sub.get(timeout=0.5)
+                if item is None:
+                    break               # sentinel: stream ended cleanly
+                if item == b"":
+                    if sub.closed or sub.evicted:
+                        break           # ended while we were waiting
+                    continue            # idle poll: nothing collected yet
+                self.wfile.write(b"%X\r\n" % len(item) + item + b"\r\n")
+                self.wfile.flush()
+            self.wfile.write(b"0\r\n\r\n")
+        except (BrokenPipeError, ConnectionResetError):
+            pass                        # client went away mid-stream
+        finally:
+            daemon.hub.unsubscribe(sub)
+            self.close_connection = True
 
     def log_message(self, fmt, *args):  # noqa: D102 — quiet by default
         pass
@@ -617,7 +738,15 @@ def main(argv=None) -> int:
                     help="TSV archive root for --source archive")
     ap.add_argument("--url", default=None, metavar="URL[,URL]",
                     help="upstream daemon URL(s) for --source remote "
-                         "(cluster-of-clusters)")
+                         "(cluster-of-clusters); children are consumed "
+                         "via their /stream push channel, falling back "
+                         "to polling against pre-stream daemons")
+    ap.add_argument("--max-staleness", type=_positive_float, default=None,
+                    metavar="S", help="multi-child fan-in: drop a "
+                    "failing child from merges once its last good "
+                    "snapshot is older than S seconds (surfaced as "
+                    "stale_children in /stats; default: serve the last "
+                    "good snapshot indefinitely)")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8080,
                     help="0 picks an ephemeral port")
@@ -655,6 +784,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from repro.core.cli import make_source_from_args
+    # daemon-over-daemon fan-in is a persistent consumer: subscribe to
+    # each child's /stream instead of re-polling full snapshots per tick
+    args.stream = True
     source = make_source_from_args(args)
 
     storage = None

@@ -1,0 +1,202 @@
+"""StreamHub — one delta encode per tick, fanned out to N subscribers.
+
+The hub is a :class:`~repro.monitor.bus.TelemetryBus` subscriber: every
+new collection is encoded **once** through a shared
+:class:`~repro.daemon.protocol.DeltaCodec` and the resulting frame bytes
+are enqueued to every subscriber's bounded queue — N watchers cost one
+diff and one JSON encode, the same amortization the daemon's byte-cache
+gives one-shot readers (DESIGN.md §14).
+
+Backpressure is eviction, not blocking: a subscriber whose queue is full
+(a stalled client, a dead TCP peer the OS has not noticed yet) is
+dropped and counted in ``evicted`` — the collection path must never
+block on the slowest reader.  An evicted client sees its stream end,
+resubscribes, and resyncs from the keyframe every new subscription
+starts with (counted in ``resyncs``).
+
+``close()`` pushes a sentinel to every subscriber so handler threads
+drain promptly on SIGTERM instead of waiting out their poll timeout.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Optional
+
+from repro.core.metrics import ClusterSnapshot
+from repro.daemon import protocol
+
+# per-subscriber queue depth: deep enough to absorb a render hiccup at
+# watch cadence, shallow enough that a dead peer is evicted within a few
+# keyframe periods instead of buffering unboundedly
+DEFAULT_QUEUE_MAX = 256
+
+
+class StreamSubscription:
+    """One subscriber's end of the hub: a bounded FIFO of frame bytes.
+
+    ``get(timeout)`` returns the next newline-terminated frame, ``None``
+    when the stream ended (hub closed, eviction, or the requested frame
+    limit was delivered).  Only the hub enqueues.
+    """
+
+    def __init__(self, maxsize: int, limit: Optional[int]):
+        self.queue: "queue.Queue[Optional[bytes]]" = queue.Queue(maxsize)
+        self.limit = limit          # frames to deliver; None = unbounded
+        self.sent = 0               # guarded-by: the hub's _lock
+        self.evicted = False        # guarded-by: the hub's _lock
+        self.closed = False         # guarded-by: the hub's _lock
+
+    def get(self, timeout: Optional[float] = None) -> Optional[bytes]:
+        """The next frame: bytes, ``b""`` on timeout (poll again), or
+        ``None`` when the stream ended."""
+        try:
+            return self.queue.get(timeout=timeout)
+        except queue.Empty:
+            return b""              # caller decides: poll again or bail
+
+
+class StreamHub:
+    """Per-daemon fan-out of :class:`DeltaCodec` frames (DESIGN.md §14).
+
+    ``publish`` has the bus subscriber signature ``fn(name, snapshot)``;
+    ``subscribe`` returns a :class:`StreamSubscription` whose first frame
+    is always a ``full`` keyframe at the codec's current seq, so the
+    deltas that follow apply contiguously.
+    """
+
+    def __init__(self, *,
+                 keyframe_every: int = protocol.STREAM_KEYFRAME_EVERY,
+                 queue_max: int = DEFAULT_QUEUE_MAX):
+        self._codec = protocol.DeltaCodec(keyframe_every=keyframe_every)
+        self._queue_max = max(2, int(queue_max))
+        self._lock = threading.Lock()
+        self._subs: Dict[int, StreamSubscription] = {}  # guarded-by: _lock
+        self._next_id = 0                               # guarded-by: _lock
+        self._closed = False                            # guarded-by: _lock
+        self._frames_sent = 0                           # guarded-by: _lock
+        self._evicted = 0                               # guarded-by: _lock
+        self._resyncs = 0                               # guarded-by: _lock
+        self._subscribed_total = 0                      # guarded-by: _lock
+
+    # ------------------------------------------------------------ counters
+    def stats(self) -> Dict[str, float]:
+        """The ``/stats`` stream section (and ``/metrics`` counters)."""
+        with self._lock:
+            return {
+                "subscribers": float(len(self._subs)),
+                "subscribed_total": float(self._subscribed_total),
+                "frames_sent": float(self._frames_sent),
+                "evicted": float(self._evicted),
+                "resyncs": float(self._resyncs),
+                "seq": float(self._codec.seq),
+            }
+
+    def empty(self) -> bool:
+        """True until the hub has seen its first snapshot."""
+        with self._lock:
+            return self._codec.seq == 0
+
+    # ------------------------------------------------------------- publish
+    def publish(self, source_name: str, snap: ClusterSnapshot) -> None:
+        """Bus subscriber hook: encode once, enqueue everywhere."""
+        with self._lock:
+            if self._closed:
+                return
+            data = protocol.dumps(self._codec.encode(snap)) + b"\n"
+            for sid in list(self._subs):
+                self._offer(sid, data)
+
+    def prime(self, snap: ClusterSnapshot) -> None:
+        """Seed the codec with an initial snapshot if nothing has been
+        published yet (a frozen daemon whose bus never re-collects still
+        owes new subscribers one keyframe)."""
+        with self._lock:
+            if self._closed or self._codec.seq != 0:
+                return
+            data = protocol.dumps(self._codec.encode(snap)) + b"\n"
+            for sid in list(self._subs):
+                self._offer(sid, data)
+
+    def _offer(self, sid: int, data: bytes) -> None:  # guarded-by: _lock
+        sub = self._subs[sid]
+        try:
+            sub.queue.put_nowait(data)
+        except queue.Full:
+            # slow consumer: evict rather than stall the collection path;
+            # drop the oldest queued frame to guarantee sentinel space
+            # (we are the only producer and we hold the lock)
+            sub.evicted = True
+            self._evicted += 1
+            del self._subs[sid]
+            try:
+                sub.queue.get_nowait()
+            except queue.Empty:
+                pass
+            sub.queue.put_nowait(None)
+            return
+        sub.sent += 1
+        self._frames_sent += 1
+        if sub.limit is not None and sub.sent >= sub.limit:
+            # bounded subscription (?frames=N) delivered in full: end the
+            # stream server-side so ledgers reconcile exactly
+            del self._subs[sid]
+            sub.closed = True
+            try:
+                sub.queue.put_nowait(None)
+            except queue.Full:       # pragma: no cover — maxsize >= 2
+                pass
+
+    # ----------------------------------------------------------- subscribe
+    def subscribe(self, *, frames: Optional[int] = None
+                  ) -> StreamSubscription:
+        """Register a subscriber; its first frame is a keyframe at the
+        current seq (a *resync point*, counted in ``resyncs``)."""
+        if frames is not None and frames <= 0:
+            raise ValueError("frames must be > 0")
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("stream hub is closed")
+            sub = StreamSubscription(self._queue_max, frames)
+            sid = self._next_id
+            self._next_id += 1
+            self._subscribed_total += 1
+            self._subs[sid] = sub
+            keyframe = self._codec.keyframe()
+            if keyframe is not None:
+                self._resyncs += 1
+                self._offer(sid, protocol.dumps(keyframe) + b"\n")
+            sub._sid = sid
+            return sub
+
+    def unsubscribe(self, sub: StreamSubscription) -> None:
+        """Detach a subscriber (idempotent; handler cleanup path)."""
+        with self._lock:
+            sid = getattr(sub, "_sid", None)
+            if sid is not None and self._subs.get(sid) is sub:
+                del self._subs[sid]
+            sub.closed = True
+
+    # --------------------------------------------------------------- close
+    def close(self) -> None:
+        """Stop publishing and wake every subscriber with a sentinel so
+        in-flight ``/stream`` handlers drain promptly (SIGTERM path)."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            subs = list(self._subs.values())
+            self._subs.clear()
+        for sub in subs:
+            sub.closed = True
+            try:
+                sub.queue.put_nowait(None)
+            except queue.Full:
+                try:
+                    sub.queue.get_nowait()
+                except queue.Empty:
+                    pass
+                try:
+                    sub.queue.put_nowait(None)
+                except queue.Full:   # pragma: no cover — single closer
+                    pass

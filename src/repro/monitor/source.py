@@ -253,17 +253,27 @@ class MultiClusterSource:
     snapshot and is tracked as stale; :meth:`staleness` and
     :meth:`last_error` expose per-source health.  Hostname collisions
     across children are disambiguated as ``cluster:host``.
+
+    ``max_staleness_s`` bounds how long a failing child may keep serving
+    its last good snapshot: beyond the cutoff it is **dropped from the
+    merge** (and surfaced via :meth:`stale_children`) instead of
+    presenting arbitrarily old nodes as current — the unbounded-staleness
+    fix.  ``None`` (the default) preserves the old serve-forever
+    behaviour.  A healthy child is never dropped, no matter how old its
+    data is allowed to get between polls.
     """
 
     def __init__(self, sources: Sequence[MetricSource], *,
                  name: Optional[str] = None,
-                 timeout_s: Optional[float] = 30.0):
+                 timeout_s: Optional[float] = 30.0,
+                 max_staleness_s: Optional[float] = None):
         if not sources:
             raise ValueError("MultiClusterSource needs >= 1 child source")
         # llcheck: ignore[LL001] fixed after construction; children manage their own state
         self.sources = list(sources)
         self.name = name or "+".join(s.name for s in self.sources)
         self.timeout_s = timeout_s
+        self.max_staleness_s = max_staleness_s
         hints = [s.interval_hint for s in self.sources
                  if s.interval_hint is not None]
         self.interval_hint = min(hints) if hints else None
@@ -278,6 +288,9 @@ class MultiClusterSource:
             thread_name_prefix=f"fanout-{self.name}")
         # guarded-by: _lock
         self._inflight: Dict[str, concurrent.futures.Future] = {}
+        # children dropped from the last merge for exceeding
+        # max_staleness_s (name -> seconds stale at drop time)
+        self._stale_children: Dict[str, float] = {}  # guarded-by: _lock
 
     # ------------------------------------------------------------- health
     def staleness(self) -> Dict[str, float]:
@@ -286,6 +299,13 @@ class MultiClusterSource:
         with self._lock:
             return {name: now - at
                     for name, at in self._last_good_at.items()}
+
+    def stale_children(self) -> Dict[str, float]:
+        """Children excluded from the last merge because their last good
+        snapshot aged past ``max_staleness_s`` (name -> seconds stale);
+        empty when every child contributed (or no cutoff is set)."""
+        with self._lock:
+            return dict(self._stale_children)
 
     def last_error(self, name: str) -> Optional[BaseException]:
         with self._lock:
@@ -333,6 +353,25 @@ class MultiClusterSource:
                     self._errors[src.name] = TimeoutError(
                         f"collection exceeded {self.timeout_s}s")
                     snaps.append(self._last_good.get(src.name))
+        # bounded staleness: a *failing* child whose fallback snapshot
+        # has aged past the cutoff is dropped from the merge instead of
+        # masquerading as current data
+        if self.max_staleness_s is not None:
+            now = time.monotonic()
+            stale: Dict[str, float] = {}
+            with self._lock:
+                for i, src in enumerate(self.sources):
+                    if snaps[i] is None or src.name not in self._errors:
+                        continue
+                    at = self._last_good_at.get(src.name)
+                    age = (now - at) if at is not None else float("inf")
+                    if age > self.max_staleness_s:
+                        snaps[i] = None
+                        stale[src.name] = age
+                self._stale_children = stale
+        else:
+            with self._lock:
+                self._stale_children = {}
         good = [(src, snap) for src, snap in zip(self.sources, snaps)
                 if snap is not None]
         if not good:
@@ -449,15 +488,22 @@ def _make_archive_source(*, root: str, cluster: Optional[str] = None,
 
 
 def _make_remote_source(*, url: str, cluster: Optional[str] = None,
-                        timeout_s: float = 10.0):
+                        timeout_s: float = 10.0, stream: bool = False,
+                        stale_after_s: float = 10.0):
     """An LLload daemon on another host (``--source remote --url ...``).
+
+    ``stream=True`` (what ``--watch`` and daemon fan-in pass) subscribes
+    to the daemon's ``/stream`` push channel instead of polling
+    ``/snapshot`` per collection; old daemons without the endpoint fall
+    back to polling automatically.
 
     Lazy import: the daemon package depends on this module, not the
     other way around.
     """
     from repro.daemon.client import RemoteSource
 
-    return RemoteSource(url, name=cluster, timeout_s=timeout_s)
+    return RemoteSource(url, name=cluster, timeout_s=timeout_s,
+                        stream=stream, stale_after_s=stale_after_s)
 
 
 _DEFAULT_REGISTRY = SourceRegistry()

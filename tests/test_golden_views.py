@@ -179,6 +179,39 @@ def test_history_table_needs_daemon_locally(capsys):
     assert "history" in capsys.readouterr().err
 
 
+def test_streaming_watch_byte_identical_to_polling_one_shot(capsys):
+    """--watch against a daemon subscribes to /stream; with the daemon
+    frozen (huge TTL), every streamed frame must render byte-identically
+    to the polling one-shot — and the one-shot itself must stay on the
+    polling path (no subscription for a single read)."""
+    daemon = LLloadDaemon(build_source("sim"), ttl_s=3600.0)
+    server, thread = serve_background(daemon)
+    host, port = server.server_address[:2]
+    args = ["--source", "remote", f"--url=http://{host}:{port}",
+            "-q", "-t", "3", "--format", "json"]
+    try:
+        assert cli.main(args) == 0
+        one_shot = capsys.readouterr().out
+        assert daemon.hub.stats()["subscribed_total"] == 0.0  # stayed polling
+
+        assert cli.main(["--watch", "--interval", "0.01",
+                         "--frames", "3"] + args) == 0
+        out = capsys.readouterr().out
+        # frame headers carry timing-dependent reads/collections counts;
+        # everything else must match the polling render byte-for-byte
+        body = "".join(ln + "\n" for ln in out.splitlines()
+                       if not ln.startswith("=== LLload watch"))
+        assert body == one_shot * 3
+        stats = daemon.hub.stats()
+        assert stats["subscribed_total"] >= 1.0               # watch streamed
+        assert stats["frames_sent"] >= 1.0
+    finally:
+        server.shutdown()
+        server.server_close()
+        daemon.close()
+        thread.join(timeout=5)
+
+
 def test_history_table_via_remote(capsys, daemon_url):
     assert cli.main(["--source", "remote", "--url", daemon_url,
                      "--table", "history", "--format", "json"]) == 0

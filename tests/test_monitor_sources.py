@@ -235,6 +235,76 @@ def test_multi_cluster_hung_child_serves_last_good():
     assert isinstance(multi.last_error("slow"), TimeoutError)
 
 
+def test_multi_cluster_max_staleness_cuts_only_failing_children():
+    """Regression (unbounded staleness): with max_staleness_s set, a
+    failing child serves its last good snapshot only within the window,
+    then is cut from the merge and reported via stale_children(); a
+    healthy child is never cut, and recovery restores the full fleet."""
+    import time as _time
+
+    a = _sim("alpha")
+
+    class Flaky:
+        name = "flaky"
+        interval_hint = None
+
+        def __init__(self):
+            self.fail = False
+            self._sim = _sim("flaky")
+
+        def snapshot(self):
+            if self.fail:
+                raise RuntimeError("collection failed")
+            return self._sim.snapshot()
+
+    flaky = Flaky()
+    multi = MultiClusterSource([SimSource(a), flaky], max_staleness_s=0.6)
+    n_both = len(multi.snapshot().nodes)
+    assert multi.stale_children() == {}
+
+    flaky.fail = True
+    s = multi.snapshot()                 # inside the window: last-good serves
+    assert len(s.nodes) == n_both
+    assert multi.stale_children() == {}
+
+    _time.sleep(0.7)
+    s = multi.snapshot()                 # beyond it: the stale child is cut
+    assert len(s.nodes) == len(a.snapshot().nodes)
+    stale = multi.stale_children()
+    assert set(stale) == {"flaky"} and stale["flaky"] > 0.6
+
+    flaky.fail = False                   # recovery rejoins the merge
+    s = multi.snapshot()
+    assert len(s.nodes) == n_both
+    assert multi.stale_children() == {}
+
+
+def test_multi_cluster_all_children_stale_raises():
+    import time as _time
+
+    class Mortal:
+        name = "mortal"
+        interval_hint = None
+
+        def __init__(self):
+            self.fail = False
+            self._sim = _sim("mortal")
+
+        def snapshot(self):
+            if self.fail:
+                raise RuntimeError("down")
+            return self._sim.snapshot()
+
+    mortal = Mortal()
+    multi = MultiClusterSource([mortal], max_staleness_s=0.05)
+    multi.snapshot()
+    mortal.fail = True
+    _time.sleep(0.1)
+    with pytest.raises(RuntimeError):
+        multi.snapshot()                 # stale fallback is not "working"
+    assert set(multi.stale_children()) == {"mortal"}
+
+
 def test_multi_cluster_all_failed_raises():
     class Dead:
         name = "dead"

@@ -1,0 +1,354 @@
+"""DeltaCodec / StreamDecoder contract (DESIGN.md §14): applying a delta
+reproduces the producer's snapshot **byte-identically** under
+``dumps(encode_snapshot(...))``, dropped frames surface as
+:class:`StreamGapError` (never a silently corrupted view), and a
+keyframe repairs the gap.  Property-tested with hypothesis where
+installed, with an always-running seeded-random fuzz twin; plus the
+StreamHub fan-out ledger (keyframes, eviction, frame limits, close)."""
+import dataclasses
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import ClusterSnapshot, JobRecord, NodeSnapshot
+from repro.daemon import protocol
+from repro.daemon.stream import StreamHub
+
+
+def _wire(snap: ClusterSnapshot) -> bytes:
+    return protocol.dumps(protocol.encode_snapshot(snap))
+
+
+# ----------------------------------------------------- snapshot generators
+
+def _node(rng: random.Random, host: str) -> NodeSnapshot:
+    gpus = rng.choice([0, 0, 2, 4])
+    return NodeSnapshot(
+        hostname=host,
+        cores_total=rng.choice([48, 64]),
+        cores_used=rng.randrange(0, 65),
+        load=round(rng.uniform(0.0, 64.0), 3),
+        mem_total_gb=192.0,
+        mem_used_gb=round(rng.uniform(0.0, 192.0), 3),
+        gpus_total=gpus,
+        gpus_used=rng.randrange(0, gpus + 1),
+        gpu_load=round(rng.uniform(0.0, gpus), 3),
+        gpu_mem_total_gb=float(gpus * 40),
+        gpu_mem_used_gb=round(rng.uniform(0.0, gpus * 40), 3))
+
+
+def _job(rng: random.Random, job_id: int, hosts: list) -> JobRecord:
+    return JobRecord(
+        job_id=job_id,
+        username=f"u{rng.randrange(6)}",
+        name=f"job-{job_id}",
+        nodes=rng.sample(hosts, min(len(hosts), 1 + rng.randrange(2))),
+        cores_per_node=rng.choice([1, 16, 48]),
+        state=rng.choice(["R", "R", "PD"]),
+        gpus_per_node=rng.choice([0, 0, 2]),
+        start_time=round(rng.uniform(0.0, 1e5), 3),
+        cpu_load=round(rng.uniform(0.0, 48.0), 3),
+        gpu_duty=round(rng.uniform(0.0, 1.0), 3))
+
+
+def _rand_snapshot(rng: random.Random, t: float = 0.0) -> ClusterSnapshot:
+    hosts = [f"n{i}" for i in range(1 + rng.randrange(7))]
+    nodes = {h: _node(rng, h) for h in hosts}
+    jobs = [_job(rng, 1000 + i, hosts) for i in range(rng.randrange(5))]
+    emails = {f"u{i}": f"u{i}@example.org" for i in range(rng.randrange(3))}
+    return ClusterSnapshot("txgreen", t, nodes, jobs, emails)
+
+
+def _mutate(rng: random.Random, snap: ClusterSnapshot) -> ClusterSnapshot:
+    """One random structural or value mutation (never mutates ``snap``).
+
+    Covers every delta field: node upsert/add/remove/reorder, job
+    upsert/add/remove/reorder, email churn — and the timestamp always
+    moves, so a draw that hits a no-op branch still yields the
+    smallest-possible (timestamp-only) delta."""
+    nodes = dict(snap.nodes)
+    jobs = list(snap.jobs)
+    emails = dict(snap.user_emails)
+    op = rng.randrange(9)
+    if op == 0 and nodes:                          # touch a node in place
+        h = rng.choice(list(nodes))
+        nodes[h] = _node(rng, h)
+    elif op == 1:                                  # a node joins the fleet
+        h = f"x{rng.randrange(10_000)}"
+        nodes[h] = _node(rng, h)
+    elif op == 2 and len(nodes) > 1:               # a node leaves
+        del nodes[rng.choice(list(nodes))]
+    elif op == 3 and len(nodes) > 1:               # fleet order changes
+        order = list(nodes)
+        rng.shuffle(order)
+        nodes = {h: nodes[h] for h in order}
+    elif op == 4:                                  # a job starts
+        jid = max((j.job_id for j in jobs), default=1000) + 1
+        jobs.append(_job(rng, jid, list(nodes)))
+    elif op == 5 and jobs:                         # a job ends
+        jobs.pop(rng.randrange(len(jobs)))
+    elif op == 6 and jobs:                         # a job's samples move
+        i = rng.randrange(len(jobs))
+        jobs[i] = dataclasses.replace(
+            jobs[i], state=rng.choice(["R", "PD", "CG"]),
+            cpu_load=round(rng.uniform(0.0, 48.0), 3))
+    elif op == 7 and len(jobs) > 1:                # queue order changes
+        rng.shuffle(jobs)
+    elif op == 8:                                  # email table churns
+        if emails and rng.random() < 0.5:
+            del emails[rng.choice(list(emails))]
+        else:
+            u = f"u{rng.randrange(100)}"
+            emails[u] = f"{u}@example.org"
+    return ClusterSnapshot(snap.cluster,
+                           round(snap.timestamp + rng.uniform(0.1, 60.0), 3),
+                           nodes, jobs, emails)
+
+
+# ------------------------------------------------- round-trip (fuzz twin)
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fuzz_stream_roundtrip_byte_identical(seed):
+    """40 random mutations through encode -> real bytes -> decode: every
+    decoded snapshot must be byte-identical to the producer's."""
+    rng = random.Random(seed)
+    codec = protocol.DeltaCodec(keyframe_every=5)
+    dec = protocol.StreamDecoder()
+    cur = _rand_snapshot(rng)
+    kinds = []
+    for _ in range(40):
+        frame = protocol.loads(protocol.dumps(codec.encode(cur)))
+        kinds.append(frame["frame"]["type"])
+        assert _wire(dec.feed(frame)) == _wire(cur)
+        cur = _mutate(rng, cur)
+    assert kinds[0] == "full" and "delta" in kinds
+
+
+@given(st.integers(min_value=0, max_value=2**32 - 1),
+       st.lists(st.integers(min_value=0, max_value=2**32 - 1),
+                min_size=1, max_size=25))
+@settings(max_examples=50)
+def test_property_stream_roundtrip_byte_identical(seed, steps):
+    """Hypothesis twin of the fuzz test: arbitrary mutation chains keep
+    the diff -> apply round trip exact at every step."""
+    rng = random.Random(seed)
+    codec = protocol.DeltaCodec(keyframe_every=4)
+    dec = protocol.StreamDecoder()
+    cur = _rand_snapshot(rng)
+    assert _wire(dec.feed(codec.encode(cur))) == _wire(cur)
+    for s in steps:
+        cur = _mutate(random.Random(s), cur)
+        frame = protocol.loads(protocol.dumps(codec.encode(cur)))
+        assert _wire(dec.feed(frame)) == _wire(cur)
+
+
+def _advance(rng, codec, cur):
+    cur = _mutate(rng, cur)
+    return cur, codec.encode(cur)
+
+
+def test_dropped_delta_is_a_gap_and_keyframe_repairs_it():
+    rng = random.Random(1)
+    codec = protocol.DeltaCodec(keyframe_every=10_000)
+    dec = protocol.StreamDecoder()
+    cur = _rand_snapshot(rng)
+    dec.feed(codec.encode(cur))
+    cur, frame = _advance(rng, codec, cur)
+    dec.feed(frame)
+    cur, dropped = _advance(rng, codec, cur)       # lost in transit
+    assert dropped["frame"]["type"] == "delta"
+    cur, nxt = _advance(rng, codec, cur)
+    with pytest.raises(protocol.StreamGapError):
+        dec.feed(nxt)                              # gap detected, not applied
+    dec.reset()
+    with pytest.raises(protocol.StreamGapError):
+        dec.feed(nxt)                              # delta before any keyframe
+    repaired = dec.feed(codec.keyframe())          # the resync protocol
+    assert _wire(repaired) == _wire(cur)
+    cur, frame = _advance(rng, codec, cur)         # deltas continue after it
+    assert _wire(dec.feed(frame)) == _wire(cur)
+
+
+@given(st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=25)
+def test_property_gap_detection_and_keyframe_repair(seed):
+    rng = random.Random(seed)
+    codec = protocol.DeltaCodec(keyframe_every=10_000)
+    dec = protocol.StreamDecoder()
+    cur = _rand_snapshot(rng)
+    dec.feed(codec.encode(cur))
+    cur, _dropped = _advance(rng, codec, cur)
+    cur, nxt = _advance(rng, codec, cur)
+    with pytest.raises(protocol.StreamGapError):
+        dec.feed(nxt)
+    assert _wire(dec.feed(codec.keyframe())) == _wire(cur)
+
+
+# -------------------------------------------------------- codec behaviour
+
+def test_keyframe_cadence():
+    rng = random.Random(2)
+    codec = protocol.DeltaCodec(keyframe_every=4)
+    cur = _rand_snapshot(rng)
+    kinds = []
+    for _ in range(9):
+        kinds.append(codec.encode(cur)["frame"]["type"])
+        cur = _mutate(rng, cur)
+    assert kinds == ["full", "delta", "delta", "delta",
+                     "full", "delta", "delta", "delta", "full"]
+
+
+def test_idle_delta_omits_empty_fields_and_stays_tiny():
+    """Nothing changed but the clock: the delta carries only
+    type/seq/cluster/timestamp — omitting empty upsert/remove sets is
+    where the low-churn byte reduction comes from."""
+    rng = random.Random(3)
+    codec = protocol.DeltaCodec()
+    nodes = {f"n{i}": _node(rng, f"n{i}") for i in range(50)}
+    cur = ClusterSnapshot("txgreen", 0.0, nodes,
+                          [_job(rng, 1000 + i, list(nodes))
+                           for i in range(10)], {"u0": "u0@example.org"})
+    full = codec.encode(cur)
+    idle = dataclasses.replace(cur, timestamp=cur.timestamp + 15.0)
+    frame = codec.encode(idle)
+    payload = frame["frame"]
+    assert payload["type"] == "delta"
+    assert set(payload) == {"type", "seq", "cluster", "timestamp"}
+    assert len(protocol.dumps(frame)) < len(protocol.dumps(full)) / 10
+
+
+def test_duplicate_job_ids_force_a_keyframe():
+    """Merged multi-cluster snapshots may repeat a job id; a keyed
+    upsert would corrupt them, so the pair is not delta-representable
+    and the codec falls back to a full frame."""
+    rng = random.Random(4)
+    cur = _rand_snapshot(rng)
+    job = _job(rng, 7777, list(cur.nodes))
+    dup = ClusterSnapshot(cur.cluster, cur.timestamp + 1.0,
+                          dict(cur.nodes), [job, dataclasses.replace(job)],
+                          dict(cur.user_emails))
+    assert protocol.diff_snapshot(cur, dup) is None
+    codec = protocol.DeltaCodec()
+    assert codec.encode(cur)["frame"]["type"] == "full"
+    assert codec.encode(dup)["frame"]["type"] == "full"   # fallback
+    with pytest.raises(protocol.WireError):
+        protocol.apply_delta(dup, {"cluster": "c", "timestamp": 2.0})
+
+
+def test_apply_delta_rejects_unknown_references():
+    rng = random.Random(5)
+    cur = _rand_snapshot(rng)
+    with pytest.raises(protocol.WireError):
+        protocol.apply_delta(cur, {"cluster": "c", "timestamp": 1.0,
+                                   "node_order": ["no-such-host"]})
+    with pytest.raises(protocol.WireError):
+        protocol.apply_delta(cur, {"cluster": "c", "timestamp": 1.0,
+                                   "job_order": [999_999]})
+    with pytest.raises(protocol.WireError):
+        protocol.apply_delta(cur, {"timestamp": 1.0})      # malformed
+
+
+def test_decoder_rejects_garbage_frames():
+    dec = protocol.StreamDecoder()
+    with pytest.raises(protocol.WireError):
+        dec.feed({"v": 1, "kind": "frame",
+                  "frame": {"type": "full", "seq": "one"}})
+    with pytest.raises(protocol.WireError):
+        dec.feed({"v": 1, "kind": "frame",
+                  "frame": {"type": "mystery", "seq": 1}})
+    with pytest.raises(protocol.WireError):
+        dec.feed({"v": 1, "kind": "frame", "frame": {"type": "full",
+                                                     "seq": 1}})
+
+
+# ------------------------------------------------------------- StreamHub
+
+def _snap(i: int) -> ClusterSnapshot:
+    base = _rand_snapshot(random.Random(0))
+    return dataclasses.replace(base, timestamp=float(i))
+
+
+def test_hub_fans_out_one_encode_and_keyframes_joiners():
+    hub = StreamHub(keyframe_every=4)
+    early = hub.subscribe()               # before any publish: no keyframe
+    assert early.get(timeout=0.01) == b""
+    hub.publish("sim", _snap(1))
+    first = protocol.loads(early.get(timeout=1.0))["frame"]
+    assert first["type"] == "full" and first["seq"] == 1
+    late = hub.subscribe()                # joins mid-stream
+    kf = protocol.loads(late.get(timeout=1.0))["frame"]
+    assert kf["type"] == "full" and kf["seq"] == 1
+    hub.publish("sim", _snap(2))
+    a = protocol.loads(early.get(timeout=1.0))["frame"]
+    b = protocol.loads(late.get(timeout=1.0))["frame"]
+    assert a == b                         # one encode, byte-equal fan-out
+    assert a["type"] == "delta" and a["seq"] == 2
+    stats = hub.stats()
+    assert stats["resyncs"] == 1.0        # only the late join resynced
+    assert stats["frames_sent"] == 4.0
+    assert stats["subscribers"] == 2.0
+    hub.close()
+
+
+def test_hub_prime_seeds_exactly_once():
+    hub = StreamHub()
+    assert hub.empty()
+    hub.prime(_snap(1))
+    assert not hub.empty()
+    sub = hub.subscribe()
+    kf = protocol.loads(sub.get(timeout=1.0))["frame"]
+    assert kf["type"] == "full" and kf["seq"] == 1
+    hub.prime(_snap(2))                   # no-op: already primed
+    assert sub.get(timeout=0.05) == b""
+    hub.close()
+
+
+def test_hub_evicts_slow_consumer_instead_of_blocking():
+    hub = StreamHub(queue_max=2)
+    hub.publish("sim", _snap(1))
+    sub = hub.subscribe()                 # queue: [keyframe]
+    hub.publish("sim", _snap(2))          # queue: [keyframe, delta]
+    hub.publish("sim", _snap(3))          # full -> evict, never block
+    assert sub.get(timeout=0.5) != b""
+    assert sub.get(timeout=0.5) is None   # stream ended by eviction
+    assert sub.evicted
+    stats = hub.stats()
+    assert stats["evicted"] == 1.0
+    assert stats["subscribers"] == 0.0
+    assert stats["frames_sent"] == 2.0    # enqueued before the overflow
+    hub.close()
+
+
+def test_hub_frames_limit_ends_subscription_exactly():
+    hub = StreamHub()
+    hub.publish("sim", _snap(1))
+    sub = hub.subscribe(frames=2)         # frame 1: the keyframe
+    hub.publish("sim", _snap(2))          # frame 2: limit reached
+    hub.publish("sim", _snap(3))          # never delivered
+    got = []
+    while True:
+        item = sub.get(timeout=0.5)
+        if item is None:
+            break
+        assert item != b""
+        got.append(protocol.loads(item)["frame"])
+    assert [f["type"] for f in got] == ["full", "delta"]
+    assert hub.stats()["subscribers"] == 0.0
+    with pytest.raises(ValueError):
+        hub.subscribe(frames=0)
+    hub.close()
+
+
+def test_hub_close_wakes_subscribers_and_rejects_new_ones():
+    hub = StreamHub()
+    hub.publish("sim", _snap(1))
+    sub = hub.subscribe()
+    assert sub.get(timeout=1.0) != b""
+    hub.close()
+    assert sub.get(timeout=1.0) is None   # sentinel, not a poll timeout
+    with pytest.raises(RuntimeError):
+        hub.subscribe()
+    hub.publish("sim", _snap(2))          # no-op after close
+    hub.close()                           # idempotent
+    hub.unsubscribe(sub)                  # idempotent too

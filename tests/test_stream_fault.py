@@ -1,0 +1,162 @@
+"""Fault injection for the streaming path (DESIGN.md §14): a daemon
+killed and restarted mid-stream, and a child daemon severed while a
+fan-in is subscribed to it.  The consumer must (a) keep serving the last
+good frame only while it is fresh, (b) report staleness instead of a
+silently frozen view, (c) resync after the restart to state
+byte-identical to a fresh poll, and (d) never crash."""
+import json
+import time
+import urllib.request
+
+import pytest
+
+from repro.daemon import (LLloadDaemon, RemoteError, RemoteSource, protocol,
+                          serve_background)
+from repro.monitor import MultiClusterSource, build_source
+
+
+def _wire(snap) -> bytes:
+    return protocol.dumps(protocol.encode_snapshot(snap))
+
+
+def _serve(source, *, port=0, ttl_s=3600.0):
+    daemon = LLloadDaemon(source, ttl_s=ttl_s)
+    server, thread = serve_background(daemon, port=port)
+    return daemon, server, thread
+
+
+def _stop(daemon, server, thread):
+    server.shutdown()
+    server.server_close()
+    daemon.close()
+    thread.join(timeout=5)
+    assert not thread.is_alive()
+
+
+def _wait_until(fn, timeout=10.0, interval=0.02):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if fn():
+            return True
+        time.sleep(interval)
+    return False
+
+
+def _stale_raises(src) -> bool:
+    try:
+        src.snapshot()
+        return False
+    except RemoteError:
+        return True
+
+
+def test_daemon_kill_and_restart_mid_stream(tmp_path):
+    daemon, server, thread = _serve(build_source("sim", advance_s=60.0))
+    host, port = server.server_address[:2]
+    url = f"http://{host}:{port}"
+    src = RemoteSource(url, name="a", stream=True, timeout_s=5.0,
+                       stale_after_s=0.4)
+    try:
+        # streaming state is byte-identical to the daemon's own snapshot
+        first = src.snapshot()
+        assert _wire(first) == _wire(daemon.bus.read(daemon.source.name))
+
+        _stop(daemon, server, thread)            # kill mid-stream
+
+        # the source must not freeze: once the last frame ages past
+        # stale_after_s with the connection down, snapshot() raises
+        # instead of serving stale data as current
+        assert _wait_until(lambda: _stale_raises(src))
+        with pytest.raises(RemoteError, match="stale_after_s"):
+            src.snapshot()
+
+        # restart on the same port with fresh (different) state: the
+        # reader resubscribes, resyncs from the keyframe, and converges
+        # byte-identically to what fresh polling now returns
+        daemon2, server2, thread2 = _serve(
+            build_source("sim", advance_s=60.0), port=port)
+        try:
+            def converged():
+                try:
+                    streamed = src.snapshot()
+                except RemoteError:
+                    return False
+                polled = RemoteSource(url, stream=False).snapshot()
+                return _wire(streamed) == _wire(polled)
+
+            assert _wait_until(converged)
+            assert src.resyncs >= 1
+        finally:
+            _stop(daemon2, server2, thread2)
+    finally:
+        src.close()
+
+
+def test_child_severed_mid_fanin_is_cut_and_reported():
+    # distinct cluster names: identically-named sims would merge into
+    # the same qualified hostnames and mask the child being cut
+    da, sa, ta = _serve(build_source("sim", clusters=["alpha"],
+                                     advance_s=60.0))
+    db, sb, tb = _serve(build_source("sim", clusters=["beta"],
+                                     advance_s=60.0))
+    url_a = "http://%s:%d" % sa.server_address[:2]
+    url_b = "http://%s:%d" % sb.server_address[:2]
+    port_b = sb.server_address[1]
+    child_a = RemoteSource(url_a, name="a", stream=True, timeout_s=5.0,
+                           stale_after_s=0.2)
+    child_b = RemoteSource(url_b, name="b", stream=True, timeout_s=5.0,
+                           stale_after_s=0.2)
+    multi = MultiClusterSource([child_a, child_b], max_staleness_s=0.5)
+    # a parent daemon over the fan-in: /stats must surface the severed
+    # child (ttl short so every read re-collects the children)
+    dp, sp, tp = _serve(multi, ttl_s=0.05)
+    url_p = "http://%s:%d" % sp.server_address[:2]
+
+    def parent_stats():
+        with urllib.request.urlopen(url_p + "/stats", timeout=30) as rsp:
+            return json.loads(rsp.read())
+
+    try:
+        both = multi.snapshot()
+        n_both = len(both.nodes)
+        assert multi.stale_children() == {}
+
+        _stop(db, sb, tb)                        # sever child b
+
+        # b's last-good serves briefly, then ages out of the merge; the
+        # fleet view never crashes and never freezes — it narrows to a
+        def b_cut():
+            urllib.request.urlopen(url_p + "/snapshot", timeout=30).close()
+            snap = multi.snapshot()
+            return (set(multi.stale_children()) == {"b"}
+                    and len(snap.nodes) < n_both)
+
+        assert _wait_until(b_cut)
+        snap = multi.snapshot()
+        assert set(snap.nodes) == set(child_a.snapshot().nodes)
+        assert multi.stale_children()["b"] > 0.5
+        assert isinstance(multi.last_error("b"), RemoteError)
+
+        fanin = parent_stats()["fanin"]
+        assert fanin["stale_children"] == 1
+        assert "b" in fanin["stale"]
+
+        # restart b on its old port: the child resubscribes and the
+        # merge converges back to the full fleet with no intervention
+        db2, sb2, tb2 = _serve(build_source("sim", clusters=["beta"],
+                                            advance_s=60.0), port=port_b)
+        try:
+            def b_back():
+                snap = multi.snapshot()
+                return (multi.stale_children() == {}
+                        and len(snap.nodes) == n_both)
+
+            assert _wait_until(b_back)
+            assert parent_stats()["fanin"]["stale_children"] == 0
+        finally:
+            _stop(db2, sb2, tb2)
+    finally:
+        _stop(dp, sp, tp)
+        for child in (child_a, child_b):
+            child.close()
+        _stop(da, sa, ta)

@@ -1,0 +1,120 @@
+"""Race hammer for the streaming fan-out: 32 concurrent /stream
+subscribers decode bounded subscriptions from a churning short-TTL
+daemon while a pump forces collections.  Every line must parse (no torn
+frames), every delta must apply contiguously (no gaps inside a healthy
+subscription), no handler may 500 — and afterwards the hub's /stats
+ledger must reconcile **exactly** against the client-side counts, the
+same lost-update detector as test_daemon_race.py."""
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.daemon import LLloadDaemon, StreamDecoder, serve_background
+from repro.monitor import build_source
+
+N_CLIENTS = 32
+FRAMES_EACH = 6
+
+
+@pytest.fixture()
+def churning_daemon():
+    # advance_s makes every forced collection a different snapshot, so
+    # the stream carries real deltas, not just timestamp ticks
+    daemon = LLloadDaemon(build_source("sim", advance_s=60.0), ttl_s=0.05)
+    server, thread = serve_background(daemon)
+    host, port = server.server_address[:2]
+    yield f"http://{host}:{port}", daemon
+    server.shutdown()
+    server.server_close()
+    daemon.close()
+    thread.join(timeout=5)
+    assert not thread.is_alive()
+
+
+def test_concurrent_subscribers_exact_ledger(churning_daemon):
+    url, daemon = churning_daemon
+    daemon.bus.poll(daemon.source.name)      # hub is primed before anyone joins
+
+    stop = threading.Event()
+
+    def pump():
+        while not stop.is_set():
+            daemon.bus.poll(daemon.source.name)
+            time.sleep(0.002)
+
+    pump_thread = threading.Thread(target=pump, daemon=True)
+    pump_thread.start()
+
+    ledger_lock = threading.Lock()
+    received = []
+    errors = []
+    barrier = threading.Barrier(N_CLIENTS)
+
+    def worker(i):
+        barrier.wait()
+        dec = StreamDecoder()
+        try:
+            rsp = urllib.request.urlopen(
+                f"{url}/stream?frames={FRAMES_EACH}", timeout=30)
+            with rsp:
+                assert rsp.status == 200
+                assert "ndjson" in rsp.headers.get("Content-Type", "")
+                frames = 0
+                for line in rsp:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    obj = json.loads(line)   # a torn frame dies here
+                    snap = dec.feed(obj)     # a gap/corruption dies here
+                    assert snap.nodes
+                    frames += 1
+            with ledger_lock:
+                received.append(frames)
+        except Exception as exc:  # noqa: BLE001 — surfaced below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(N_CLIENTS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    stop.set()
+    pump_thread.join(timeout=5)
+    assert errors == []
+    assert not any(t.is_alive() for t in threads)
+
+    # every bounded subscription delivered exactly its ?frames budget
+    assert received == [FRAMES_EACH] * N_CLIENTS
+
+    with urllib.request.urlopen(url + "/stats", timeout=30) as rsp:
+        stats = json.loads(rsp.read())
+
+    # the hub ledger reconciles exactly: ?frames is enforced at enqueue
+    # time, so with no evictions frames_sent == frames received
+    stream = stats["stream"]
+    assert stream["evicted"] == 0.0
+    assert stream["subscribed_total"] == float(N_CLIENTS)
+    assert stream["resyncs"] == float(N_CLIENTS)   # one keyframe per join
+    assert stream["frames_sent"] == float(sum(received))
+    assert stream["subscribers"] == 0.0            # everyone drained out
+
+    # and the HTTP side agrees: 32 /stream requests, zero handler errors
+    http = stats["http"]
+    assert http['requests_total{endpoint="/stream"}'] == float(N_CLIENTS)
+    assert http["http_errors_total"] == 0.0
+
+
+def test_stream_rejects_bad_frames_param_with_400(churning_daemon):
+    url, daemon = churning_daemon
+    for bad in ("0", "-3", "abc"):
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(f"{url}/stream?frames={bad}", timeout=30)
+        assert ei.value.code == 400
+        err = json.loads(ei.value.read())
+        assert err["kind"] == "error"
+        assert "frames" in err["error"]["message"]
